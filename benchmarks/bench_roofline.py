@@ -1,0 +1,78 @@
+"""Roofline table: derive compute/memory/collective terms for every
+dry-run artifact (EXPERIMENTS.md section Roofline reads from this).
+
+Usage: PYTHONPATH=src python -m benchmarks.bench_roofline [--mesh 16x16]
+Writes experiments/roofline.csv + experiments/roofline.md and prints CSV.
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import json
+from pathlib import Path
+
+from repro.analysis.roofline import ARTIFACT_DIR, analyze_cell
+
+OUT_DIR = Path(__file__).resolve().parents[1] / "experiments"
+
+FIX_HINTS = {
+    "compute": ("raise arithmetic intensity: bigger per-chip tiles "
+                "(fewer microbatches) or drop remat recompute"),
+    "memory": ("cut HBM traffic: bf16 attention intermediates / fused "
+               "flash kernel keeps (Sq x C) tiles in VMEM"),
+    "collective": ("overlap or shrink collectives: hierarchical in-pod "
+                   "reduce-scatter first, int8 cross-pod merge"),
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--arch", default=None)
+    args = ap.parse_args(argv)
+
+    rows = []
+    for path in sorted(ARTIFACT_DIR.glob(f"*__{args.mesh}.json")):
+        arch, shape, mesh = path.stem.split("__")
+        if args.arch and arch != args.arch:
+            continue
+        rec = json.loads(path.read_text())
+        if "skipped" in rec:
+            continue
+        r = analyze_cell(arch, shape, mesh)
+        rows.append(r)
+
+    rows.sort(key=lambda r: (r.arch, r.shape))
+    print("arch,shape,mesh,t_compute_ms,t_memory_ms,t_collective_ms,"
+          "dominant,useful_ratio,flops_per_chip,bytes_per_chip,"
+          "collective_per_chip,model_flops")
+    OUT_DIR.mkdir(exist_ok=True)
+    with open(OUT_DIR / f"roofline_{args.mesh}.csv", "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["arch", "shape", "mesh", "t_compute_ms", "t_memory_ms",
+                    "t_collective_ms", "dominant", "useful_ratio",
+                    "flops_per_chip", "bytes_per_chip",
+                    "collective_per_chip", "model_flops", "fix_hint"])
+        for r in rows:
+            line = [r.arch, r.shape, r.mesh,
+                    round(r.t_compute * 1e3, 2), round(r.t_memory * 1e3, 2),
+                    round(r.t_collective * 1e3, 2), r.dominant,
+                    round(r.useful_ratio, 3), f"{r.flops_per_chip:.4e}",
+                    f"{r.bytes_per_chip:.4e}",
+                    f"{r.collective_per_chip:.4e}",
+                    f"{r.model_flops_total:.4e}", FIX_HINTS[r.dominant]]
+            w.writerow(line)
+            print(",".join(str(x) for x in line[:12]))
+
+    with open(OUT_DIR / f"roofline_{args.mesh}.md", "w") as f:
+        f.write("| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) "
+                "| dominant | MODEL/HLO flops |\n|---|---|---|---|---|---|---|\n")
+        for r in rows:
+            f.write(f"| {r.arch} | {r.shape} | {r.t_compute*1e3:.1f} | "
+                    f"{r.t_memory*1e3:.1f} | {r.t_collective*1e3:.1f} | "
+                    f"{r.dominant} | {r.useful_ratio:.2f} |\n")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Perf-iteration probe: lower one cell with config overrides and report
+roofline terms + memory — the measure step of the hypothesis->change->
+measure loop in EXPERIMENTS.md section Perf.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.perf_probe --arch grok-1-314b \
+      --shape train_4k --set microbatches=4 remat_policy=dots
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+
+from repro.analysis import hlo_parse  # noqa: E402
+from repro.analysis.flops import model_flops  # noqa: E402
+from repro.analysis.roofline import HBM_BW, ICI_BW, PEAK_FLOPS  # noqa: E402
+from repro.configs import SHAPES, get_config  # noqa: E402
+from repro.launch.dryrun import _mem_dict, lower_cell  # noqa: E402
+
+
+def parse_override(kv: str):
+    k, v = kv.split("=", 1)
+    for cast in (int, float):
+        try:
+            return k, cast(v)
+        except ValueError:
+            pass
+    if v in ("True", "False"):
+        return k, v == "True"
+    return k, v
+
+
+def probe(arch: str, shape_name: str, multi_pod: bool = False, **overrides):
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    record, lowered, compiled = lower_cell(
+        arch, shape_name, multi_pod=multi_pod, cfg_override=cfg)
+    totals = hlo_parse.analyze(compiled.as_text())
+    mem = record["memory"]
+    shape = SHAPES[shape_name]
+    mf = model_flops(cfg, shape)
+    chips = 512 if multi_pod else 256
+    out = {
+        "arch": arch, "shape": shape_name,
+        "overrides": overrides,
+        "t_compute_ms": totals.flops / PEAK_FLOPS * 1e3,
+        "t_memory_ms": totals.bytes / HBM_BW * 1e3,
+        "t_collective_ms": totals.collective_bytes / ICI_BW * 1e3,
+        "flops_per_chip": totals.flops,
+        "bytes_per_chip": totals.bytes,
+        "collective_per_chip": totals.collective_bytes,
+        "collective_by_op": totals.collective_by_op,
+        "useful_ratio": mf / max(1.0, totals.flops * chips),
+        "args_gb": mem.get("argument_size_in_bytes", 0) / 1e9,
+        "temp_gb": mem.get("temp_size_in_bytes", 0) / 1e9,
+        "compile_s": record["compile_s"],
+    }
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--set", nargs="*", default=[])
+    args = ap.parse_args()
+    overrides = dict(parse_override(kv) for kv in args.set)
+    out = probe(args.arch, args.shape, args.multi_pod, **overrides)
+    coll = out.pop("collective_by_op")
+    print(json.dumps(out, indent=2))
+    print("collectives:", {k: f"{v:.3e}" for k, v in coll.items()})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Benchmark harness: one entry per paper table/figure + the roofline
+table.  Prints ``name,value,derived`` CSV blocks.
+
+  crossover    - paper Fig 7 (single node vs grid-brick parallel)
+  granularity  - paper section 6 packet-size effect
+  straggler    - PROOF-style adaptive packets vs fixed
+  failover     - node death with/without replication (paper future work)
+  query_spmd   - SPMD grid-brick query step micro-benchmark (real compute)
+  roofline     - per-(arch x shape) terms from the dry-run artifacts
+                 (skipped unless artifacts exist; see launch/dryrun.py)
+"""
+from __future__ import annotations
+
+import time
+
+
+def _section(name):
+    print(f"\n## {name}")
+
+
+def main() -> None:
+    _section("crossover (paper Fig 7)")
+    from benchmarks import bench_crossover
+    bench_crossover.main()
+
+    _section("granularity (paper section 6)")
+    from benchmarks import bench_granularity
+    bench_granularity.main()
+
+    _section("straggler mitigation (PROOF rule)")
+    from benchmarks import bench_straggler
+    bench_straggler.main()
+
+    _section("failover (paper future work)")
+    from benchmarks import bench_failover
+    bench_failover.main()
+
+    _section("spmd query step (grid-brick job, wall time on this host)")
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.geps_events import reduced
+    from repro.core import events as ev
+    from repro.core.brick import create_store, gather_store
+    from repro.core.jse import spmd_query_step
+
+    schema = ev.EventSchema.from_config(reduced())
+    store = create_store(schema, n_events=4096, n_nodes=4,
+                         events_per_brick=256, replication=2, seed=5)
+    batch = {k: jnp.asarray(v) for k, v in gather_store(store).items()}
+    for use_pallas in (False, True):
+        step = jax.jit(spmd_query_step(
+            "e_total > 40 && count(pt > 15) >= 2", schema, calib_iters=4,
+            use_pallas=use_pallas))
+        out = step(batch)  # compile + run
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range(5):
+            out = step(batch)
+            jax.block_until_ready(out)
+        us = (time.perf_counter() - t0) / 5 * 1e6
+        label = "pallas_interpret" if use_pallas else "xla"
+        print(f"query_spmd_{label},{us:.0f}us_per_call,"
+              f"selected={int(out['n_selected'])}")
+
+    _section("roofline (from dry-run artifacts)")
+    try:
+        from benchmarks import bench_roofline
+        bench_roofline.main(["--mesh", "16x16"])
+    except Exception as e:  # noqa: BLE001
+        print(f"roofline,skipped,{e!r:.120}")
+
+    print("\nall benchmarks done")
+
+
+if __name__ == "__main__":
+    main()

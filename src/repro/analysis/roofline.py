@@ -1,0 +1,91 @@
+"""Roofline terms per (arch x shape x mesh) from the dry-run artifacts.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.  Terms (seconds per global step, per chip — the SPMD
+module IS the per-chip program):
+
+  compute    = HLO_FLOPs_per_chip / 197e12
+  memory     = HLO_bytes_per_chip / 819e9
+  collective = collective_bytes_per_chip / 50e9
+
+The dominant term is the bottleneck; MODEL_FLOPS/HLO_FLOPs measures how
+much compiled compute is useful (remat, padded heads, MoE capacity slack,
+attention quadratic all land here).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Optional
+
+from repro.analysis import hlo_parse
+from repro.analysis.flops import model_flops
+from repro.configs import SHAPES, get_config
+
+PEAK_FLOPS = 197e12     # bf16 / chip
+HBM_BW = 819e9          # bytes/s
+ICI_BW = 50e9           # bytes/s/link
+
+ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    flops_per_chip: float
+    bytes_per_chip: float
+    collective_per_chip: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    dominant: str
+    model_flops_total: float
+    useful_ratio: float  # MODEL_FLOPS / (HLO_FLOPs * chips)
+    collective_by_op: dict
+    cost_analysis_flops: float  # raw (loop-body-once) number, for reference
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def analyze_cell(arch: str, shape_name: str, mesh: str = "16x16",
+                 hlo_text: Optional[str] = None,
+                 record: Optional[dict] = None) -> Roofline:
+    stem = f"{arch}__{shape_name}__{mesh}"
+    if record is None:
+        record = json.loads((ARTIFACT_DIR / f"{stem}.json").read_text())
+    if hlo_text is None:
+        hlo_text = (ARTIFACT_DIR / f"{stem}.hlo.txt").read_text()
+
+    totals = hlo_parse.analyze(hlo_text)
+    chips = 512 if mesh == "2x16x16" else 256
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mf = model_flops(cfg, shape)
+
+    t_c = totals.flops / PEAK_FLOPS
+    t_m = totals.bytes / HBM_BW
+    t_x = totals.collective_bytes / ICI_BW
+    dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+              key=lambda kv: kv[1])[0]
+    return Roofline(
+        arch=arch, shape=shape_name, mesh=mesh,
+        flops_per_chip=totals.flops,
+        bytes_per_chip=totals.bytes,
+        collective_per_chip=totals.collective_bytes,
+        t_compute=t_c, t_memory=t_m, t_collective=t_x, dominant=dom,
+        model_flops_total=mf,
+        useful_ratio=mf / max(1.0, totals.flops * chips),
+        collective_by_op={k: v for k, v in sorted(
+            totals.collective_by_op.items())},
+        cost_analysis_flops=record.get("flops", -1.0),
+    )
+
+
+def format_row(r: Roofline) -> str:
+    return (f"| {r.arch} | {r.shape} | {r.mesh} | {r.t_compute*1e3:.1f} | "
+            f"{r.t_memory*1e3:.1f} | {r.t_collective*1e3:.1f} | "
+            f"{r.dominant} | {r.useful_ratio:.2f} |")

@@ -1,0 +1,10 @@
+from repro.configs.base import (  # noqa: F401
+    ModelConfig,
+    ShapeConfig,
+    SHAPES,
+    TRAIN_4K,
+    PREFILL_32K,
+    DECODE_32K,
+    LONG_500K,
+)
+from repro.configs.registry import get_config, list_archs, reduced_config  # noqa: F401

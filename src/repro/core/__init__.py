@@ -1,0 +1,14 @@
+"""GEPS Grid-Brick core: the paper's primary contribution.
+
+- events / query: the event-processing workload (ROOT-tree role + the
+  user-facing filter-expression language)
+- brick / catalog / replication: grid-brick storage, metadata catalogue
+  (PgSQL role), GRIS/LDAP node info, replica placement
+- jse / merge / packets: job submission engine, hierarchical result merge,
+  PROOF-style adaptive packets (straggler mitigation)
+- elastic: node join/leave, re-mesh, migration plans
+- brick_attention: the grid-brick principle applied to decode KV caches
+"""
+from repro.core.brick import BrickSpec, BrickStore, create_store  # noqa: F401
+from repro.core.catalog import MetadataCatalog  # noqa: F401
+from repro.core.jse import JobSubmissionEngine, TimeModel, spmd_query_step  # noqa: F401

@@ -1,0 +1,138 @@
+"""Grid-brick KV-cache attention.
+
+The paper's core move — split the data into node-resident bricks, run the
+job where the data lives, merge the small per-node results at the JSE — is
+applied here to the decode-time KV cache:
+
+- the cache sequence dim W is sharded over the ``model`` axis (each chip
+  owns a *brick* of the context, which never moves),
+- every chip computes online-softmax statistics (m, l, acc) over its brick
+  only — the "job" ships to the brick, not the brick to the job,
+- the per-brick partials are merged with an exact log-sum-exp combine
+  (pmax + two psums of tiny tensors) — the "result merge at the JSE".
+
+Per-chip cache memory for qwen3-32b decode_32k drops 16x (68 GB -> 4.3 GB),
+which is the difference between the cell fitting v5e HBM or not.  Cross-pod
+(``pod`` axis) traffic stays zero, faithful to GEPS's WAN-avoidance.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.attention import NEG_INF, repeat_kv
+from repro.models.layers import softcap as apply_softcap
+
+
+def brick_active(cfg, shd, cache_w: int) -> bool:
+    """Use the brick-sharded cache when the context is large, unwindowed,
+    and the mesh has a model axis the cache length divides."""
+    if not cfg.decode_cache_seq_shard or shd.tensor_size <= 1:
+        return False
+    if cfg.sliding_window or cfg.attention_window:
+        return False  # window-bounded caches are already small
+    return cache_w > 4096 and cache_w % shd.tensor_size == 0
+
+
+def decode_attention(
+    cfg,
+    shd,
+    q: jax.Array,       # (B, 1, Hp, hd)  heads sharded over model
+    k_cache: jax.Array,  # (B, W, K, hd)  W sharded over model (brick axis)
+    v_cache: jax.Array,
+    kpos: jax.Array,    # (W,) absolute positions, -1 = empty (replicated)
+    new_k: jax.Array,   # (B, 1, K, hd)  replicated over model
+    new_v: jax.Array,
+    slot: jax.Array,    # () int32: ring-buffer slot being written
+    t: jax.Array,       # () int32: absolute position of the new token
+):
+    """Returns (out (B,1,Hp,hd) replicated-over-model, k_cache', v_cache')."""
+    mesh = shd.mesh
+    batch = shd.batch_axes if q.shape[0] % shd.batch_size_total == 0 else ()
+    scale = (cfg.attn_scale_override
+             if cfg.attn_scale_override is not None else cfg.head_dim ** -0.5)
+
+    fn = functools.partial(
+        _brick_attn_local,
+        axis="model",
+        scale=scale,
+        logit_cap=cfg.attn_logit_softcap,
+    )
+    return jax.shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=(
+            P(batch, None, "model", None),   # q (head-sharded)
+            P(batch, "model", None, None),   # k brick
+            P(batch, "model", None, None),   # v brick
+            P(None),                          # kpos (replicated)
+            P(batch, None, None, None),      # new_k
+            P(batch, None, None, None),      # new_v
+            P(),                              # slot
+            P(),                              # t
+        ),
+        out_specs=(
+            P(batch, None, None, None),      # out: replicated over model
+            P(batch, "model", None, None),
+            P(batch, "model", None, None),
+        ),
+        check_vma=False,
+    )(q, k_cache, v_cache, kpos, new_k, new_v, slot, t)
+
+
+def _brick_attn_local(q, k, v, kpos, new_k, new_v, slot, t, *, axis, scale,
+                      logit_cap):
+    """Per-shard body: local brick update + partial softmax + JSE merge.
+
+    GQA is computed in the grouped (B,1,K,G,hd) formulation — inside
+    shard_map there is no GSPMD partitioning to appease, so no repeat-KV
+    materialization: the cache is read once in its storage dtype and the
+    dots accumulate in f32 via preferred_element_type (MXU-native)."""
+    b, w_loc, kh, hd = k.shape
+    my = jax.lax.axis_index(axis)
+
+    # ---- write the new token's KV into the owning brick --------------- #
+    # non-owners re-write their existing slice: the `where` touches only
+    # the (B,1,K,hd) slice, never the whole cache (a whole-cache select
+    # makes XLA materialize carry copies)
+    local_slot = jnp.clip(slot - my * w_loc, 0, w_loc - 1)
+    owns = (slot >= my * w_loc) & (slot < (my + 1) * w_loc)
+    old_k = jax.lax.dynamic_slice_in_dim(k, local_slot, 1, axis=1)
+    old_v = jax.lax.dynamic_slice_in_dim(v, local_slot, 1, axis=1)
+    upd_k = jnp.where(owns, new_k.astype(k.dtype), old_k)
+    upd_v = jnp.where(owns, new_v.astype(v.dtype), old_v)
+    k = jax.lax.dynamic_update_slice_in_dim(k, upd_k, local_slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(v, upd_v, local_slot, axis=1)
+
+    # ---- local partial attention over this brick ----------------------- #
+    q_full = jax.lax.all_gather(q, axis, axis=2, tiled=True)  # (B,1,H,hd)
+    h = q_full.shape[2]
+    g = h // kh
+    kpos_updated = jnp.where(jnp.arange(kpos.shape[0]) == slot, t, kpos)
+    kpos_loc = jax.lax.dynamic_slice_in_dim(kpos_updated, my * w_loc, w_loc)
+
+    qg = (q_full.astype(jnp.float32) * scale).astype(q.dtype)
+    qg = qg.reshape(b, 1, kh, g, hd)
+    s = jnp.einsum("bqkgd,bckd->bqkgc", qg, k,
+                   preferred_element_type=jnp.float32)  # (B,1,K,G,W_loc)
+    s = apply_softcap(s, logit_cap)
+    valid = (kpos_loc >= 0) & (kpos_loc <= t)
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+
+    m = jnp.maximum(jnp.max(s, axis=-1), 0.1 * NEG_INF)  # (B,1,K,G)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bqkgc,bckd->bqkgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+
+    # ---- JSE merge: exact log-sum-exp combine across bricks ----------- #
+    m_g = jax.lax.pmax(m, axis)
+    corr = jnp.exp(m - m_g)
+    l_g = jax.lax.psum(l * corr, axis)
+    acc_g = jax.lax.psum(acc * corr[..., None], axis)
+    out = acc_g / jnp.maximum(l_g[..., None], 1e-30)
+    return out.reshape(b, 1, h, hd).astype(q.dtype), k, v

@@ -1,0 +1,121 @@
+"""Metadata catalogue + node information service.
+
+Plays the roles of the paper's PostgreSQL meta-data catalogue (job tuples,
+raw-data distribution, results) and of GRIS/LDAP in MDS (per-node resource
+info: processors, bandwidth, liveness).  The JSE broker polls this object
+exactly as the paper's broker "searches from time to time into the
+Meta-data catalogue".
+
+Persisted as JSON so a restarted JSE recovers job state (checkpoint/restart
+at the control plane).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Dict, List, Optional, Tuple
+
+PENDING, RUNNING, DONE, FAILED = "PENDING", "RUNNING", "DONE", "FAILED"
+
+
+@dataclasses.dataclass
+class NodeInfo:
+    node_id: int
+    n_cpus: int = 8
+    bandwidth_mbps: float = 100.0  # paper: fast Ethernet
+    alive: bool = True
+    throughput_ema: float = 1.0    # events/s, PROOF-style speed estimate
+    packets_done: int = 0
+
+    def observe(self, events: int, seconds: float, decay: float = 0.7):
+        if seconds <= 0:
+            return
+        rate = events / seconds
+        self.throughput_ema = decay * self.throughput_ema + (1 - decay) * rate
+        self.packets_done += 1
+
+
+@dataclasses.dataclass
+class JobRecord:
+    job_id: int
+    expr: str
+    calib_iters: int
+    status: str = PENDING
+    submit_time: float = 0.0
+    start_time: float = 0.0
+    end_time: float = 0.0
+    bricks: Tuple[int, ...] = ()
+    result: Optional[dict] = None
+    events_processed: int = 0
+    failures: int = 0
+    note: str = ""
+
+
+class MetadataCatalog:
+    def __init__(self, n_nodes: int = 0):
+        self.jobs: Dict[int, JobRecord] = {}
+        self.nodes: Dict[int, NodeInfo] = {
+            i: NodeInfo(i) for i in range(n_nodes)}
+        self._next_job = 0
+
+    # ------------------------- job tuples --------------------------- #
+    def submit(self, expr: str, calib_iters: int = 4,
+               bricks: Tuple[int, ...] = ()) -> int:
+        jid = self._next_job
+        self._next_job += 1
+        self.jobs[jid] = JobRecord(jid, expr, calib_iters,
+                                   submit_time=time.time(), bricks=bricks)
+        return jid
+
+    def next_pending(self) -> Optional[JobRecord]:
+        for jid in sorted(self.jobs):
+            if self.jobs[jid].status == PENDING:
+                return self.jobs[jid]
+        return None
+
+    def update(self, jid: int, **fields):
+        rec = self.jobs[jid]
+        for k, v in fields.items():
+            setattr(rec, k, v)
+
+    # ------------------------- node info (GRIS) --------------------- #
+    def node(self, node_id: int) -> NodeInfo:
+        return self.nodes.setdefault(node_id, NodeInfo(node_id))
+
+    def mark_dead(self, node_id: int):
+        self.node(node_id).alive = False
+
+    def mark_alive(self, node_id: int):
+        self.node(node_id).alive = True
+
+    def alive_nodes(self) -> List[int]:
+        return sorted(n for n, info in self.nodes.items() if info.alive)
+
+    def dead_nodes(self) -> set:
+        return {n for n, info in self.nodes.items() if not info.alive}
+
+    def grid_info(self, node_id: int) -> dict:
+        """The paper's 'query properties of the grid nodes' (LDAP port 2135)."""
+        info = self.node(node_id)
+        return dataclasses.asdict(info)
+
+    # ------------------------- persistence -------------------------- #
+    def to_json(self) -> str:
+        return json.dumps({
+            "jobs": {k: dataclasses.asdict(v) for k, v in self.jobs.items()},
+            "nodes": {k: dataclasses.asdict(v) for k, v in self.nodes.items()},
+            "next_job": self._next_job,
+        })
+
+    @classmethod
+    def from_json(cls, text: str) -> "MetadataCatalog":
+        data = json.loads(text)
+        cat = cls()
+        for k, v in data["jobs"].items():
+            v["bricks"] = tuple(v["bricks"])
+            cat.jobs[int(k)] = JobRecord(**v)
+        for k, v in data["nodes"].items():
+            cat.nodes[int(k)] = NodeInfo(**v)
+        cat._next_job = data["next_job"]
+        return cat

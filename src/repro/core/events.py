@@ -1,0 +1,98 @@
+"""Event records: the columnar stand-in for the paper's ROOT trees.
+
+An *event* (paper section 1.1: one LHC collision, ~1 MB) is stored columnar:
+per-event scalar variables plus a variable-length tracks matrix (padded to
+``max_tracks`` with a validity count).  A batch of events is an ``EventBatch``
+pytree of arrays whose leading dim is the event index — this is the unit the
+grid bricks shard.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# canonical scalar variable names (index into the scalars column)
+SCALAR_VARS = (
+    "e_total", "e_t_miss", "pt_lead", "eta_lead", "phi_lead", "m_inv",
+    "n_jets", "n_leptons",
+)
+TRACK_VARS = ("pt", "eta", "phi", "d0", "z0", "charge", "chi2")
+
+
+@dataclasses.dataclass
+class EventSchema:
+    n_scalars: int
+    max_tracks: int
+    track_vars: int
+
+    @classmethod
+    def from_config(cls, cfg) -> "EventSchema":
+        return cls(cfg.n_scalars, cfg.max_tracks, cfg.track_vars)
+
+    def scalar_index(self, name: str) -> int:
+        return SCALAR_VARS.index(name)  # raises ValueError on unknown
+
+    def track_index(self, name: str) -> int:
+        return TRACK_VARS.index(name)
+
+    def event_bytes(self) -> int:
+        return 4 * (self.n_scalars + self.max_tracks * self.track_vars + 2)
+
+
+def make_batch(scalars, tracks, n_tracks, event_id) -> Dict[str, jax.Array]:
+    return {
+        "scalars": scalars,      # (N, n_scalars) f32
+        "tracks": tracks,        # (N, max_tracks, track_vars) f32
+        "n_tracks": n_tracks,    # (N,) i32 valid track count
+        "event_id": event_id,    # (N,) i32 global id
+    }
+
+
+def synthetic_events(key, schema: EventSchema, n: int,
+                     id_offset: int = 0) -> Dict[str, jax.Array]:
+    """Generate physically-flavoured synthetic events (heavy-tailed pt etc.)."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    scalars = jnp.abs(jax.random.normal(k1, (n, schema.n_scalars)) * 50.0)
+    tracks = jax.random.normal(k2, (n, schema.max_tracks, schema.track_vars))
+    # pt column: exponential tail, always positive
+    if schema.track_vars > 0:
+        pt = jax.random.exponential(k3, (n, schema.max_tracks)) * 10.0
+        tracks = tracks.at[:, :, 0].set(pt)
+    n_tracks = jax.random.randint(k4, (n,), 1, schema.max_tracks + 1,
+                                  jnp.int32)
+    event_id = jnp.arange(id_offset, id_offset + n, dtype=jnp.int32)
+    return make_batch(scalars.astype(jnp.float32),
+                      tracks.astype(jnp.float32), n_tracks, event_id)
+
+
+def abstract_events(schema: EventSchema, n: int):
+    """ShapeDtypeStructs for dry-run lowering of query jobs."""
+    return make_batch(
+        jax.ShapeDtypeStruct((n, schema.n_scalars), jnp.float32),
+        jax.ShapeDtypeStruct((n, schema.max_tracks, schema.track_vars),
+                             jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+    )
+
+
+def concat_batches(batches):
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *batches)
+
+
+def host_events(rng: np.random.Generator, schema: EventSchema, n: int,
+                id_offset: int = 0):
+    """NumPy twin of synthetic_events for host-side brick stores."""
+    scalars = np.abs(rng.normal(size=(n, schema.n_scalars)) * 50.0)
+    tracks = rng.normal(size=(n, schema.max_tracks, schema.track_vars))
+    if schema.track_vars > 0:
+        tracks[:, :, 0] = rng.exponential(size=(n, schema.max_tracks)) * 10.0
+    n_tracks = rng.integers(1, schema.max_tracks + 1, size=(n,))
+    return make_batch(
+        scalars.astype(np.float32), tracks.astype(np.float32),
+        n_tracks.astype(np.int32),
+        np.arange(id_offset, id_offset + n, dtype=np.int32))

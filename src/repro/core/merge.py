@@ -1,0 +1,70 @@
+"""Result merging — "the final result is merged from the various results
+coming from the different Grid nodes" (paper section 4.2).
+
+A query result is a small, associative-mergeable summary: selected-event
+count, sum/histogram of a physics variable, and a bounded set of selected
+event ids.  Associativity is what lets the merge run as a tree: per-brick
+-> per-node -> per-pod -> JSE, and as plain psums in the SPMD realization.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+HIST_BINS = 64
+HIST_RANGE = (0.0, 512.0)
+MAX_IDS = 128
+
+
+@dataclasses.dataclass
+class QueryResult:
+    n_selected: int = 0
+    n_processed: int = 0
+    sum_var: float = 0.0
+    hist: Optional[np.ndarray] = None          # (HIST_BINS,) counts
+    selected_ids: Optional[np.ndarray] = None  # bounded id sample
+
+    def __post_init__(self):
+        if self.hist is None:
+            self.hist = np.zeros(HIST_BINS, np.int64)
+        if self.selected_ids is None:
+            self.selected_ids = np.zeros(0, np.int64)
+
+
+def from_mask(mask: np.ndarray, var: np.ndarray,
+              event_id: np.ndarray) -> QueryResult:
+    sel = mask != 0
+    vals = var[sel]
+    hist, _ = np.histogram(vals, bins=HIST_BINS, range=HIST_RANGE)
+    ids = event_id[sel][:MAX_IDS]
+    return QueryResult(
+        n_selected=int(sel.sum()), n_processed=int(mask.shape[0]),
+        sum_var=float(vals.sum()), hist=hist.astype(np.int64),
+        selected_ids=ids.astype(np.int64))
+
+
+def merge2(a: QueryResult, b: QueryResult) -> QueryResult:
+    return QueryResult(
+        n_selected=a.n_selected + b.n_selected,
+        n_processed=a.n_processed + b.n_processed,
+        sum_var=a.sum_var + b.sum_var,
+        hist=a.hist + b.hist,
+        selected_ids=np.concatenate([a.selected_ids, b.selected_ids])[:MAX_IDS],
+    )
+
+
+def tree_merge(results: Sequence[QueryResult]) -> QueryResult:
+    """Pairwise tree reduction (the JSE merge schedule)."""
+    if not results:
+        return QueryResult()
+    level: List[QueryResult] = list(results)
+    while len(level) > 1:
+        nxt = []
+        for i in range(0, len(level) - 1, 2):
+            nxt.append(merge2(level[i], level[i + 1]))
+        if len(level) % 2:
+            nxt.append(level[-1])
+        level = nxt
+    return level[0]

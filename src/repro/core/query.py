@@ -1,0 +1,261 @@
+"""Filter-expression compiler: the paper's "filter expression" web-form field.
+
+GEPS users submit jobs with a filter expression over event variables (paper
+section 5, Fig 4).  We compile a small expression language to a pure-JAX
+predicate over an EventBatch, so the same user-facing query runs SPMD over
+brick-sharded arrays.
+
+Grammar (precedence low->high):
+    expr    := or
+    or      := and ("||" and)*
+    and     := cmp ("&&" cmp)*
+    cmp     := sum (("<"|"<="|">"|">="|"=="|"!=") sum)?
+    sum     := prod (("+"|"-") prod)*
+    prod    := unary (("*"|"/") unary)*
+    unary   := "-" unary | "!" unary | atom
+    atom    := NUMBER | IDENT | AGG "(" IDENT ")" | "(" expr ")"
+    AGG     := "sum" | "max" | "min" | "count" | "mean"
+
+IDENT resolves scalar variables by name (events.SCALAR_VARS) or, inside an
+aggregation, track variables (events.TRACK_VARS); ``n_tracks`` is built in.
+Aggregations reduce over the valid tracks of each event, e.g.::
+
+    "pt_lead > 50 && count(pt > 20) >= 2 && sum(pt) < 500"
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Callable, List, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import events as ev
+
+_TOKEN_RE = re.compile(
+    r"\s*(?:(?P<num>\d+\.?\d*(?:[eE][+-]?\d+)?)|(?P<id>[A-Za-z_]\w*)"
+    r"|(?P<op>&&|\|\||<=|>=|==|!=|[-+*/<>!()]))"
+)
+
+AGGS = ("sum", "max", "min", "count", "mean")
+
+
+class QueryError(ValueError):
+    pass
+
+
+def tokenize(src: str) -> List[str]:
+    out, pos = [], 0
+    while pos < len(src):
+        m = _TOKEN_RE.match(src, pos)
+        if not m or m.end() == pos:
+            if src[pos:].strip():
+                raise QueryError(f"bad token at: {src[pos:]!r}")
+            break
+        out.append(m.group(m.lastgroup))
+        pos = m.end()
+    return out
+
+
+# ---------------------------- AST ---------------------------------------- #
+@dataclasses.dataclass
+class Num:
+    value: float
+
+
+@dataclasses.dataclass
+class Var:
+    name: str
+
+
+@dataclasses.dataclass
+class Agg:
+    fn: str
+    arg: "Node"
+
+
+@dataclasses.dataclass
+class Unary:
+    op: str
+    arg: "Node"
+
+
+@dataclasses.dataclass
+class Bin:
+    op: str
+    lhs: "Node"
+    rhs: "Node"
+
+
+Node = Union[Num, Var, Agg, Unary, Bin]
+
+
+class _Parser:
+    def __init__(self, tokens: List[str]):
+        self.toks = tokens
+        self.i = 0
+
+    def peek(self) -> Optional[str]:
+        return self.toks[self.i] if self.i < len(self.toks) else None
+
+    def take(self, expect: Optional[str] = None) -> str:
+        tok = self.peek()
+        if tok is None or (expect is not None and tok != expect):
+            raise QueryError(f"expected {expect!r}, got {tok!r}")
+        self.i += 1
+        return tok
+
+    def parse(self) -> Node:
+        node = self.or_()
+        if self.peek() is not None:
+            raise QueryError(f"trailing tokens: {self.toks[self.i:]}")
+        return node
+
+    def or_(self):
+        node = self.and_()
+        while self.peek() == "||":
+            self.take()
+            node = Bin("||", node, self.and_())
+        return node
+
+    def and_(self):
+        node = self.cmp()
+        while self.peek() == "&&":
+            self.take()
+            node = Bin("&&", node, self.cmp())
+        return node
+
+    def cmp(self):
+        node = self.sum_()
+        if self.peek() in ("<", "<=", ">", ">=", "==", "!="):
+            op = self.take()
+            node = Bin(op, node, self.sum_())
+        return node
+
+    def sum_(self):
+        node = self.prod()
+        while self.peek() in ("+", "-"):
+            node = Bin(self.take(), node, self.prod())
+        return node
+
+    def prod(self):
+        node = self.unary()
+        while self.peek() in ("*", "/"):
+            node = Bin(self.take(), node, self.unary())
+        return node
+
+    def unary(self):
+        if self.peek() in ("-", "!"):
+            return Unary(self.take(), self.unary())
+        return self.atom()
+
+    def atom(self):
+        tok = self.peek()
+        if tok == "(":
+            self.take()
+            node = self.or_()
+            self.take(")")
+            return node
+        tok = self.take()
+        if re.fullmatch(r"\d+\.?\d*(?:[eE][+-]?\d+)?", tok):
+            return Num(float(tok))
+        if tok in AGGS and self.peek() == "(":
+            self.take("(")
+            arg = self.or_()
+            self.take(")")
+            return Agg(tok, arg)
+        return Var(tok)
+
+
+def parse(src: str) -> Node:
+    return _Parser(tokenize(src)).parse()
+
+
+# ---------------------------- compiler ----------------------------------- #
+def compile_query(src: str, schema: ev.EventSchema) -> Callable:
+    """Compile to ``fn(batch) -> (N,) f32`` (bool predicates return 0/1)."""
+    ast = parse(src)
+
+    def eval_node(node: Node, batch, track_ctx: bool):
+        if isinstance(node, Num):
+            return jnp.float32(node.value)
+        if isinstance(node, Var):
+            if node.name == "n_tracks":
+                return batch["n_tracks"].astype(jnp.float32)
+            if track_ctx:
+                try:
+                    idx = schema.track_index(node.name)
+                    return batch["tracks"][..., idx]
+                except ValueError:
+                    pass
+            try:
+                idx = schema.scalar_index(node.name)
+            except ValueError:
+                raise QueryError(f"unknown variable {node.name!r}") from None
+            if idx >= schema.n_scalars:
+                raise QueryError(f"variable {node.name!r} outside schema")
+            val = batch["scalars"][..., idx]
+            if track_ctx:
+                val = val[..., None]  # broadcast over tracks
+            return val
+        if isinstance(node, Agg):
+            inner = eval_node(node.arg, batch, True)  # (N, T)
+            t = jnp.arange(inner.shape[-1])
+            valid = t[None, :] < batch["n_tracks"][:, None]
+            if node.fn == "count":
+                return jnp.sum(jnp.where(valid, (inner != 0).astype(
+                    jnp.float32), 0.0), axis=-1)
+            if node.fn == "sum":
+                return jnp.sum(jnp.where(valid, inner, 0.0), axis=-1)
+            if node.fn == "mean":
+                s = jnp.sum(jnp.where(valid, inner, 0.0), axis=-1)
+                return s / jnp.maximum(batch["n_tracks"].astype(jnp.float32), 1)
+            if node.fn == "max":
+                return jnp.max(jnp.where(valid, inner, -jnp.inf), axis=-1)
+            if node.fn == "min":
+                return jnp.min(jnp.where(valid, inner, jnp.inf), axis=-1)
+            raise QueryError(node.fn)
+        if isinstance(node, Unary):
+            val = eval_node(node.arg, batch, track_ctx)
+            return -val if node.op == "-" else (val == 0).astype(jnp.float32)
+        if isinstance(node, Bin):
+            a = eval_node(node.lhs, batch, track_ctx)
+            b = eval_node(node.rhs, batch, track_ctx)
+            ops = {
+                "+": lambda: a + b,
+                "-": lambda: a - b,
+                "*": lambda: a * b,
+                "/": lambda: a / jnp.where(b == 0, 1e-30, b),
+                "<": lambda: (a < b).astype(jnp.float32),
+                "<=": lambda: (a <= b).astype(jnp.float32),
+                ">": lambda: (a > b).astype(jnp.float32),
+                ">=": lambda: (a >= b).astype(jnp.float32),
+                "==": lambda: (a == b).astype(jnp.float32),
+                "!=": lambda: (a != b).astype(jnp.float32),
+                "&&": lambda: ((a != 0) & (b != 0)).astype(jnp.float32),
+                "||": lambda: ((a != 0) | (b != 0)).astype(jnp.float32),
+            }
+            if node.op not in ops:
+                raise QueryError(node.op)
+            return ops[node.op]()
+        raise QueryError(f"bad node {node}")
+
+    def fn(batch):
+        return eval_node(ast, batch, False)
+
+    return fn
+
+
+def calibrate(batch, iters: int = 4):
+    """The paper's per-event "calibration procedure" (section 4.1): an
+    iterative refinement over track parameters — the compute-heavy part of
+    event processing.  Returns a new tracks array."""
+    tracks = batch["tracks"]
+
+    def body(i, trk):
+        pt = trk[..., 0:1]
+        corr = 1.0 + 0.01 * jnp.tanh(trk) * jax.lax.rsqrt(1.0 + pt * pt)
+        return trk * corr
+
+    return jax.lax.fori_loop(0, iters, body, tracks)

@@ -1,0 +1,108 @@
+"""Fused event filter+calibrate+reduce Pallas TPU kernel.
+
+TPU adaptation of the paper's per-node event-processing loop: instead of
+the CPU's "calibrate file, write it back, re-read to filter" (three HBM
+passes on TPU), one VMEM pass per track tile computes calibration and the
+track aggregates, accumulating per-event partials in VMEM across track
+tiles — tracks stream HBM->VMEM exactly once.
+
+Grid: (event_blocks, track_tiles); the track-tile axis is the fast
+(sequential) axis, so the per-event accumulators live in the output blocks
+(count/sum), which Pallas keeps resident in VMEM across the inner axis.
+
+BlockSpecs (VMEM):
+  scalars  (BE, n_scalars)  — event axis blocked, revisited per track tile
+  tracks   (BE, BT, V)      — both axes blocked (the streamed operand)
+  n_tracks (BE, 1)
+  outputs: mask (BE,), var (BE,), cnt (BE,), ssum (BE,)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(scalars_ref, tracks_ref, ntr_ref, thr_ref,
+            mask_ref, var_ref, cnt_ref, sum_ref, *,
+            calib_iters: int, var_idx: int, block_t: int):
+    tt = pl.program_id(1)
+    n_tiles = pl.num_programs(1)
+
+    @pl.when(tt == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+
+    trk = tracks_ref[...].astype(jnp.float32)  # (BE, BT, V)
+
+    def body(i, t):
+        pt = t[..., 0:1]
+        corr = 1.0 + 0.01 * jnp.tanh(t) * jax.lax.rsqrt(1.0 + pt * pt)
+        return t * corr
+
+    trk = jax.lax.fori_loop(0, calib_iters, body, trk)
+    pt = trk[..., 0]  # (BE, BT)
+
+    # validity: global track index < n_tracks
+    t0 = tt * block_t
+    tidx = t0 + jax.lax.broadcasted_iota(jnp.int32, pt.shape, 1)
+    valid = tidx < ntr_ref[...]  # (BE, BT) via (BE,1) broadcast
+
+    pt_thresh = thr_ref[1]
+    cnt_ref[...] += jnp.sum(
+        jnp.where(valid & (pt > pt_thresh), 1.0, 0.0), axis=-1)
+    sum_ref[...] += jnp.sum(jnp.where(valid, pt, 0.0), axis=-1)
+
+    @pl.when(tt == n_tiles - 1)
+    def _finalize():
+        scalar_thresh, _, min_count, sum_cap = (
+            thr_ref[0], thr_ref[1], thr_ref[2], thr_ref[3])
+        sc = scalars_ref[...].astype(jnp.float32)  # (BE, n_scalars)
+        mask = (sc[:, var_idx] > scalar_thresh) & (cnt_ref[...] >= min_count)
+        mask = mask & jnp.where(sum_cap > 0, sum_ref[...] < sum_cap, True)
+        mask_ref[...] = mask.astype(jnp.float32)
+        var_ref[...] = sc[:, 0]
+
+
+def event_filter_pallas(scalars, tracks, n_tracks, thresholds, *,
+                        var_idx: int, calib_iters: int,
+                        block_e: int = 128, block_t: int = 512,
+                        interpret: bool = True):
+    """scalars (N,S) f32, tracks (N,T,V) f32, n_tracks (N,) i32,
+    thresholds (4,) f32 = [scalar_thresh, pt_thresh, min_count, sum_cap].
+    Returns (mask (N,), var (N,))."""
+    n, s = scalars.shape
+    _, t, v = tracks.shape
+    block_e = min(block_e, n)
+    block_t = min(block_t, t)
+    grid = (pl.cdiv(n, block_e), pl.cdiv(t, block_t))
+
+    kernel = functools.partial(_kernel, calib_iters=calib_iters,
+                               var_idx=var_idx, block_t=block_t)
+    mask, var, _, _ = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_e, s), lambda e, tt: (e, 0)),
+            pl.BlockSpec((block_e, block_t, v), lambda e, tt: (e, tt, 0)),
+            pl.BlockSpec((block_e, 1), lambda e, tt: (e, 0)),
+            pl.BlockSpec((4,), lambda e, tt: (0,)),  # thresholds (whole)
+        ],
+        out_specs=[
+            pl.BlockSpec((block_e,), lambda e, tt: (e,)),
+            pl.BlockSpec((block_e,), lambda e, tt: (e,)),
+            pl.BlockSpec((block_e,), lambda e, tt: (e,)),
+            pl.BlockSpec((block_e,), lambda e, tt: (e,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(scalars, tracks, n_tracks[:, None], thresholds)
+    return mask, var

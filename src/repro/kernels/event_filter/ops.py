@@ -1,0 +1,114 @@
+"""Jitted wrapper for the event-filter kernel + query-AST pattern matcher.
+
+``filter_and_summarize`` accepts the GEPS canonical hot-query family
+
+    "<scalar> > A && count(pt > B) >= C [&& sum(pt) < D]"
+
+extracts (A, B, C, D) from the parsed AST and dispatches to the fused
+Pallas kernel; anything else falls back to the pure-jnp compiled query
+(same results, just without the fusion win).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import query as q
+from repro.kernels.event_filter.kernel import event_filter_pallas
+from repro.kernels.event_filter.ref import event_filter_ref
+
+
+def match_canonical(expr: str, schema) -> Optional[dict]:
+    """Returns kernel params if the expression matches the hot family."""
+    try:
+        ast = q.parse(expr)
+    except q.QueryError:
+        return None
+
+    def is_cmp(node, op):
+        return isinstance(node, q.Bin) and node.op == op
+
+    terms = []
+
+    def flatten_and(node):
+        if isinstance(node, q.Bin) and node.op == "&&":
+            flatten_and(node.lhs)
+            flatten_and(node.rhs)
+        else:
+            terms.append(node)
+
+    flatten_and(ast)
+    out = {"sum_cap": -1.0}
+    seen = set()
+    for t in terms:
+        # scalar threshold: Var > Num
+        if (is_cmp(t, ">") and isinstance(t.lhs, q.Var)
+                and isinstance(t.rhs, q.Num) and "scalar" not in seen):
+            try:
+                out["var_idx"] = schema.scalar_index(t.lhs.name)
+            except ValueError:
+                return None
+            out["scalar_thresh"] = t.rhs.value
+            seen.add("scalar")
+        # count(pt > B) >= C
+        elif (is_cmp(t, ">=") and isinstance(t.lhs, q.Agg)
+              and t.lhs.fn == "count" and is_cmp(t.lhs.arg, ">")
+              and isinstance(t.lhs.arg.lhs, q.Var)
+              and t.lhs.arg.lhs.name == "pt"
+              and isinstance(t.lhs.arg.rhs, q.Num)
+              and isinstance(t.rhs, q.Num) and "count" not in seen):
+            out["pt_thresh"] = t.lhs.arg.rhs.value
+            out["min_count"] = t.rhs.value
+            seen.add("count")
+        # sum(pt) < D
+        elif (is_cmp(t, "<") and isinstance(t.lhs, q.Agg)
+              and t.lhs.fn == "sum" and isinstance(t.lhs.arg, q.Var)
+              and t.lhs.arg.name == "pt" and isinstance(t.rhs, q.Num)):
+            out["sum_cap"] = t.rhs.value
+        else:
+            return None
+    if "scalar" not in seen or "count" not in seen:
+        return None
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("var_idx", "calib_iters",
+                                             "interpret", "use_pallas"))
+def event_filter(scalars, tracks, n_tracks, thresholds, *, var_idx: int,
+                 calib_iters: int, interpret: bool = True,
+                 use_pallas: bool = True):
+    if use_pallas:
+        return event_filter_pallas(
+            scalars, tracks, n_tracks, thresholds, var_idx=var_idx,
+            calib_iters=calib_iters, interpret=interpret)
+    return event_filter_ref(
+        scalars, tracks, n_tracks, var_idx=var_idx,
+        scalar_thresh=thresholds[0], pt_thresh=thresholds[1],
+        min_count=thresholds[2], sum_cap=thresholds[3],
+        calib_iters=calib_iters)
+
+
+def filter_and_summarize(expr: str, schema, batch, *, calib_iters: int = 0,
+                         interpret: bool = True):
+    """(mask, var) for an arbitrary expression; Pallas path when canonical.
+
+    NOTE: when the kernel handles calibration the caller must pass the RAW
+    batch (core.jse passes calib_iters through here instead of
+    pre-calibrating)."""
+    params = match_canonical(expr, schema)
+    if params is None:
+        pred = q.compile_query(expr, schema)
+        b = batch
+        if calib_iters:
+            b = dict(b, tracks=q.calibrate(b, calib_iters))
+        return pred(b), b["scalars"][:, 0]
+    thresholds = jnp.array([params["scalar_thresh"], params["pt_thresh"],
+                            params["min_count"], params["sum_cap"]],
+                           jnp.float32)
+    return event_filter(
+        batch["scalars"], batch["tracks"], batch["n_tracks"], thresholds,
+        var_idx=params["var_idx"], calib_iters=calib_iters,
+        interpret=interpret)

@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the fused event-filter kernel.
+
+Canonical GEPS hot query family (the paper's filter+calibration job):
+
+    mask = (scalars[:, var_idx] > scalar_thresh)
+           & (count(calibrated_pt > pt_thresh) >= min_count)
+           & (sum(calibrated_pt) < sum_cap)          [sum_cap <= 0: disabled]
+    var  = scalars[:, 0]   (summary variable for the histogram/merge)
+
+Calibration is the paper's section-4.1 iterative per-track refinement,
+applied on the fly (the kernel fuses it with the reduction so tracks are
+read from HBM exactly once).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def calibrate_tracks(tracks: jax.Array, iters: int) -> jax.Array:
+    """tracks: (..., T, V) f32. Matches core.query.calibrate."""
+    def body(i, trk):
+        pt = trk[..., 0:1]
+        corr = 1.0 + 0.01 * jnp.tanh(trk) * jax.lax.rsqrt(1.0 + pt * pt)
+        return trk * corr
+
+    return jax.lax.fori_loop(0, iters, body, tracks)
+
+
+def event_filter_ref(scalars, tracks, n_tracks, *, var_idx: int,
+                     scalar_thresh: float, pt_thresh: float,
+                     min_count: float, sum_cap: float, calib_iters: int):
+    """Returns (mask (N,) f32 in {0,1}, var (N,) f32)."""
+    trk = calibrate_tracks(tracks.astype(jnp.float32), calib_iters)
+    pt = trk[..., 0]  # (N, T)
+    t = jnp.arange(pt.shape[-1])
+    valid = t[None, :] < n_tracks[:, None]
+    cnt = jnp.sum(jnp.where(valid & (pt > pt_thresh), 1.0, 0.0), axis=-1)
+    ssum = jnp.sum(jnp.where(valid, pt, 0.0), axis=-1)
+    mask = (scalars[:, var_idx] > scalar_thresh) & (cnt >= min_count)
+    if sum_cap > 0:
+        mask = mask & (ssum < sum_cap)
+    return mask.astype(jnp.float32), scalars[:, 0]

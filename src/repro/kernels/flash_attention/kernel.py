@@ -1,0 +1,124 @@
+"""Flash attention (forward) Pallas TPU kernel with GQA and windowing.
+
+VMEM tiling: grid (B, H, nQ, nK) with the KV-block axis innermost
+(sequential on TPU), so the online-softmax accumulators (m, l, acc) live in
+VMEM scratch across KV blocks and each Q tile streams K/V exactly once.
+Block shapes default to (128, head_dim) tiles — MXU-aligned (128 lanes) —
+and the KV-head index map implements GQA without materializing repeated KV
+(the repeat in the pure-JAX path is a sharding device, not a memory-traffic
+choice; on TPU the kernel indexes the right KV head directly).
+
+Causality/window: blocks fully outside the allowed band are masked (the
+index-map still visits them; block skipping is a perf refinement tracked
+in EXPERIMENTS.md section Perf).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: Optional[int],
+            logit_cap: Optional[float], block_q: int, block_k: int,
+            sq: int, sk: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0, :, :].astype(jnp.float32) * scale  # (BQ, D)
+    k = k_ref[0, 0, :, :].astype(jnp.float32)       # (BK, D)
+    v = v_ref[0, 0, :, :].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (BQ, BK)
+    if logit_cap is not None:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+
+    # positions: queries are the LAST sq positions of the sk context
+    q_pos = (qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+             + (sk - sq if causal else 0))
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = k_pos < sk
+    if causal:
+        valid &= k_pos <= q_pos
+    if window is not None:
+        valid &= k_pos > q_pos - window
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    m_new = jnp.maximum(m_new, 0.1 * NEG_INF)  # masked-block guard
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+    acc_scr[...] = (acc_scr[...] * corr[:, None]
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
+    m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0, 0, :, :] = (acc_scr[...]
+                          / jnp.maximum(l_scr[...], 1e-30)[:, None]
+                          ).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    scale: Optional[float] = None,
+                    logit_cap: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True):
+    """Entry point (see flash_attention_pallas docstring)."""
+    b, sq, h, d = q.shape
+    _, sk, kh, _ = k.shape
+    assert h % kh == 0
+    g = h // kh
+    scale_v = scale if scale is not None else d ** -0.5
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    grid = (b, h, pl.cdiv(sq, block_q), pl.cdiv(sk, block_k))
+
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _kernel, scale=scale_v, causal=causal, window=window,
+        logit_cap=logit_cap, block_q=block_q, block_k=block_k, sq=sq, sk=sk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda bb, hh, qi, ki: (bb, hh, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bb, hh, qi, ki: (bb, hh // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bb, hh, qi, ki: (bb, hh // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda bb, hh, qi, ki: (bb, hh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

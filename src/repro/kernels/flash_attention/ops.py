@@ -1,0 +1,19 @@
+"""Jitted wrapper for the flash-attention kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention as _fa
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "scale", "logit_cap", "block_q", "block_k",
+    "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=None, scale=None,
+                    logit_cap=None, block_q=128, block_k=128,
+                    interpret=True):
+    return _fa(q, k, v, causal=causal, window=window, scale=scale,
+               logit_cap=logit_cap, block_q=block_q, block_k=block_k,
+               interpret=interpret)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the flash-attention kernel: the repeat-KV GQA
+attention from models/attention.py, re-exported with the kernel's exact
+signature."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import attention
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, scale=None,
+                        logit_cap=None):
+    """q (B,Sq,H,D), k/v (B,Sk,K,D) -> (B,Sq,H,D)."""
+    sq, sk = q.shape[1], k.shape[1]
+    q_pos = jnp.arange(sq, dtype=jnp.int32) + (sk - sq if causal else 0)
+    k_pos = jnp.arange(sk, dtype=jnp.int32)
+    return attention(q, k, v, q_positions=q_pos, k_positions=k_pos,
+                     causal=causal, window=window, scale=scale,
+                     logit_cap=logit_cap)

@@ -1,0 +1,107 @@
+"""Chunkwise-parallel mLSTM, Pallas TPU kernel.
+
+Same VMEM dataflow as flash attention — grid (B, H, nQ, nK), KV innermost,
+online accumulators in scratch — but the softmax is replaced by the xLSTM
+gate algebra: weight(t,s) = exp(F_t - F_s + i_s - m_t) * (q_t . k_s)/sqrt(d)
+and the output normalizer is max(|sum_s w * qk|, exp(-m_t)).
+
+F (cumulative log forget) and i (log input gate) stream in as (B,H,S)
+tiles alongside K/V; the running max m tracks only the gate part (the
+paper's stabilizer), not the dot products.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, fq_ref, fk_ref, li_ref, o_ref,
+            m_scr, num_scr, den_scr, *, scale: float, block_q: int,
+            block_k: int, s_total: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        num_scr[...] = jnp.zeros_like(num_scr)
+        den_scr[...] = jnp.zeros_like(den_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale   # (BQ, D)
+    k = k_ref[0, 0].astype(jnp.float32)           # (BK, D)
+    v = v_ref[0, 0].astype(jnp.float32)
+    fq = fq_ref[0, 0].astype(jnp.float32)         # (BQ,) cumulative log f
+    fk = fk_ref[0, 0].astype(jnp.float32)         # (BK,)
+    li = li_ref[0, 0].astype(jnp.float32)         # (BK,) log input gate
+
+    logw = fq[:, None] - fk[None, :] + li[None, :]  # (BQ, BK)
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, logw.shape, 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, logw.shape, 1)
+    valid = (k_pos <= q_pos) & (k_pos < s_total)
+    logw = jnp.where(valid, logw, NEG)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(jnp.maximum(m_prev, jnp.max(logw, axis=-1)), 0.1 * NEG)
+    wts = jnp.exp(logw - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+
+    sc = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (BQ, BK)
+    a = wts * sc
+    num_scr[...] = (num_scr[...] * corr[:, None]
+                    + jax.lax.dot_general(a, v, (((1,), (0,)), ((), ()))))
+    den_scr[...] = den_scr[...] * corr + jnp.sum(a, axis=-1)
+    m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _final():
+        norm = jnp.maximum(jnp.abs(den_scr[...]), jnp.exp(-m_scr[...]))
+        o_ref[0, 0] = (num_scr[...] / norm[:, None]).astype(o_ref.dtype)
+
+
+def mlstm_pallas(q, k, v, log_i, log_f, *, block_q: int = 128,
+                 block_k: int = 128, interpret: bool = True):
+    """q,k,v: (B,S,H,D); log_i/log_f: (B,S,H) f32 -> (B,S,H,D)."""
+    b, s, h, d = q.shape
+    scale = d ** -0.5
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    grid = (b, h, pl.cdiv(s, block_q), pl.cdiv(s, block_k))
+
+    F = jnp.cumsum(log_f, axis=1)  # (B,S,H)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    Ft = F.transpose(0, 2, 1)
+    lit = log_i.transpose(0, 2, 1)
+
+    kernel = functools.partial(_kernel, scale=scale, block_q=block_q,
+                               block_k=block_k, s_total=s)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda bb, hh, qi, ki: (bb, hh, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda bb, hh, qi, ki: (bb, hh, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda bb, hh, qi, ki: (bb, hh, ki, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda bb, hh, qi, ki: (bb, hh, qi)),
+            pl.BlockSpec((1, 1, block_k), lambda bb, hh, qi, ki: (bb, hh, ki)),
+            pl.BlockSpec((1, 1, block_k), lambda bb, hh, qi, ki: (bb, hh, ki)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda bb, hh, qi, ki: (bb, hh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt, Ft, Ft, lit)  # F streamed twice: q-tile view + k-tile view
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,13 @@
+"""Jitted wrapper for the chunkwise mLSTM kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.mlstm_scan.kernel import mlstm_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def mlstm(q, k, v, log_i, log_f, *, interpret: bool = True):
+    return mlstm_pallas(q, k, v, log_i, log_f, interpret=interpret)

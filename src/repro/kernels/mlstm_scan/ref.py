@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the mLSTM chunkwise kernel: re-export of the
+model's parallel formulation with the kernel's signature."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.xlstm import mlstm_parallel
+
+
+def mlstm_ref(q, k, v, log_i, log_f, *, chunk_size: int = 1024):
+    """q,k,v: (B,S,H,D); log_i/log_f: (B,S,H) f32 -> (B,S,H,D)."""
+    return mlstm_parallel(None, q, k, v, log_i, log_f,
+                          chunk_size=chunk_size)

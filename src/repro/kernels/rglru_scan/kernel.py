@@ -1,0 +1,70 @@
+"""RG-LRU linear-recurrence scan, Pallas TPU kernel.
+
+TPU adaptation: ``associative_scan`` materializes O(log S) intermediate
+(B,S,W) tensors in HBM; a TPU core can instead stream S sequentially
+through VMEM once, carrying h in a (block_b, block_w) VMEM scratch —
+bandwidth-optimal (read a,b once, write y once) at the cost of sequential
+time-steps, which the VPU pipelines fine since every step is elementwise.
+
+Grid (nB, nW, nS): S-chunk axis innermost/sequential; the carry scratch
+persists across S chunks for each (B, W) tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, h0_ref, y_ref, h_scr, *, block_s: int):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        h_scr[...] = h0_ref[...]
+
+    a = a_ref[...]  # (BB, BS, BW)
+    b = b_ref[...]
+
+    def step(t, h):
+        h = a[:, t, :] * h + b[:, t, :]
+        y_ref[:, t, :] = h
+        return h
+
+    h_scr[...] = jax.lax.fori_loop(0, a.shape[1], step, h_scr[...])
+
+
+def rglru_scan_pallas(a, b, h0=None, *, block_b: int = 8,
+                      block_s: int = 256, block_w: int = 512,
+                      interpret: bool = True):
+    """a, b: (B,S,W) f32; h0: (B,W) f32 or None.
+    Returns (h (B,S,W), h_last (B,W))."""
+    bsz, s, w = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((bsz, w), jnp.float32)
+    block_b = min(block_b, bsz)
+    block_s = min(block_s, s)
+    block_w = min(block_w, w)
+    grid = (pl.cdiv(bsz, block_b), pl.cdiv(w, block_w), pl.cdiv(s, block_s))
+
+    kernel = functools.partial(_kernel, block_s=block_s)
+    y = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_s, block_w),
+                         lambda bb, wi, si: (bb, si, wi)),
+            pl.BlockSpec((block_b, block_s, block_w),
+                         lambda bb, wi, si: (bb, si, wi)),
+            pl.BlockSpec((block_b, block_w), lambda bb, wi, si: (bb, wi)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_s, block_w),
+                               lambda bb, wi, si: (bb, si, wi)),
+        out_shape=jax.ShapeDtypeStruct((bsz, s, w), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_b, block_w), jnp.float32)],
+        interpret=interpret,
+    )(a.astype(jnp.float32), b.astype(jnp.float32), h0.astype(jnp.float32))
+    return y, y[:, -1, :]

@@ -1,0 +1,19 @@
+"""Jitted wrapper: full RG-LRU block scan with the gate math in XLA (MXU
+matmuls) and the sequential recurrence in the Pallas kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru_scan.kernel import rglru_scan_pallas
+from repro.models.rglru import rglru_gates
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rglru_scan(p: dict, x: jax.Array, h0=None, *, interpret: bool = True):
+    """Drop-in replacement for models.rglru.rglru_scan (kernel-backed)."""
+    a, bx = rglru_gates(p, x)
+    y, h_last = rglru_scan_pallas(a, bx, h0, interpret=interpret)
+    return y.astype(x.dtype), h_last

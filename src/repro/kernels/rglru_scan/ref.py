@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the RG-LRU scan kernel: first-order linear
+recurrence h_t = a_t * h_{t-1} + b_t via associative scan (O(log S) depth
+but O(log S) HBM passes — the thing the kernel improves on TPU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a: jax.Array, b: jax.Array, h0=None):
+    """a, b: (B, S, W) f32. Returns (h (B,S,W), h_last (B,W))."""
+    if h0 is not None:
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h, h[:, -1, :]

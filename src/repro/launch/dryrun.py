@@ -1,0 +1,180 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# NOTE: the two lines above MUST run before any jax-importing module: jax
+# locks the device count at first backend init.  Everything else follows.
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import SHAPES, get_config, list_archs  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import model_zoo  # noqa: E402
+from repro.optim.adamw import AdamW, abstract_opt_state  # noqa: E402
+from repro.parallel.sharding import Sharder  # noqa: E402
+from repro.train import steps as steps_lib  # noqa: E402
+
+ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _mem_dict(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    if ma is None:
+        return {}
+    keys = [
+        "generated_code_size_in_bytes",
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "alias_size_in_bytes",
+        "temp_size_in_bytes",
+    ]
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def cell_is_applicable(cfg, shape) -> tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, ("full-attention arch: 524k-token decode state is "
+                       "quadratic-regime; skipped per DESIGN.md section 5")
+    return True, ""
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               cfg_override=None):
+    """Lower + compile one (arch x shape x mesh) cell. Returns (record, lowered, compiled)."""
+    cfg = cfg_override or get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_is_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "skipped": why}, None, None
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    shd = Sharder(cfg, mesh)
+    model = model_zoo.build_model(cfg)
+    table = model.table
+
+    params_abs = table.abstract_sharded(shd)
+    batch_abs = model_zoo.input_specs(model, shape, shd)
+    t0 = time.time()
+
+    if shape.kind == "train":
+        opt = AdamW(moment_dtype=cfg.opt_moment_dtype)
+        opt_abs = abstract_opt_state(params_abs, opt, shd)
+        step_fn, _ = steps_lib.make_train_step(cfg, model, mesh, opt)
+        out_shardings = (
+            table.shardings(shd),
+            {"m": table.shardings(shd), "v": table.shardings(shd),
+             "count": NamedSharding(mesh, P())},
+            None,
+        )
+        jitted = jax.jit(step_fn, out_shardings=out_shardings,
+                         donate_argnums=(0, 1))
+        lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+    elif shape.kind == "prefill":
+        step_fn, _ = steps_lib.make_prefill_step(cfg, model, mesh)
+        jitted = jax.jit(step_fn)
+        lowered = jitted.lower(params_abs, batch_abs)
+    else:  # decode
+        step_fn, _ = steps_lib.make_decode_step(cfg, model, mesh)
+        cache_abs = model.init_cache_abstract(shd, shape.global_batch,
+                                              shape.seq_len)
+        jitted = jax.jit(step_fn, donate_argnums=(1,))
+        lowered = jitted.lower(params_abs, cache_abs, batch_abs)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    cost = compiled.cost_analysis() or {}
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "multi_pod": multi_pod,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "num_params": table.num_params(),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops": float(cost.get("flops", -1)),
+        "bytes_accessed": float(cost.get("bytes accessed", -1)),
+        "memory": _mem_dict(compiled),
+        "cost_analysis": {k: float(v) for k, v in cost.items()
+                          if isinstance(v, (int, float))},
+    }
+    return record, lowered, compiled
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             save_hlo: bool = True, verbose: bool = True) -> dict:
+    record, lowered, compiled = lower_cell(arch, shape_name,
+                                           multi_pod=multi_pod)
+    if "skipped" in record:
+        if verbose:
+            print(f"[dryrun] SKIP {arch} x {shape_name}: {record['skipped']}")
+        return record
+
+    ARTIFACT_DIR.mkdir(parents=True, exist_ok=True)
+    stem = f"{arch}__{shape_name}__{record['mesh']}".replace("/", "_")
+    if save_hlo:
+        hlo_path = ARTIFACT_DIR / f"{stem}.hlo.txt"
+        hlo_path.write_text(compiled.as_text())
+        record["hlo_path"] = str(hlo_path)
+    (ARTIFACT_DIR / f"{stem}.json").write_text(json.dumps(record, indent=2))
+
+    if verbose:
+        mem = record["memory"]
+        print(f"[dryrun] OK {arch} x {shape_name} mesh={record['mesh']} "
+              f"compile={record['compile_s']}s flops={record['flops']:.3e} "
+              f"bytes={record['bytes_accessed']:.3e}")
+        print(f"  memory_analysis: {mem}")
+    return record
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description="GEPS multi-pod dry-run")
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="shape cell (default: all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-hlo", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    run_cell(arch, shape, multi_pod=mp,
+                             save_hlo=not args.no_hlo)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape, mp, repr(e)))
+                    print(f"[dryrun] FAIL {arch} x {shape} multi_pod={mp}: {e}")
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        sys.exit(1)
+    print("\nall dry-run cells passed")
+
+
+if __name__ == "__main__":
+    main()

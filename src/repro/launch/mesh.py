@@ -1,0 +1,48 @@
+"""Production mesh construction.
+
+NOTE: this module must never touch jax device state at import time — the
+mesh is built inside a function so the dry-run can set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first init.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """Single pod: 16x16 = 256 chips, (data, model).
+    Multi-pod: 2 pods x 256 = 512 chips, (pod, data, model); the ``pod``
+    axis is the GEPS WAN/site axis (cross-pod traffic = result merge only).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — run "
+            "under XLA_FLAGS=--xla_force_host_platform_device_count=512")
+    # more devices available than the mesh needs (512-device dry-run process
+    # building the single-pod mesh): take a prefix
+    devs = np.asarray(devices[:n]).reshape(shape)
+    return Mesh(devs, axes)
+
+
+def make_host_mesh(shape=None, axes=("data", "model")) -> Mesh:
+    """Small mesh over whatever devices exist (tests/examples on CPU)."""
+    n = len(jax.devices())
+    if shape is None:
+        shape = (n, 1)
+    return make_mesh_of(shape, axes)
+
+
+def make_mesh_of(shape, axes) -> Mesh:
+    n = math.prod(shape)
+    devs = np.asarray(jax.devices()[:n]).reshape(shape)
+    return Mesh(devs, axes)

@@ -1,0 +1,49 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On real hardware this runs under one process per host with
+jax.distributed.initialize(); in this container it runs the same code on
+the local device mesh (use --reduced for a smoke-scale config).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs.registry import get_config, list_archs, reduced_config
+from repro.launch.mesh import make_mesh_of, make_production_mesh
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale config (CPU container)")
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="16x16 mesh (needs 256 devices)")
+    args = ap.parse_args(argv)
+
+    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    if args.production_mesh:
+        mesh = make_production_mesh()
+    else:
+        mesh = make_mesh_of((len(jax.devices()), 1), ("data", "model"))
+
+    tcfg = TrainerConfig(
+        total_steps=args.steps, ckpt_every=args.ckpt_every,
+        ckpt_dir=args.ckpt_dir, global_batch=args.global_batch,
+        seq_len=args.seq_len, lr=args.lr)
+    trainer = Trainer(cfg, tcfg, mesh)
+    out = trainer.train()
+    print(f"done: {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,135 @@
+"""Grouped-query attention with chunked online-softmax (flash-style) in pure
+JAX.  The Pallas TPU kernel in ``repro.kernels.flash_attention`` implements
+the same contraction with explicit VMEM tiling; this module is the lowering
+path used by the dry-run (CPU container) and the oracle the kernel is tested
+against.
+
+Formulation: **repeat-KV**.  KV heads are broadcast up to the (padded) query
+head count before the contraction, so the head axis shards cleanly over
+16-way TP for every assigned GQA ratio (64/8, 40/8, 24/2, 48/8, ...) — the
+grouped 5-D formulation cannot be partitioned when kv_heads < TP degree.
+
+Memory note: naive (S x S) scores at prefill_32k would need ~17 GB/device;
+the kv-chunked online softmax keeps the transient at (S_q x C) per head,
+which is what lets ``compiled.memory_analysis()`` fit in 16 GB v5e HBM.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import softcap as apply_softcap
+
+NEG_INF = -1e30
+
+
+def repeat_kv(k: jax.Array, num_heads: int) -> jax.Array:
+    """(B, S, K, D) -> (B, S, H, D) by repeating each kv head H//K times."""
+    b, s, kh, d = k.shape
+    if kh == num_heads:
+        return k
+    reps = num_heads // kh
+    return jnp.repeat(k, reps, axis=2)
+
+
+def _mask_bias(
+    q_pos: jax.Array,  # (Sq,) absolute positions of queries
+    k_pos: jax.Array,  # (C,) absolute positions of keys (-1 = empty slot)
+    *,
+    causal: bool,
+    window: Optional[int],
+) -> jax.Array:
+    """(Sq, C) additive bias: 0 where attending is allowed, NEG_INF elsewhere."""
+    valid = (k_pos >= 0)[None, :]
+    if causal:
+        valid = valid & (k_pos[None, :] <= q_pos[:, None])
+    if window is not None:
+        valid = valid & (k_pos[None, :] > q_pos[:, None] - window)
+    return jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def attention(
+    q: jax.Array,  # (B, Sq, H, D)  (H = padded head count)
+    k: jax.Array,  # (B, Sk, K, D)
+    v: jax.Array,  # (B, Sk, K, D)
+    *,
+    q_positions: jax.Array,  # (Sq,) int32 absolute positions
+    k_positions: jax.Array,  # (Sk,) int32 absolute positions, -1 for empty
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    logit_cap: Optional[float] = None,
+    chunk_size: int = 1024,
+) -> jax.Array:
+    """GQA with online softmax over KV chunks. Returns (B, Sq, H, D)."""
+    b, sq, h, d = q.shape
+    _, sk, kh, _ = k.shape
+    assert h % kh == 0, (h, kh)
+    scale = scale if scale is not None else d ** -0.5
+
+    k = repeat_kv(k, h)
+    v = repeat_kv(v, h)
+    # scale in f32 for range, then back to the compute dtype: dots run in
+    # the input dtype with f32 accumulation (preferred_element_type) — on
+    # TPU this is the native MXU mode; an explicit f32 cast of K/V would
+    # materialize 2x-sized copies of the whole cache/sequence in HBM.
+    qf = (q.astype(jnp.float32) * scale).astype(q.dtype)
+
+    if sk <= chunk_size:
+        return _attn_block(qf, k, v, q_positions, k_positions, causal, window,
+                           logit_cap).astype(q.dtype)
+
+    # pad KV to a multiple of the chunk (padded slots get k_pos = -1)
+    n_chunks = -(-sk // chunk_size)
+    pad = n_chunks * chunk_size - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_positions = jnp.pad(k_positions, (0, pad), constant_values=-1)
+
+    kc = k.reshape(b, n_chunks, chunk_size, h, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk_size, h, d).transpose(1, 0, 2, 3, 4)
+    pc = k_positions.reshape(n_chunks, chunk_size)
+
+    def step(carry, xs):
+        m, l, acc = carry  # (B,Sq,H), (B,Sq,H), (B,Sq,H,D)
+        k_i, v_i, pos_i = xs
+        s = jnp.einsum("bqhd,bchd->bqhc", qf, k_i,
+                       preferred_element_type=jnp.float32)
+        s = apply_softcap(s, logit_cap)
+        bias = _mask_bias(q_positions, pos_i, causal=causal, window=window)
+        s = s + bias[:, None, :][None]  # (B,Sq,H,C)
+        # clamp the running max so fully-masked chunks give exp(-huge) ~ 0,
+        # not exp(0) = 1 (the classic online-softmax masking bug)
+        m_new = jnp.maximum(jnp.maximum(m, jnp.max(s, axis=-1)), 0.1 * NEG_INF)
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqhc,bchd->bqhd", p.astype(v_i.dtype), v_i,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, sq, h), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq, h), jnp.float32)
+    a0 = jnp.zeros((b, sq, h, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, pc))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.astype(q.dtype)
+
+
+def _attn_block(qf, k, v, q_positions, k_positions, causal, window, logit_cap):
+    """Single-block attention (Sk small): one stable softmax, f32 accum."""
+    s = jnp.einsum("bqhd,bchd->bqhc", qf, k,
+                   preferred_element_type=jnp.float32)
+    s = apply_softcap(s, logit_cap)
+    bias = _mask_bias(q_positions, k_positions, causal=causal, window=window)
+    s = s + bias[:, None, :][None]
+    m = jnp.maximum(jnp.max(s, axis=-1, keepdims=True), 0.1 * NEG_INF)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    p = (p / jnp.maximum(l, 1e-30)).astype(v.dtype)
+    return jnp.einsum("bqhc,bchd->bqhd", p, v,
+                      preferred_element_type=jnp.float32)

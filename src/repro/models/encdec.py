@@ -1,0 +1,343 @@
+"""Encoder-decoder backbone (whisper-medium).
+
+The audio conv frontend is a STUB per the assignment: ``input_specs()``
+supplies precomputed frame embeddings (B, S_enc, d_model).  Everything
+behind the frontend is real: sinusoidal encoder positions, learned decoder
+positions, pre-LN layernorm blocks with q/v/o biases, GELU MLPs, cross
+attention, tied decoder embedding/unembedding, ring-buffer decode cache.
+
+Param layout:
+  enc/layers/*          (L_enc-stacked: ln1, attn, ln2, mlp)
+  enc/final_norm/*
+  dec/embed/table       (Vp, d)  (tied unembed)
+  dec/pos/table         (max_positions, d)
+  dec/layers/*          (L_dec-stacked: ln1, attn, lnx, xattn, ln2, mlp)
+  dec/final_norm/*
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import layers as L
+from repro.models import mlp as mlp_lib
+from repro.models import model_zoo
+from repro.models.params import ParamTable
+from repro.models.transformer import (
+    _remat,
+    attn_out_proj,
+    cache_len,
+    head_mask,
+)
+
+
+def _add_attn(t: ParamTable, cfg, prefix: str, nl: int, *, cross=False):
+    d, kh, hd = cfg.d_model, cfg.num_kv_heads, cfg.head_dim
+    hp = cfg.num_heads_padded
+    Ls, Lr = (nl,), ("null",)
+    pad_q = None if hp == cfg.num_heads else (2, cfg.num_heads)
+    pad_o = None if hp == cfg.num_heads else (1, cfg.num_heads)
+    t.add(f"{prefix}/wq", Ls + (d, hp, hd), Lr + ("fsdp", "tensor", "null"),
+          init="fan_in", zero_pad=pad_q)
+    t.add(f"{prefix}/wk", Ls + (d, kh, hd), Lr + ("fsdp", "tensor", "null"),
+          init="fan_in")
+    t.add(f"{prefix}/wv", Ls + (d, kh, hd), Lr + ("fsdp", "tensor", "null"),
+          init="fan_in")
+    t.add(f"{prefix}/wo", Ls + (hp, hd, d), Lr + ("tensor", "null", "fsdp"),
+          init="fan_in", zero_pad=pad_o)
+    if cfg.attn_bias:
+        t.add(f"{prefix}/bq", Ls + (hp, hd), Lr + ("tensor", "null"), init="zeros")
+        t.add(f"{prefix}/bv", Ls + (kh, hd), Lr + ("tensor", "null"), init="zeros")
+        t.add(f"{prefix}/bo", Ls + (d,), Lr + ("null",), init="zeros")
+
+
+def _add_norm(t, cfg, path, nl=None):
+    Ls = () if nl is None else (nl,)
+    Lr = () if nl is None else ("null",)
+    t.add(f"{path}/scale", Ls + (cfg.d_model,), Lr + ("null",), init="ones")
+    t.add(f"{path}/bias", Ls + (cfg.d_model,), Lr + ("null",), init="zeros")
+
+
+def param_table(cfg) -> ParamTable:
+    t = ParamTable(cfg)
+    d = cfg.d_model
+    vp = cfg.vocab_padded
+    le, ld = cfg.num_encoder_layers, cfg.num_layers
+
+    # encoder
+    _add_norm(t, cfg, "enc/layers/ln1", le)
+    _add_attn(t, cfg, "enc/layers/attn", le)
+    _add_norm(t, cfg, "enc/layers/ln2", le)
+    mlp_lib.add_mlp_params(t, cfg, "enc/layers/mlp", le)
+    _add_norm(t, cfg, "enc/final_norm")
+
+    # decoder
+    t.add("dec/embed/table", (vp, d), ("tensor", "fsdp"), init="normal")
+    t.add("dec/pos/table", (cfg.max_positions, d), ("null", "fsdp"),
+          init="normal")
+    _add_norm(t, cfg, "dec/layers/ln1", ld)
+    _add_attn(t, cfg, "dec/layers/attn", ld)
+    _add_norm(t, cfg, "dec/layers/lnx", ld)
+    _add_attn(t, cfg, "dec/layers/xattn", ld, cross=True)
+    _add_norm(t, cfg, "dec/layers/ln2", ld)
+    mlp_lib.add_mlp_params(t, cfg, "dec/layers/mlp", ld)
+    _add_norm(t, cfg, "dec/final_norm")
+    return t
+
+
+# --------------------------------------------------------------------------- #
+def _ln(cfg, x, p):
+    return L.layernorm(x, p["scale"], p["bias"], cfg.norm_eps)
+
+
+def _proj_qkv(cfg, p, xq, xkv, shd):
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", xkv, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", xkv, p["wv"])
+    if cfg.attn_bias:
+        q = q + p["bq"]
+        v = v + p["bv"]
+    return shd.act_bthd(q), shd.ws(k, "batch", None, "tensor", None), v
+
+
+def _attn_out(cfg, p, out, shd):
+    y = attn_out_proj(cfg, {"wo": p["wo"]}, out, shd)
+    if cfg.attn_bias:
+        y = y + p["bo"]
+    return y
+
+
+def _attend(cfg, q, k, v, q_pos, k_pos, causal, window=None):
+    return attn_lib.attention(
+        q, k, v, q_positions=q_pos, k_positions=k_pos, causal=causal,
+        window=window, scale=cfg.attn_scale_override,
+        logit_cap=cfg.attn_logit_softcap)
+
+
+def sinusoid_positions(s: int, d: int, dtype) -> jax.Array:
+    pos = jnp.arange(s, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-jnp.log(10000.0) * dim / (d // 2 - 1))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=1).astype(dtype)
+
+
+def encode(cfg, params, frames, shd):
+    """frames: (B, S_enc, d) stub embeddings -> encoder output (B,S_enc,d)."""
+    b, s, d = frames.shape
+    x = frames.astype(cfg.dtype) + sinusoid_positions(s, d, cfg.dtype)[None]
+    x = shd.act_btd(x)
+    pos = jnp.arange(s, dtype=jnp.int32)
+
+    def layer(p, x):
+        h = _ln(cfg, x, p["ln1"])
+        q, k, v = _proj_qkv(cfg, p["attn"], h, h, shd)
+        out = _attend(cfg, q, k, v, pos, pos, causal=False)
+        x = x + _attn_out(cfg, p["attn"], shd.act_bthd(out), shd)
+        h = _ln(cfg, x, p["ln2"])
+        return (x + mlp_lib.mlp(cfg, p["mlp"], h, shd),)
+
+    body = _remat(cfg, layer)
+    if cfg.scan_layers:
+        (x,), _ = jax.lax.scan(lambda c, p: (body(p, c[0]), None), (x,),
+                               params["enc"]["layers"])
+    else:
+        for i in range(cfg.num_encoder_layers):
+            p_i = jax.tree.map(lambda a: a[i], params["enc"]["layers"])
+            (x,) = body(p_i, x)
+    return _ln(cfg, x, params["enc"]["final_norm"])
+
+
+def _dec_layer(cfg, p, x, shd, q_pos, enc_kv, enc_pos):
+    h = _ln(cfg, x, p["ln1"])
+    q, k, v = _proj_qkv(cfg, p["attn"], h, h, shd)
+    out = _attend(cfg, q, k, v, q_pos, q_pos, causal=True)
+    x = x + _attn_out(cfg, p["attn"], shd.act_bthd(out), shd)
+
+    h = _ln(cfg, x, p["lnx"])
+    qx = jnp.einsum("bsd,dhk->bshk", h, p["xattn"]["wq"])
+    if cfg.attn_bias:
+        qx = qx + p["xattn"]["bq"]
+    ek, ev = enc_kv
+    out = _attend(cfg, shd.act_bthd(qx), ek, ev, q_pos, enc_pos, causal=False)
+    x = x + _attn_out(cfg, p["xattn"], shd.act_bthd(out), shd)
+
+    h = _ln(cfg, x, p["ln2"])
+    return x + mlp_lib.mlp(cfg, p["mlp"], h, shd), None
+
+
+def forward(cfg, params, tokens, frames, shd):
+    """Teacher-forced enc-dec forward -> (logits (B,S,Vp), aux=0)."""
+    enc_out = encode(cfg, params, frames, shd)
+    enc_pos = jnp.arange(enc_out.shape[1], dtype=jnp.int32)
+
+    b, s = tokens.shape
+    q_pos = jnp.arange(s, dtype=jnp.int32)
+    x = L.embed_lookup(params["dec"]["embed"]["table"], tokens).astype(cfg.dtype)
+    x = x + params["dec"]["pos"]["table"][:s][None].astype(cfg.dtype)
+    x = shd.act_btd(x)
+
+    def layer(p, x):
+        # cross-attention K/V projected per layer from the encoder output
+        ek = jnp.einsum("bsd,dhk->bshk", enc_out, p["xattn"]["wk"])
+        ev = jnp.einsum("bsd,dhk->bshk", enc_out, p["xattn"]["wv"])
+        if cfg.attn_bias:
+            ev = ev + p["xattn"]["bv"]
+        y, _ = _dec_layer(cfg, p, x, shd, q_pos, (ek, ev), enc_pos)
+        return (y,)
+
+    body = _remat(cfg, layer)
+    if cfg.scan_layers:
+        (x,), _ = jax.lax.scan(lambda c, p: (body(p, c[0]), None), (x,),
+                               params["dec"]["layers"])
+    else:
+        for i in range(cfg.num_layers):
+            p_i = jax.tree.map(lambda a: a[i], params["dec"]["layers"])
+            (x,) = body(p_i, x)
+
+    x = _ln(cfg, x, params["dec"]["final_norm"])
+    logits = jnp.einsum("bsd,vd->bsv", x, params["dec"]["embed"]["table"])
+    return shd.act_btv(logits), jnp.float32(0.0)
+
+
+# --------------------------------------------------------------------------- #
+# Decode: ring-buffer self cache + precomputed cross K/V
+# --------------------------------------------------------------------------- #
+def init_cache_abstract(cfg, shd, batch: int, seq_len: int):
+    from repro.core import brick_attention as brick
+
+    w = cache_len(cfg, seq_len)
+    kh, hd, nl = cfg.num_kv_heads, cfg.head_dim, cfg.num_layers
+    se = cfg.encoder_seq_len
+    dt = jnp.dtype(cfg.dtype)
+    seq_role = "tensor" if brick.brick_active(cfg, shd, w) else "null"
+
+    def sds(shape, roles, dtype=dt):
+        return jax.ShapeDtypeStruct(shape, dtype, sharding=shd.named(roles, shape))
+
+    kv_roles = ("null", "batch", seq_role,
+                "tensor" if seq_role == "null" else "null", "null")
+    return {
+        "k": sds((nl, batch, w, kh, hd), kv_roles),
+        "v": sds((nl, batch, w, kh, hd), kv_roles),
+        "xk": sds((nl, batch, se, kh, hd), ("null", "batch", "null", "tensor", "null")),
+        "xv": sds((nl, batch, se, kh, hd), ("null", "batch", "null", "tensor", "null")),
+        "kpos": sds((w,), ("null",), jnp.int32),
+        "t": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def init_cache(cfg, shd, batch: int, seq_len: int):
+    abs_cache = init_cache_abstract(cfg, shd, batch, seq_len)
+    cache = {k: jnp.zeros(s.shape, s.dtype) for k, s in abs_cache.items()}
+    cache["kpos"] = cache["kpos"] - 1
+    return cache
+
+
+def prefill_cross_cache(cfg, params, frames, shd, cache):
+    """Run the encoder once and fill the cross-attention K/V."""
+    enc_out = encode(cfg, params, frames, shd)
+
+    def proj(p):
+        ek = jnp.einsum("bsd,dhk->bshk", enc_out, p["xattn"]["wk"])
+        ev = jnp.einsum("bsd,dhk->bshk", enc_out, p["xattn"]["wv"])
+        if cfg.attn_bias:
+            ev = ev + p["xattn"]["bv"]
+        return ek.astype(cfg.dtype), ev.astype(cfg.dtype)
+
+    ks, vs = [], []
+    for i in range(cfg.num_layers):
+        p_i = jax.tree.map(lambda a: a[i], params["dec"]["layers"])
+        ek, ev = proj(p_i)
+        ks.append(ek)
+        vs.append(ev)
+    cache = dict(cache)
+    cache["xk"] = jnp.stack(ks)
+    cache["xv"] = jnp.stack(vs)
+    return cache
+
+
+def decode_step(cfg, params, cache, tokens, shd):
+    from repro.core import brick_attention as brick
+
+    t = cache["t"]
+    w = cache["k"].shape[2]
+    use_brick = brick.brick_active(cfg, shd, w)
+    slot = jnp.mod(t, w)
+    kpos = cache["kpos"].at[slot].set(t)
+    q_pos = t[None].astype(jnp.int32)
+    enc_pos = jnp.arange(cfg.encoder_seq_len, dtype=jnp.int32)
+
+    x = L.embed_lookup(params["dec"]["embed"]["table"], tokens).astype(cfg.dtype)
+    pos_embed = jax.lax.dynamic_slice_in_dim(
+        params["dec"]["pos"]["table"], jnp.clip(t, 0, cfg.max_positions - 1), 1, 0)
+    x = x + pos_embed[None].astype(cfg.dtype)
+    x = shd.act_btd(x)
+
+    def scan_fn(x, xs):
+        p, k_i, v_i, xk_i, xv_i = xs
+        h = _ln(cfg, x, p["ln1"])
+        q, k_new, v_new = _proj_qkv(cfg, p["attn"], h, h, shd)
+        if use_brick:
+            out, k_i, v_i = brick.decode_attention(
+                cfg, shd, q, k_i, v_i, kpos, k_new, v_new, slot, t)
+        else:
+            k_i = jax.lax.dynamic_update_slice_in_dim(
+                k_i, k_new.astype(k_i.dtype), slot, 1)
+            v_i = jax.lax.dynamic_update_slice_in_dim(
+                v_i, v_new.astype(v_i.dtype), slot, 1)
+            out = _attend(cfg, q, k_i, v_i, q_pos, kpos, causal=True)
+        x = x + _attn_out(cfg, p["attn"], out, shd)
+
+        h = _ln(cfg, x, p["lnx"])
+        qx = jnp.einsum("bsd,dhk->bshk", h, p["xattn"]["wq"])
+        if cfg.attn_bias:
+            qx = qx + p["xattn"]["bq"]
+        out = _attend(cfg, qx, xk_i, xv_i, q_pos, enc_pos, causal=False)
+        x = x + _attn_out(cfg, p["xattn"], out, shd)
+
+        h = _ln(cfg, x, p["ln2"])
+        x = x + mlp_lib.mlp(cfg, p["mlp"], h, shd)
+        return x, (k_i, v_i)
+
+    x, (k, v) = jax.lax.scan(
+        scan_fn, x,
+        (params["dec"]["layers"], cache["k"], cache["v"], cache["xk"],
+         cache["xv"]))
+
+    x = _ln(cfg, x, params["dec"]["final_norm"])
+    logits = jnp.einsum("bsd,vd->bsv", x, params["dec"]["embed"]["table"])
+    new_cache = dict(cache, k=k, v=v, kpos=kpos, t=t + 1)
+    return shd.act_btv(logits), new_cache
+
+
+# --------------------------------------------------------------------------- #
+def build(cfg) -> "model_zoo.Model":
+    table = param_table(cfg)
+
+    def fwd(params, batch, shd):
+        return forward(cfg, params, batch["tokens"], batch["frames"], shd)
+
+    def dec(params, cache, tokens, shd):
+        return decode_step(cfg, params, cache, tokens, shd)
+
+    def extra(shape, shd):
+        if shape.kind in ("train", "prefill"):
+            sh = (shape.global_batch, cfg.encoder_seq_len, cfg.d_model)
+            return {"frames": jax.ShapeDtypeStruct(
+                sh, jnp.dtype(cfg.dtype),
+                sharding=shd.named(("batch", None, None), sh))}
+        return {}
+
+    return model_zoo.Model(
+        cfg=cfg,
+        table=table,
+        forward=fwd,
+        decode_step=dec,
+        init_cache_abstract=lambda shd, b, s: init_cache_abstract(cfg, shd, b, s),
+        init_cache=lambda shd, b, s: init_cache(cfg, shd, b, s),
+        extra_inputs=extra,
+    )

@@ -1,0 +1,252 @@
+"""Hybrid recurrent/attention LM (RecurrentGemma-9B / Griffin).
+
+Block pattern: (recurrent, recurrent, local-attention) repeated.  38 layers
+= 12 super-blocks of 3 + a tail of 2 recurrent blocks; the 12 super-blocks
+run under one lax.scan (stacked params), the tail is unrolled — keeping the
+compiled HLO at ~one super-block regardless of depth.
+
+Each block unit is a Griffin residual pair: x += temporal(norm(x));
+x += geglu_mlp(norm(x)).  Temporal is either the RG-LRU recurrent block
+(models/rglru.py) or local sliding-window MQA attention.
+
+Decode state: per recurrent layer an RG-LRU hidden (B, W_lru) f32 + conv
+state (B, 3, W_lru); per attention layer a ring KV cache bounded by the
+attention window (2048) — this is why long_500k decode is O(window), the
+sub-quadratic property the cell requires.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import layers as L
+from repro.models import mlp as mlp_lib
+from repro.models import model_zoo
+from repro.models import rglru
+from repro.models.params import ParamTable
+from repro.models.transformer import (
+    _remat,
+    add_attn_layer_params,
+    attn_out_proj,
+    attn_qkv,
+    embed_tokens,
+    head_mask,
+    unembed,
+)
+
+
+def _pattern(cfg):
+    """Returns (n_super, tail): 38 -> (12, ('rec','rec'))."""
+    unit = cfg.block_pattern or ("rec", "rec", "attn")
+    n_super = cfg.num_layers // len(unit)
+    n_tail = cfg.num_layers - n_super * len(unit)
+    return unit, n_super, unit[:n_tail]
+
+
+def param_table(cfg) -> ParamTable:
+    t = ParamTable(cfg)
+    d, vp = cfg.d_model, cfg.vocab_padded
+    unit, n_super, tail = _pattern(cfg)
+
+    t.add("embed/table", (vp, d), ("tensor", "fsdp"), init="normal")
+    t.add("final_norm/scale", (d,), ("null",), init="zeros")
+
+    for j, kind in enumerate(unit):
+        prefix = f"blocks/u{j}"
+        if kind == "rec":
+            t.add(f"{prefix}/ln1/scale", (n_super, d), ("null", "null"), init="zeros")
+            t.add(f"{prefix}/ln2/scale", (n_super, d), ("null", "null"), init="zeros")
+            rglru.add_recurrent_params(t, cfg, f"{prefix}/rec", n_super)
+            mlp_lib.add_mlp_params(t, cfg, f"{prefix}/mlp", n_super)
+        else:
+            add_attn_layer_params(t, cfg, prefix, n_super)
+            mlp_lib.add_mlp_params(t, cfg, f"{prefix}/mlp", n_super)
+    for j, kind in enumerate(tail):
+        prefix = f"tail/u{j}"
+        t.add(f"{prefix}/ln1/scale", (d,), ("null",), init="zeros")
+        t.add(f"{prefix}/ln2/scale", (d,), ("null",), init="zeros")
+        rglru.add_recurrent_params(t, cfg, f"{prefix}/rec", None)
+        mlp_lib.add_mlp_params(t, cfg, f"{prefix}/mlp", None)
+    return t
+
+
+# --------------------------------------------------------------------------- #
+def _rec_unit(cfg, p, x, shd, *, h0=None, conv0=None, decode=False):
+    h = L.norm(cfg, x, p["ln1"]["scale"])
+    y, (h_last, conv_state) = rglru.recurrent_block(
+        cfg, p["rec"], h, shd, h0=h0, conv_state=conv0, decode=decode)
+    x = x + y
+    h = L.norm(cfg, x, p["ln2"]["scale"])
+    x = x + mlp_lib.mlp(cfg, p["mlp"], h, shd)
+    return x, (h_last, conv_state)
+
+
+def _attn_unit(cfg, p, x, shd, positions):
+    h = L.norm(cfg, x, p["ln1"]["scale"])
+    q, k, v = attn_qkv(cfg, p["attn"], h, shd, positions)
+    out = attn_lib.attention(
+        q, k, v, q_positions=positions, k_positions=positions, causal=True,
+        window=cfg.attention_window, scale=cfg.attn_scale_override,
+        logit_cap=cfg.attn_logit_softcap)
+    x = x + attn_out_proj(cfg, p["attn"], shd.act_bthd(out), shd)
+    h = L.norm(cfg, x, p["ln2"]["scale"])
+    return x + mlp_lib.mlp(cfg, p["mlp"], h, shd)
+
+
+def forward(cfg, params, tokens, shd):
+    b, s = tokens.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+    x = embed_tokens(cfg, params, tokens, shd)
+    unit, n_super, tail = _pattern(cfg)
+
+    def super_block(p, x):
+        for j, kind in enumerate(unit):
+            pj = p[f"u{j}"]
+            if kind == "rec":
+                x, _ = _rec_unit(cfg, pj, x, shd)
+            else:
+                x = _attn_unit(cfg, pj, x, shd, positions)
+        return (x,)
+
+    body = _remat(cfg, super_block)
+    if cfg.scan_layers:
+        (x,), _ = jax.lax.scan(lambda c, p: (body(p, c[0]), None), (x,),
+                               params["blocks"])
+    else:
+        for i in range(n_super):
+            p_i = jax.tree.map(lambda a: a[i], params["blocks"])
+            (x,) = body(p_i, x)
+
+    for j, kind in enumerate(tail):
+        x, _ = _rec_unit(cfg, params["tail"][f"u{j}"], x, shd)
+
+    x = L.norm(cfg, x, params["final_norm"]["scale"])
+    return unembed(cfg, params, x, shd), jnp.float32(0.0)
+
+
+# --------------------------------------------------------------------------- #
+# Decode
+# --------------------------------------------------------------------------- #
+def init_cache_abstract(cfg, shd, batch: int, seq_len: int):
+    unit, n_super, tail = _pattern(cfg)
+    n_rec_scan = sum(1 for k in unit if k == "rec")
+    w_attn = min(seq_len, cfg.attention_window or seq_len)
+    w_lru = cfg.lru_width or cfg.d_model
+    kh, hd = cfg.num_kv_heads, cfg.head_dim
+    ct = cfg.conv1d_width - 1
+    dt = jnp.dtype(cfg.dtype)
+
+    def sds(shape, roles, dtype=dt):
+        return jax.ShapeDtypeStruct(shape, dtype, sharding=shd.named(roles, shape))
+
+    cache = {
+        # recurrent states for the scanned super-blocks, one slot per rec
+        # unit position: (n_rec_in_unit, n_super, B, ...)
+        "lru_h": sds((n_rec_scan, n_super, batch, w_lru),
+                     ("null", "null", "batch", "tensor"), jnp.float32),
+        "conv": sds((n_rec_scan, n_super, batch, ct, w_lru),
+                    ("null", "null", "batch", "null", "tensor")),
+        "k": sds((n_super, batch, w_attn, kh, hd),
+                 ("null", "batch", "null", "tensor", "null")),
+        "v": sds((n_super, batch, w_attn, kh, hd),
+                 ("null", "batch", "null", "tensor", "null")),
+        "kpos": sds((w_attn,), ("null",), jnp.int32),
+        "t": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    for j in range(len(tail)):
+        cache[f"tail{j}_h"] = sds((batch, w_lru), ("batch", "tensor"),
+                                  jnp.float32)
+        cache[f"tail{j}_conv"] = sds((batch, ct, w_lru),
+                                     ("batch", "null", "tensor"))
+    return cache
+
+
+def init_cache(cfg, shd, batch: int, seq_len: int):
+    abs_cache = init_cache_abstract(cfg, shd, batch, seq_len)
+    cache = {k: jnp.zeros(s.shape, s.dtype) for k, s in abs_cache.items()}
+    cache["kpos"] = cache["kpos"] - 1
+    return cache
+
+
+def decode_step(cfg, params, cache, tokens, shd):
+    t = cache["t"]
+    w = cache["k"].shape[2]
+    slot = jnp.mod(t, w)
+    positions = t[None].astype(jnp.int32)
+    kpos = cache["kpos"].at[slot].set(t)
+    unit, n_super, tail = _pattern(cfg)
+
+    x = embed_tokens(cfg, params, tokens, shd)
+
+    def scan_fn(x, xs):
+        p, lru_h, conv, k_i, v_i = xs
+        ri = 0
+        new_h, new_conv = [], []
+        for j, kind in enumerate(unit):
+            pj = p[f"u{j}"]
+            if kind == "rec":
+                x, (h_last, cstate) = _rec_unit(
+                    cfg, pj, x, shd, h0=lru_h[ri], conv0=conv[ri], decode=True)
+                new_h.append(h_last)
+                new_conv.append(cstate)
+                ri += 1
+            else:
+                h = L.norm(cfg, x, pj["ln1"]["scale"])
+                q, k_new, v_new = attn_qkv(cfg, pj["attn"], h, shd, positions)
+                k_i = jax.lax.dynamic_update_slice_in_dim(
+                    k_i, k_new.astype(k_i.dtype), slot, 1)
+                v_i = jax.lax.dynamic_update_slice_in_dim(
+                    v_i, v_new.astype(v_i.dtype), slot, 1)
+                out = attn_lib.attention(
+                    q, k_i, v_i, q_positions=positions, k_positions=kpos,
+                    causal=True, window=cfg.attention_window,
+                    scale=cfg.attn_scale_override,
+                    logit_cap=cfg.attn_logit_softcap)
+                x = x + attn_out_proj(cfg, pj["attn"], out, shd)
+                h = L.norm(cfg, x, pj["ln2"]["scale"])
+                x = x + mlp_lib.mlp(cfg, pj["mlp"], h, shd)
+        return x, (jnp.stack(new_h), jnp.stack(new_conv), k_i, v_i)
+
+    x, (lru_h, conv, k, v) = jax.lax.scan(
+        scan_fn, x,
+        (params["blocks"], cache["lru_h"].transpose(1, 0, 2, 3),
+         cache["conv"].transpose(1, 0, 2, 3, 4), cache["k"], cache["v"]))
+
+    new_cache = dict(cache)
+    new_cache["lru_h"] = lru_h.transpose(1, 0, 2, 3)
+    new_cache["conv"] = conv.transpose(1, 0, 2, 3, 4)
+    new_cache["k"] = k
+    new_cache["v"] = v
+
+    for j, kind in enumerate(tail):
+        x, (h_last, cstate) = _rec_unit(
+            cfg, params["tail"][f"u{j}"], x, shd,
+            h0=cache[f"tail{j}_h"], conv0=cache[f"tail{j}_conv"], decode=True)
+        new_cache[f"tail{j}_h"] = h_last
+        new_cache[f"tail{j}_conv"] = cstate
+
+    x = L.norm(cfg, x, params["final_norm"]["scale"])
+    logits = unembed(cfg, params, x, shd)
+    new_cache["kpos"] = kpos
+    new_cache["t"] = t + 1
+    return logits, new_cache
+
+
+# --------------------------------------------------------------------------- #
+def build(cfg) -> "model_zoo.Model":
+    table = param_table(cfg)
+
+    def fwd(params, batch, shd):
+        return forward(cfg, params, batch["tokens"], shd)
+
+    return model_zoo.Model(
+        cfg=cfg,
+        table=table,
+        forward=fwd,
+        decode_step=lambda params, cache, tokens, shd: decode_step(
+            cfg, params, cache, tokens, shd),
+        init_cache_abstract=lambda shd, b, s: init_cache_abstract(cfg, shd, b, s),
+        init_cache=lambda shd, b, s: init_cache(cfg, shd, b, s),
+        extra_inputs=lambda shape, shd: {},
+    )

@@ -1,0 +1,104 @@
+"""Shared neural-net layers (pure JAX, no framework deps).
+
+Numerics: parameters/activations in cfg.dtype (bf16 target), all norm and
+softmax statistics accumulated in f32.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(
+    x: jax.Array, scale: jax.Array, bias: Optional[jax.Array], eps: float
+) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mean) * jax.lax.rsqrt(var + eps)
+    out = out * scale.astype(jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def norm(cfg, x: jax.Array, scale: jax.Array, bias: Optional[jax.Array] = None):
+    if cfg.norm_style == "layernorm":
+        return layernorm(x, scale, bias, cfg.norm_eps)
+    return rmsnorm(x, scale, cfg.norm_eps)
+
+
+def embed_lookup(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    """(V, d) table, integer tokens -> (..., d). one_hot-free gather."""
+    return jnp.take(table, tokens, axis=0)
+
+
+# --------------------------------------------------------------------------- #
+# Rotary position embeddings
+# --------------------------------------------------------------------------- #
+def rope_frequencies(head_dim: int, theta: float, rotary_dim: Optional[int] = None):
+    rd = rotary_dim or head_dim
+    exponent = jnp.arange(0, rd, 2, dtype=jnp.float32) / rd
+    return 1.0 / (theta ** exponent)  # (rd/2,)
+
+
+def apply_rope(
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    theta: float,
+    style: str = "neox",
+) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) or (S,) int32.
+
+    style:
+      neox  – rotate-half over the full head dim (llama/qwen/starcoder2)
+      half  – rotary applied to the first half of the head dim only,
+              interleaved pairs (chatglm "2d"/partial rotary)
+      none  – identity
+    """
+    if style == "none":
+        return x
+    b, s, h, d = x.shape
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    pos = positions.astype(jnp.float32)[:, :, None, None]  # (B,S,1,1)
+
+    if style == "neox":
+        freqs = rope_frequencies(d, theta)  # (d/2,)
+        angles = pos * freqs  # (B,S,1,d/2)
+        sin, cos = jnp.sin(angles), jnp.cos(angles)
+        x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+        out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+        return out.astype(x.dtype)
+
+    if style == "half":
+        rd = d // 2
+        freqs = rope_frequencies(d, theta, rotary_dim=rd)  # (rd/2,)
+        angles = pos * freqs  # (B,S,1,rd/2)
+        sin, cos = jnp.sin(angles), jnp.cos(angles)
+        xr = x[..., :rd].astype(jnp.float32)
+        xp = x[..., rd:]
+        x_even = xr[..., 0::2]
+        x_odd = xr[..., 1::2]
+        rot_even = x_even * cos - x_odd * sin
+        rot_odd = x_odd * cos + x_even * sin
+        xr_out = jnp.stack([rot_even, rot_odd], axis=-1).reshape(xr.shape)
+        return jnp.concatenate([xr_out.astype(x.dtype), xp], axis=-1)
+
+    raise ValueError(f"unknown rope style {style!r}")
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)

@@ -1,0 +1,47 @@
+"""Feed-forward blocks: gated (SwiGLU/GeGLU) and plain GELU MLPs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mlp(cfg, p: dict, x: jax.Array, shd) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d).  p holds w_in/(w_gate)/w_out."""
+    if cfg.mlp_style in ("swiglu", "geglu"):
+        gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        up = jnp.einsum("bsd,df->bsf", x, p["w_in"])
+        gate = shd.act_btf(gate)
+        up = shd.act_btf(up)
+        act = jax.nn.silu if cfg.mlp_style == "swiglu" else _gelu
+        h = act(gate) * up
+    elif cfg.mlp_style == "gelu":
+        h = _gelu(jnp.einsum("bsd,df->bsf", x, p["w_in"]) + p["b_in"])
+        h = shd.act_btf(h)
+    else:
+        raise ValueError(cfg.mlp_style)
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_out"])
+    if "b_out" in p:
+        out = out + p["b_out"]
+    return shd.act_btd(out)
+
+
+def _gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def add_mlp_params(table, cfg, prefix: str, layers: int | None = None):
+    """Register MLP params; ``layers`` adds a leading scan-stack dim."""
+    L = () if layers is None else (layers,)
+    Lr = () if layers is None else ("null",)
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.mlp_style in ("swiglu", "geglu"):
+        table.add(f"{prefix}/w_gate", L + (d, f), Lr + ("fsdp", "tensor"), init="fan_in")
+        table.add(f"{prefix}/w_in", L + (d, f), Lr + ("fsdp", "tensor"), init="fan_in")
+        table.add(f"{prefix}/w_out", L + (f, d), Lr + ("tensor", "fsdp"), init="fan_in")
+    elif cfg.mlp_style == "gelu":
+        table.add(f"{prefix}/w_in", L + (d, f), Lr + ("fsdp", "tensor"), init="fan_in")
+        table.add(f"{prefix}/b_in", L + (f,), Lr + ("tensor",), init="zeros")
+        table.add(f"{prefix}/w_out", L + (f, d), Lr + ("tensor", "fsdp"), init="fan_in")
+        table.add(f"{prefix}/b_out", L + (d,), Lr + ("null",), init="zeros")
+    else:
+        raise ValueError(cfg.mlp_style)

@@ -1,0 +1,99 @@
+"""Family dispatch: one ``Model`` facade per architecture family.
+
+Every family exposes the same functional surface so the launcher, dry-run,
+trainer and JSE treat all 10 assigned architectures uniformly:
+
+  param_table()                       -> ParamTable
+  forward(params, batch, shd)         -> (logits, aux_loss)     train/prefill
+  init_cache_abstract(shd, B, S)      -> cache SDS pytree        decode
+  decode_step(params, cache, tok, shd)-> (logits, cache)
+  input_specs(shape, shd)             -> abstract batch pytree
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.models import transformer
+from repro.models.params import ParamTable
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: object
+    table: ParamTable
+    forward: Callable  # (params, batch, shd) -> (logits, aux)
+    decode_step: Callable  # (params, cache, tokens, shd) -> (logits, cache)
+    init_cache_abstract: Callable  # (shd, batch, seq_len) -> pytree
+    init_cache: Callable
+    extra_inputs: Callable  # (shape, shd) -> dict of extra abstract inputs
+
+
+def _token_sds(shd, batch, seq):
+    return jax.ShapeDtypeStruct(
+        (batch, seq), jnp.int32,
+        sharding=shd.named(("batch", None), (batch, seq)))
+
+
+def input_specs(model: Model, shape, shd) -> dict:
+    """Abstract (ShapeDtypeStruct) inputs for one shape cell."""
+    cfg = model.cfg
+    if shape.kind in ("train", "prefill"):
+        specs = {
+            "tokens": _token_sds(shd, shape.global_batch, shape.seq_len),
+            "labels": _token_sds(shd, shape.global_batch, shape.seq_len),
+        }
+    else:  # decode: one new token, cache of seq_len
+        specs = {"tokens": _token_sds(shd, shape.global_batch, 1)}
+    specs.update(model.extra_inputs(shape, shd))
+    return specs
+
+
+# --------------------------------------------------------------------------- #
+def build_model(cfg) -> Model:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return _decoder_lm(cfg)
+    if cfg.family == "audio":
+        from repro.models import encdec
+        return encdec.build(cfg)
+    if cfg.family == "hybrid":
+        from repro.models import hybrid
+        return hybrid.build(cfg)
+    if cfg.family == "ssm":
+        from repro.models import xlstm
+        return xlstm.build(cfg)
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+def _decoder_lm(cfg) -> Model:
+    table = transformer.param_table(cfg)
+
+    def fwd(params, batch, shd):
+        return transformer.forward(cfg, params, batch["tokens"], shd,
+                                   patch_embeds=batch.get("patch_embeds"))
+
+    def dec(params, cache, tokens, shd):
+        return transformer.decode_step(cfg, params, cache, tokens, shd)
+
+    def extra(shape, shd):
+        if cfg.num_patches and shape.kind in ("train", "prefill"):
+            sh = (shape.global_batch, cfg.num_patches, cfg.d_model)
+            return {"patch_embeds": jax.ShapeDtypeStruct(
+                sh, jnp.dtype(cfg.dtype),
+                sharding=shd.named(("batch", None, None), sh))}
+        return {}
+
+    return Model(
+        cfg=cfg,
+        table=table,
+        forward=fwd,
+        decode_step=dec,
+        init_cache_abstract=lambda shd, b, s: transformer.init_cache_abstract(
+            cfg, shd, b, s),
+        init_cache=lambda shd, b, s: transformer.init_cache(cfg, shd, b, s),
+        extra_inputs=extra,
+    )

@@ -1,0 +1,108 @@
+"""Mixture-of-Experts block: grouped top-k routing with capacity dropping.
+
+Implementation is the MaxText/Switch "grouped one-hot dispatch" formulation:
+tokens are split into routing groups of ``cfg.moe_group_size`` so the dispatch
+tensor is (G, Sg, E, C) with C = Sg * topk / E * capacity_factor — memory
+scales linearly in group size instead of quadratically in tokens.
+
+Sharding strategies (cfg.moe_sharding):
+  "tp": experts replicated across the model axis, d_ff sharded (grok-1:
+        8 experts do not divide 16-way TP; expert compute stays local and
+        only activation collectives occur — the GEPS-faithful choice).
+  "ep": expert dim sharded over the model axis (phi3.5-moe: 16 experts ==
+        16-way axis; dispatch becomes an all-to-all, the classic EP layout).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_capacity(cfg, group_size: int) -> int:
+    c = int(
+        math.ceil(group_size * cfg.num_experts_per_tok / cfg.num_experts
+                  * cfg.moe_capacity_factor)
+    )
+    return max(8, ((c + 7) // 8) * 8)  # round to 8 for lane alignment
+
+
+def moe_block(cfg, p: dict, x: jax.Array, shd):
+    """x: (B, S, d) -> ((B, S, d), aux_loss scalar f32)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    sg = min(cfg.moe_group_size, s)
+    assert s % sg == 0, (s, sg)
+    g = b * (s // sg)
+    cap = moe_capacity(cfg, sg)
+
+    xg = x.reshape(g, sg, d)
+    xg = shd.ws(xg, "batch", None, None)
+
+    # --- router (f32) ---
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)  # (G,Sg,E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (G,Sg,k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # --- load-balancing auxiliary loss (Switch) ---
+    me = jnp.mean(probs, axis=(0, 1))  # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_idx, e, dtype=jnp.float32), axis=2),
+        axis=(0, 1),
+    )  # fraction of tokens routed to each expert
+    aux_loss = e * jnp.sum(me * ce)
+
+    # --- capacity assignment: position of each token in its expert queue ---
+    onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.float32)  # (G,Sg,k,E)
+    # priority: earlier tokens first; cumulative count per expert
+    pos_in_expert = jnp.cumsum(onehot.reshape(g, sg * k, e), axis=1) - 1.0
+    pos_in_expert = pos_in_expert.reshape(g, sg, k, e)
+    within_cap = (pos_in_expert < cap) & (onehot > 0)
+    cap_idx = jnp.sum(pos_in_expert * onehot, axis=-1).astype(jnp.int32)  # (G,Sg,k)
+
+    # dispatch (G,Sg,E,C) / combine (G,Sg,E,C) tensors
+    cap_onehot = jax.nn.one_hot(cap_idx, cap, dtype=jnp.float32)  # (G,Sg,k,C)
+    mask = jnp.where(within_cap, onehot, 0.0)  # (G,Sg,k,E)
+    dispatch = jnp.einsum("gske,gskc->gsec", mask, cap_onehot)
+    combine = jnp.einsum("gske,gskc,gsk->gsec", mask, cap_onehot,
+                         gate_vals.astype(jnp.float32))
+
+    dispatch = shd.ws(dispatch.astype(x.dtype), "batch", None, "expert", None)
+
+    # --- expert computation ---
+    xe = jnp.einsum("gsd,gsec->egcd", xg, dispatch)  # (E,G,C,d)
+    xe = shd.ws(xe, "expert", "batch", None, None)
+    gate = jnp.einsum("egcd,edf->egcf", xe, p["w_gate"])
+    up = jnp.einsum("egcd,edf->egcf", xe, p["w_in"])
+    gate = shd.ws(gate, "expert", "batch", None, "moe_ff")
+    up = shd.ws(up, "expert", "batch", None, "moe_ff")
+    h = jax.nn.silu(gate) * up
+    ye = jnp.einsum("egcf,efd->egcd", h, p["w_out"])  # (E,G,C,d)
+    ye = shd.ws(ye, "expert", "batch", None, None)
+
+    # --- combine back to token order ---
+    # combine in the compute dtype: an f32 combine tensor would make every
+    # backward cotangent f32, doubling all expert weight-grad stacks (on
+    # TPU the MXU accumulates bf16 dots in f32 anyway)
+    out = jnp.einsum("egcd,gsec->gsd", ye,
+                     combine.astype(ye.dtype)).astype(x.dtype)
+    out = out.reshape(b, s, d)
+    return shd.act_btd(out), aux_loss
+
+
+def add_moe_params(table, cfg, prefix: str, layers: int | None = None):
+    L = () if layers is None else (layers,)
+    Lr = () if layers is None else ("null",)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    table.add(f"{prefix}/router", L + (d, e), Lr + ("fsdp", "null"),
+              init="fan_in", dtype="float32")
+    table.add(f"{prefix}/w_gate", L + (e, d, f), Lr + ("expert", "moe_d", "moe_ff"),
+              init="fan_in")
+    table.add(f"{prefix}/w_in", L + (e, d, f), Lr + ("expert", "moe_d", "moe_ff"),
+              init="fan_in")
+    table.add(f"{prefix}/w_out", L + (e, f, d), Lr + ("expert", "moe_ff", "moe_d"),
+              init="fan_in")

@@ -1,0 +1,132 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Recurrence (per channel):
+    r_t = sigmoid(gate_a(x_t))          # recurrence gate
+    i_t = sigmoid(gate_x(x_t))          # input gate
+    log a_t = -c * softplus(Lambda) * r_t
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Gates are block-diagonal linear maps (one block per head), matching the
+published architecture and sharding cleanly over the model axis.
+
+Training/prefill uses ``jax.lax.associative_scan`` (the recurrence is a
+linear first-order scan -> O(log S) depth); decode is the O(1) step.  The
+Pallas TPU kernel in ``repro.kernels.rglru_scan`` implements the chunked
+sequential-in-VMEM version; this module is its oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+RGLRU_C = 8.0  # the paper's fixed constant
+
+
+def block_diag_linear(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: (B,S,W); w: (H, W/H, W/H); b: (H, W/H) -> (B,S,W)."""
+    bsz, s, width = x.shape
+    h = w.shape[0]
+    xh = x.reshape(bsz, s, h, width // h)
+    y = jnp.einsum("bshc,hce->bshe", xh, w) + b
+    return y.reshape(bsz, s, width)
+
+
+def rglru_gates(p: dict, x: jax.Array):
+    """Returns (log_a, gated_x) for the scan, both (B,S,W) f32."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(block_diag_linear(xf, p["a_gate_w"].astype(jnp.float32),
+                                         p["a_gate_b"].astype(jnp.float32)))
+    i = jax.nn.sigmoid(block_diag_linear(xf, p["x_gate_w"].astype(jnp.float32),
+                                         p["x_gate_b"].astype(jnp.float32)))
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    multiplier = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, multiplier * (i * xf)
+
+
+def rglru_scan(p: dict, x: jax.Array, h0: jax.Array | None = None):
+    """Full-sequence RG-LRU via associative scan.
+
+    x: (B,S,W) -> (y (B,S,W), h_last (B,W))."""
+    a, bx = rglru_gates(p, x)  # (B,S,W) f32 each
+    if h0 is not None:
+        # fold the carried state into the first step: h_1 = a_1 h0 + b_1
+        bx = bx.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return h.astype(x.dtype), h[:, -1, :]
+
+
+def rglru_step(p: dict, x: jax.Array, h_prev: jax.Array):
+    """One decode step. x: (B,1,W), h_prev: (B,W) f32 -> (y (B,1,W), h)."""
+    a, bx = rglru_gates(p, x)
+    h = a[:, 0] * h_prev.astype(jnp.float32) + bx[:, 0]
+    return h[:, None, :].astype(x.dtype), h
+
+
+# --------------------------------------------------------------------------- #
+# Full recurrent block: linear -> (conv1d -> RG-LRU) * gelu branch -> linear
+# --------------------------------------------------------------------------- #
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array,
+                  state: jax.Array | None = None):
+    """Depthwise causal conv. x:(B,S,W), w:(T,W), b:(W,).
+    state: (B,T-1,W) previous inputs for decode. Returns (y, new_state)."""
+    t = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], t - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+T-1, W)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(t))
+    y = y + b[None, None, :]
+    new_state = xp[:, -(t - 1):, :] if t > 1 else jnp.zeros_like(pad)
+    return y, new_state
+
+
+def recurrent_block(cfg, p: dict, x: jax.Array, shd, *,
+                    h0=None, conv_state=None, decode=False):
+    """Griffin recurrent temporal block. x: (B,S,d).
+    Returns (y (B,S,d), (h_last, conv_state))."""
+    gate = jnp.einsum("bsd,dw->bsw", x, p["w_gate"])
+    branch = jnp.einsum("bsd,dw->bsw", x, p["w_branch"])
+    gate = shd.ws(gate, "batch", None, "tensor")
+    branch = shd.ws(branch, "batch", None, "tensor")
+    branch, conv_state = causal_conv1d(branch, p["conv_w"], p["conv_b"],
+                                       conv_state)
+    if decode:
+        rec, h_last = rglru_step(p, branch, h0)
+    else:
+        rec, h_last = rglru_scan(p, branch, h0)
+    y = jax.nn.gelu(gate, approximate=True) * rec
+    out = jnp.einsum("bsw,wd->bsd", y, p["w_out"])
+    return shd.act_btd(out), (h_last, conv_state)
+
+
+def add_recurrent_params(t, cfg, prefix: str, layers: int | None = None):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    h = cfg.num_heads
+    Ls = () if layers is None else (layers,)
+    Lr = () if layers is None else ("null",)
+    t.add(f"{prefix}/w_gate", Ls + (d, w), Lr + ("fsdp", "tensor"), init="fan_in")
+    t.add(f"{prefix}/w_branch", Ls + (d, w), Lr + ("fsdp", "tensor"), init="fan_in")
+    t.add(f"{prefix}/conv_w", Ls + (cfg.conv1d_width, w),
+          Lr + ("null", "tensor"), init="fan_in")
+    t.add(f"{prefix}/conv_b", Ls + (w,), Lr + ("tensor",), init="zeros")
+    t.add(f"{prefix}/a_gate_w", Ls + (h, w // h, w // h),
+          Lr + ("tensor", "null", "null"), init="fan_in")
+    t.add(f"{prefix}/a_gate_b", Ls + (h, w // h), Lr + ("tensor", "null"),
+          init="zeros")
+    t.add(f"{prefix}/x_gate_w", Ls + (h, w // h, w // h),
+          Lr + ("tensor", "null", "null"), init="fan_in")
+    t.add(f"{prefix}/x_gate_b", Ls + (h, w // h), Lr + ("tensor", "null"),
+          init="zeros")
+    t.add(f"{prefix}/lam", Ls + (w,), Lr + ("tensor",), init="lru_a")
+    t.add(f"{prefix}/w_out", Ls + (w, d), Lr + ("tensor", "fsdp"), init="fan_in")

@@ -1,0 +1,369 @@
+"""Decoder-only transformer LM (dense / MoE / VLM backbone).
+
+Layers are stacked on a leading axis and iterated with ``lax.scan`` so the
+compiled HLO holds ONE layer body regardless of depth — this keeps the
+40-cell x 512-device dry-run compile tractable and is also the deployment
+configuration (scan + remat).  ``cfg.scan_layers=False`` unrolls instead
+(a perf-pass knob).
+
+Param paths (all stacked with leading L when scanned):
+  embed/table (Vp, d)            out/head (d, Vp)          final_norm/scale
+  layers/ln1/scale               layers/ln2/scale
+  layers/attn/{wq,wk,wv,wo}      layers/attn/{q_norm,k_norm}  (qk_norm)
+  layers/mlp/...  or  layers/moe/...
+  vlm/patch_proj (d_patch_in, d) (pixtral stub frontend)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import layers as L
+from repro.models import mlp as mlp_lib
+from repro.models import moe as moe_lib
+from repro.models.params import ParamTable
+
+
+# --------------------------------------------------------------------------- #
+# Parameter table
+# --------------------------------------------------------------------------- #
+def param_table(cfg) -> ParamTable:
+    t = ParamTable(cfg)
+    d, h, kh, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    vp = cfg.vocab_padded
+    nl = cfg.num_layers
+
+    t.add("embed/table", (vp, d), ("tensor", "fsdp"), init="normal")
+    if not cfg.tie_embeddings:
+        t.add("out/head", (d, vp), ("fsdp", "tensor"), init="fan_in")
+    ln_init = "ones" if cfg.norm_style == "layernorm" else "zeros"
+    t.add("final_norm/scale", (d,), ("null",), init=ln_init)
+    if cfg.norm_style == "layernorm":
+        t.add("final_norm/bias", (d,), ("null",), init="zeros")
+
+    add_attn_layer_params(t, cfg, "layers", nl)
+    if cfg.num_experts:
+        moe_lib.add_moe_params(t, cfg, "layers/moe", nl)
+    else:
+        mlp_lib.add_mlp_params(t, cfg, "layers/mlp", nl)
+
+    if cfg.num_patches:
+        # pixtral stub frontend: project precomputed patch embeddings
+        t.add("vlm/patch_proj", (d, d), ("fsdp", "null"), init="fan_in")
+    return t
+
+
+def add_attn_layer_params(t: ParamTable, cfg, prefix: str, nl: Optional[int]):
+    d, kh, hd = cfg.d_model, cfg.num_kv_heads, cfg.head_dim
+    hp = cfg.num_heads_padded  # zero-masked padding for even 16-way TP
+    Ls = () if nl is None else (nl,)
+    Lr = () if nl is None else ("null",)
+    nL = len(Ls)
+    ln_init = "ones" if cfg.norm_style == "layernorm" else "zeros"
+    t.add(f"{prefix}/ln1/scale", Ls + (d,), Lr + ("null",), init=ln_init)
+    t.add(f"{prefix}/ln2/scale", Ls + (d,), Lr + ("null",), init=ln_init)
+    if cfg.norm_style == "layernorm":
+        t.add(f"{prefix}/ln1/bias", Ls + (d,), Lr + ("null",), init="zeros")
+        t.add(f"{prefix}/ln2/bias", Ls + (d,), Lr + ("null",), init="zeros")
+    if cfg.post_attn_norm:
+        t.add(f"{prefix}/ln1_post/scale", Ls + (d,), Lr + ("null",), init="zeros")
+        t.add(f"{prefix}/ln2_post/scale", Ls + (d,), Lr + ("null",), init="zeros")
+    pad = (None if hp == cfg.num_heads else (nL + 1, cfg.num_heads))
+    t.add(f"{prefix}/attn/wq", Ls + (d, hp, hd), Lr + ("fsdp", "tensor", "null"),
+          init="fan_in", zero_pad=pad)
+    t.add(f"{prefix}/attn/wk", Ls + (d, kh, hd), Lr + ("fsdp", "tensor", "null"),
+          init="fan_in")
+    t.add(f"{prefix}/attn/wv", Ls + (d, kh, hd), Lr + ("fsdp", "tensor", "null"),
+          init="fan_in")
+    pad_o = (None if hp == cfg.num_heads else (nL, cfg.num_heads))
+    t.add(f"{prefix}/attn/wo", Ls + (hp, hd, d), Lr + ("tensor", "null", "fsdp"),
+          init="fan_in", zero_pad=pad_o)
+    if cfg.attn_bias:
+        t.add(f"{prefix}/attn/bq", Ls + (hp, hd), Lr + ("tensor", "null"),
+              init="zeros")
+        t.add(f"{prefix}/attn/bk", Ls + (kh, hd), Lr + ("tensor", "null"),
+              init="zeros")
+        t.add(f"{prefix}/attn/bv", Ls + (kh, hd), Lr + ("tensor", "null"),
+              init="zeros")
+        t.add(f"{prefix}/attn/bo", Ls + (d,), Lr + ("null",), init="zeros")
+    if cfg.qk_norm:
+        t.add(f"{prefix}/attn/q_norm", Ls + (hd,), Lr + ("null",), init="zeros")
+        t.add(f"{prefix}/attn/k_norm", Ls + (hd,), Lr + ("null",), init="zeros")
+
+
+# --------------------------------------------------------------------------- #
+# Attention sub-block (shared with encdec/hybrid)
+# --------------------------------------------------------------------------- #
+def head_mask(cfg, dtype):
+    """(Hp,) mask zeroing padded heads so padding is mathematically exact
+    (keeps dwo for padded rows at zero — see DESIGN.md)."""
+    hp = cfg.num_heads_padded
+    if hp == cfg.num_heads:
+        return None
+    return (jnp.arange(hp) < cfg.num_heads).astype(dtype)
+
+
+def attn_qkv(cfg, p, x, shd, positions):
+    """Project + rope. x:(B,S,d) -> q:(B,S,Hp,hd), k/v:(B,S,K,hd)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.attn_bias and "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q, k = shd.act_bthd(q), shd.ws(k, "batch", None, "tensor", None)
+    if cfg.qk_norm:
+        q = L.rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = L.rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    q = L.apply_rope(q, positions, theta=cfg.rope_theta, style=cfg.rope_style)
+    k = L.apply_rope(k, positions, theta=cfg.rope_theta, style=cfg.rope_style)
+    return q, k, v
+
+
+def attn_out_proj(cfg, p, out, shd):
+    """Mask padded heads, project back to d_model."""
+    hm = head_mask(cfg, out.dtype)
+    if hm is not None:
+        out = out * hm[None, None, :, None]
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    if cfg.attn_bias and "bo" in p:
+        y = y + p["bo"]
+    return shd.act_btd(y)
+
+
+def self_attention(cfg, p, x, shd, positions, *, causal=True,
+                   window=None, kv_override=None, k_positions=None):
+    """Full self-attention sub-block (no residual). Returns (B,S,d)."""
+    q, k, v = attn_qkv(cfg, p, x, shd, positions)
+    if kv_override is not None:
+        k, v = kv_override
+    kp = k_positions if k_positions is not None else positions
+    out = attn_lib.attention(
+        q, k, v,
+        q_positions=positions, k_positions=kp,
+        causal=causal, window=window,
+        scale=cfg.attn_scale_override, logit_cap=cfg.attn_logit_softcap,
+    )
+    out = shd.act_bthd(out)
+    return attn_out_proj(cfg, p, out, shd)
+
+
+# --------------------------------------------------------------------------- #
+# Layer body + forward
+# --------------------------------------------------------------------------- #
+def _layer(cfg, p, x, shd, positions):
+    """One pre-norm transformer layer. Returns (x, aux_loss)."""
+    h = L.norm(cfg, x, p["ln1"]["scale"], p["ln1"].get("bias"))
+    a = self_attention(cfg, p["attn"], h, shd, positions,
+                       window=cfg.sliding_window)
+    if cfg.post_attn_norm:
+        a = L.norm(cfg, a, p["ln1_post"]["scale"])
+    x = x + a
+    h = L.norm(cfg, x, p["ln2"]["scale"], p["ln2"].get("bias"))
+    if cfg.num_experts:
+        m, aux = moe_lib.moe_block(cfg, p["moe"], h, shd)
+    else:
+        m, aux = mlp_lib.mlp(cfg, p["mlp"], h, shd), jnp.float32(0.0)
+    if cfg.post_attn_norm:
+        m = L.norm(cfg, m, p["ln2_post"]["scale"])
+    return x + m, aux
+
+
+def _remat(cfg, fn):
+    if cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)  # full
+
+
+def run_layers(cfg, layer_params, x, shd, positions, layer_fn=None):
+    """Scan (or unroll) the stacked layer parameters over x.
+
+    With cfg.remat_segments = G > 0 the scan is two-level (sqrt remat):
+    an outer scan over G checkpointed segments of K = L/G layers each.
+    The backward pass then saves G segment inputs instead of L layer
+    inputs — for grok-1 this is the difference between a 6.4 GB and a
+    0.8 GB residual stack per device (see EXPERIMENTS.md section Perf)."""
+    fn = layer_fn or _layer
+    body = _remat(cfg, functools.partial(fn, cfg, shd=shd, positions=positions))
+
+    def scan_fn(carry, p_i):
+        x, aux = carry
+        y, aux_i = body(p_i, x)
+        return (y, aux + aux_i), None
+
+    if cfg.scan_layers and cfg.remat_segments > 1:
+        g = cfg.remat_segments
+        n = jax.tree.leaves(layer_params)[0].shape[0]
+        assert n % g == 0, (n, g)
+        k = n // g
+        seg_params = jax.tree.map(
+            lambda a: a.reshape((g, k) + a.shape[1:]), layer_params)
+
+        @jax.checkpoint
+        def segment(carry, p_seg):
+            return jax.lax.scan(scan_fn, carry, p_seg)[0], None
+
+        (x, aux), _ = jax.lax.scan(segment, (x, jnp.float32(0.0)), seg_params)
+        return x, aux
+
+    if cfg.scan_layers:
+        (x, aux), _ = jax.lax.scan(scan_fn, (x, jnp.float32(0.0)), layer_params)
+        return x, aux
+
+    aux = jnp.float32(0.0)
+    for i in range(cfg.num_layers):
+        p_i = jax.tree.map(lambda a: a[i], layer_params)
+        x, aux_i = body(p_i, x)
+        aux = aux + aux_i
+    return x, aux
+
+
+def embed_tokens(cfg, params, tokens, shd, patch_embeds=None):
+    x = L.embed_lookup(params["embed"]["table"], tokens)
+    x = x.astype(jnp.dtype(cfg.dtype)) * jnp.asarray(cfg.embed_scale, cfg.dtype)
+    if cfg.num_patches and patch_embeds is not None:
+        # pixtral stub: precomputed patch embeddings projected and prepended
+        pe = jnp.einsum("bpd,de->bpe", patch_embeds.astype(cfg.dtype),
+                        params["vlm"]["patch_proj"])
+        x = jnp.concatenate([pe, x[:, cfg.num_patches:, :]], axis=1)
+    return shd.act_btd(x)
+
+
+def unembed(cfg, params, x, shd):
+    table = (params["embed"]["table"].T if cfg.tie_embeddings
+             else params["out"]["head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, table)
+    return shd.act_btv(logits)
+
+
+def forward(cfg, params, tokens, shd, patch_embeds=None):
+    """tokens: (B, S) -> logits (B, S, Vp) [+ aux moe loss]."""
+    b, s = tokens.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+    x = embed_tokens(cfg, params, tokens, shd, patch_embeds)
+    x, aux = run_layers(cfg, params["layers"], x, shd, positions)
+    x = L.norm(cfg, x, params["final_norm"]["scale"],
+               params["final_norm"].get("bias"))
+    return unembed(cfg, params, x, shd), aux
+
+
+# --------------------------------------------------------------------------- #
+# Decode (one token, KV cache)
+# --------------------------------------------------------------------------- #
+def cache_len(cfg, seq_len: int) -> int:
+    w = cfg.sliding_window or cfg.attention_window
+    return min(seq_len, w) if w else seq_len
+
+
+def init_cache_abstract(cfg, shd, batch: int, seq_len: int):
+    """ShapeDtypeStruct cache for dry-run lowering (with shardings).
+
+    Large unwindowed caches use the grid-brick layout: sequence dim sharded
+    over the model axis (see core/brick_attention.py)."""
+    from repro.core import brick_attention as brick
+
+    w = cache_len(cfg, seq_len)
+    kh, hd, nl = cfg.num_kv_heads, cfg.head_dim, cfg.num_layers
+    dt = jnp.dtype(cfg.dtype)
+    seq_role = "tensor" if brick.brick_active(cfg, shd, w) else "null"
+
+    def sds(shape, roles, dtype=dt):
+        return jax.ShapeDtypeStruct(shape, dtype, sharding=shd.named(roles, shape))
+
+    kv_roles = ("null", "batch", seq_role, "tensor" if seq_role == "null" else "null", "null")
+    return {
+        "k": sds((nl, batch, w, kh, hd), kv_roles),
+        "v": sds((nl, batch, w, kh, hd), kv_roles),
+        "kpos": sds((w,), ("null",), jnp.int32),
+        "t": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def init_cache(cfg, shd, batch: int, seq_len: int):
+    abs_cache = init_cache_abstract(cfg, shd, batch, seq_len)
+    cache = {
+        k: jnp.zeros(s.shape, s.dtype) for k, s in abs_cache.items()
+    }
+    cache["kpos"] = cache["kpos"] - 1  # -1 marks empty slots
+    return cache
+
+
+def _decode_layer(cfg, p, x, shd, positions, k_i, v_i, kpos, slot, t,
+                  use_brick):
+    """Decode step for one layer: update cache slice, attend. x:(B,1,d)."""
+    from repro.core import brick_attention as brick
+
+    h = L.norm(cfg, x, p["ln1"]["scale"], p["ln1"].get("bias"))
+    q, k_new, v_new = attn_qkv(cfg, p["attn"], h, shd, positions)
+
+    if use_brick:
+        out, k_i, v_i = brick.decode_attention(
+            cfg, shd, q, k_i, v_i, kpos, k_new, v_new, slot, t)
+    else:
+        k_i = jax.lax.dynamic_update_slice_in_dim(
+            k_i, k_new.astype(k_i.dtype), slot, 1)
+        v_i = jax.lax.dynamic_update_slice_in_dim(
+            v_i, v_new.astype(v_i.dtype), slot, 1)
+        window = cfg.sliding_window or cfg.attention_window
+        out = attn_lib.attention(
+            q, k_i, v_i,
+            q_positions=positions, k_positions=kpos,
+            causal=True, window=window,
+            scale=cfg.attn_scale_override, logit_cap=cfg.attn_logit_softcap,
+        )
+    a = attn_out_proj(cfg, p["attn"], out, shd)
+    if cfg.post_attn_norm:
+        a = L.norm(cfg, a, p["ln1_post"]["scale"])
+    x = x + a
+    h = L.norm(cfg, x, p["ln2"]["scale"], p["ln2"].get("bias"))
+    if cfg.num_experts:
+        m, _ = moe_lib.moe_block(cfg, p["moe"], h, shd)
+    else:
+        m = mlp_lib.mlp(cfg, p["mlp"], h, shd)
+    if cfg.post_attn_norm:
+        m = L.norm(cfg, m, p["ln2_post"]["scale"])
+    return x + m, k_i, v_i
+
+
+def decode_step(cfg, params, cache, tokens, shd):
+    """tokens: (B, 1) -> (logits (B,1,Vp), new cache)."""
+    from repro.core import brick_attention as brick
+
+    t = cache["t"]
+    w = cache["k"].shape[2]
+    use_brick = brick.brick_active(cfg, shd, w)
+    slot = jnp.mod(t, w)
+    positions = t[None].astype(jnp.int32)  # (1,)
+    kpos = cache["kpos"].at[slot].set(t)
+
+    x = embed_tokens(cfg, params, tokens, shd)
+
+    def scan_fn(x, xs):
+        p_i, k_i, v_i = xs
+        x, k_i, v_i = _decode_layer(cfg, p_i, x, shd, positions, k_i, v_i,
+                                    kpos, slot, t, use_brick)
+        return x, (k_i, v_i)
+
+    if cfg.scan_layers:
+        x, (k, v) = jax.lax.scan(
+            scan_fn, x, (params["layers"], cache["k"], cache["v"]))
+    else:
+        ks, vs = [], []
+        for i in range(cfg.num_layers):
+            p_i = jax.tree.map(lambda a: a[i], params["layers"])
+            x, (k_i, v_i) = scan_fn(x, (p_i, cache["k"][i], cache["v"][i]))
+            ks.append(k_i)
+            vs.append(v_i)
+        k, v = jnp.stack(ks), jnp.stack(vs)
+
+    x = L.norm(cfg, x, params["final_norm"]["scale"],
+               params["final_norm"].get("bias"))
+    logits = unembed(cfg, params, x, shd)
+    new_cache = {"k": k, "v": v, "kpos": kpos, "t": t + 1}
+    return logits, new_cache

@@ -1,0 +1,465 @@
+"""xLSTM LM (sLSTM + mLSTM blocks), xLSTM[7:1]-style.
+
+24 layers = 3 super-blocks of (7 mLSTM + 1 sLSTM), scanned over the 3
+repeats with stacked params.
+
+mLSTM: matrix-memory cell.  Training/prefill uses the chunkwise-parallel
+log-space formulation (same online pattern as flash attention, with gate
+decay biases instead of softmax normalization); decode is the O(1)
+recurrent update on the (H, hd, hd) matrix state.  The Pallas kernel in
+``repro.kernels.mlstm_scan`` implements the chunked VMEM version; this
+module is its oracle.
+
+sLSTM: scalar-memory cell with per-head block-diagonal recurrent weights;
+inherently sequential -> lax.scan over time.
+
+Both blocks keep O(1) decode state, which is what qualifies xlstm-350m for
+the long_500k cell.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import model_zoo
+from repro.models.params import ParamTable
+from repro.models.transformer import _remat, embed_tokens, unembed
+from repro.models.rglru import block_diag_linear, causal_conv1d
+
+MLSTM_PF = 2.0  # mLSTM up-projection factor
+SLSTM_PF = 4.0 / 3.0  # sLSTM post-FFN factor
+
+
+def _dims(cfg):
+    d = cfg.d_model
+    inner = int(MLSTM_PF * d)
+    h = cfg.num_heads
+    return d, inner, h, inner // h, d // h  # d, inner, H, hd_m, hd_s
+
+
+def _pattern(cfg):
+    unit = cfg.xlstm_pattern or ("mlstm",) * 7 + ("slstm",)
+    n_super = cfg.num_layers // len(unit)
+    assert n_super * len(unit) == cfg.num_layers, (cfg.num_layers, unit)
+    return unit, n_super
+
+
+# --------------------------------------------------------------------------- #
+# Params
+# --------------------------------------------------------------------------- #
+def _add_mlstm(t: ParamTable, cfg, prefix, nl):
+    d, inner, h, hd, _ = _dims(cfg)
+    Ls, Lr = (nl,), ("null",)
+    t.add(f"{prefix}/ln/scale", Ls + (d,), Lr + ("null",), init="zeros")
+    t.add(f"{prefix}/w_up", Ls + (d, inner), Lr + ("fsdp", "tensor"), init="fan_in")
+    t.add(f"{prefix}/w_gate", Ls + (d, inner), Lr + ("fsdp", "tensor"), init="fan_in")
+    t.add(f"{prefix}/conv_w", Ls + (cfg.conv1d_width, inner),
+          Lr + ("null", "tensor"), init="fan_in")
+    t.add(f"{prefix}/conv_b", Ls + (inner,), Lr + ("tensor",), init="zeros")
+    t.add(f"{prefix}/wq", Ls + (h, hd, hd), Lr + ("tensor", "null", "null"),
+          init="fan_in")
+    t.add(f"{prefix}/wk", Ls + (h, hd, hd), Lr + ("tensor", "null", "null"),
+          init="fan_in")
+    t.add(f"{prefix}/wv", Ls + (h, hd, hd), Lr + ("tensor", "null", "null"),
+          init="fan_in")
+    t.add(f"{prefix}/w_i", Ls + (inner, h), Lr + ("fsdp", "null"), init="fan_in")
+    t.add(f"{prefix}/b_i", Ls + (h,), Lr + ("null",), init="zeros")
+    t.add(f"{prefix}/w_f", Ls + (inner, h), Lr + ("fsdp", "null"), init="fan_in")
+    t.add(f"{prefix}/b_f", Ls + (h,), Lr + ("null",), init="ones", scale=3.0)
+    t.add(f"{prefix}/out_norm/scale", Ls + (inner,), Lr + ("tensor",), init="zeros")
+    t.add(f"{prefix}/w_down", Ls + (inner, d), Lr + ("tensor", "fsdp"),
+          init="fan_in")
+
+
+def _add_slstm(t: ParamTable, cfg, prefix, nl):
+    d, _, h, _, hd = _dims(cfg)
+    Ls, Lr = (nl,), ("null",)
+    t.add(f"{prefix}/ln/scale", Ls + (d,), Lr + ("null",), init="zeros")
+    for g in ("z", "i", "f", "o"):
+        t.add(f"{prefix}/w_{g}", Ls + (d, d), Lr + ("fsdp", "null"), init="fan_in")
+        t.add(f"{prefix}/r_{g}", Ls + (h, hd, hd), Lr + ("null", "null", "null"),
+              init="fan_in", scale=0.01)
+        t.add(f"{prefix}/b_{g}", Ls + (d,), Lr + ("null",),
+              init="ones" if g == "f" else "zeros")
+    t.add(f"{prefix}/out_norm/scale", Ls + (d,), Lr + ("null",), init="zeros")
+    # post-FFN (pf = 4/3 gated)
+    f_ff = int(SLSTM_PF * d)
+    t.add(f"{prefix}/ln_ff/scale", Ls + (d,), Lr + ("null",), init="zeros")
+    t.add(f"{prefix}/ff_gate", Ls + (d, f_ff), Lr + ("fsdp", "tensor"), init="fan_in")
+    t.add(f"{prefix}/ff_in", Ls + (d, f_ff), Lr + ("fsdp", "tensor"), init="fan_in")
+    t.add(f"{prefix}/ff_out", Ls + (f_ff, d), Lr + ("tensor", "fsdp"), init="fan_in")
+
+
+def param_table(cfg) -> ParamTable:
+    t = ParamTable(cfg)
+    d, vp = cfg.d_model, cfg.vocab_padded
+    unit, n_super = _pattern(cfg)
+    t.add("embed/table", (vp, d), ("tensor", "fsdp"), init="normal")
+    if not cfg.tie_embeddings:
+        t.add("out/head", (d, vp), ("fsdp", "tensor"), init="fan_in")
+    t.add("final_norm/scale", (d,), ("null",), init="zeros")
+    for j, kind in enumerate(unit):
+        prefix = f"blocks/u{j}"
+        (_add_mlstm if kind == "mlstm" else _add_slstm)(t, cfg, prefix, n_super)
+    return t
+
+
+# --------------------------------------------------------------------------- #
+# mLSTM
+# --------------------------------------------------------------------------- #
+def _mlstm_qkv_gates(cfg, p, x):
+    """x: (B,S,d). Returns q,k,v (B,S,H,hd), log_i, log_f (B,S,H) f32."""
+    d, inner, h, hd, _ = _dims(cfg)
+    b, s, _ = x.shape
+    xu = jnp.einsum("bsd,de->bse", x, p["w_up"])  # (B,S,inner)
+    xc, _ = causal_conv1d(xu, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc)
+    xh = xc.reshape(b, s, h, hd)
+    q = jnp.einsum("bshc,hce->bshe", xh, p["wq"])
+    k = jnp.einsum("bshc,hce->bshe", xh, p["wk"])
+    v = jnp.einsum("bshc,hce->bshe", xu.reshape(b, s, h, hd), p["wv"])
+    xuf = xu.astype(jnp.float32)
+    log_i = (jnp.einsum("bse,eh->bsh", xuf, p["w_i"].astype(jnp.float32))
+             + p["b_i"].astype(jnp.float32))
+    log_f = jax.nn.log_sigmoid(
+        jnp.einsum("bse,eh->bsh", xuf, p["w_f"].astype(jnp.float32))
+        + p["b_f"].astype(jnp.float32))
+    return xu, q, k, v, log_i, log_f
+
+
+def mlstm_parallel(cfg, q, k, v, log_i, log_f, chunk_size=1024):
+    """Chunkwise-parallel mLSTM (the flash-attention-like oracle).
+
+    Tiled over BOTH q and kv (flash-style): the online accumulators live
+    per q-block, so the backward pass never stores a full-sequence f32
+    (B,S,H,hd) carry per kv chunk — at xlstm-350m train_4k that carry was
+    30+ GB/chip of scan residuals.
+
+    q,k,v: (B,S,H,hd); log_i/log_f: (B,S,H) f32.
+    Returns h: (B,S,H,hd)."""
+    b, s, h, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+    F = jnp.cumsum(log_f, axis=1)  # (B,S,H): sum of log f up to and incl. t
+
+    c = min(chunk_size, s)
+    n_chunks = -(-s // c)
+    pad = n_chunks * c - s
+    if pad:
+        pads = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q = jnp.pad(q, pads)
+        k = jnp.pad(k, pads)
+        v = jnp.pad(v, pads)
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=-1e30)
+        F_q = jnp.pad(F, ((0, 0), (0, pad), (0, 0)), mode="edge")
+    else:
+        F_q = F
+    sp = n_chunks * c
+
+    qf = (q.astype(jnp.float32) * scale).astype(q.dtype)
+    qc = qf.reshape(b, n_chunks, c, h, hd).transpose(1, 0, 2, 3, 4)
+    kc = k.reshape(b, n_chunks, c, h, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, c, h, hd).transpose(1, 0, 2, 3, 4)
+    ic = log_i.reshape(b, n_chunks, c, h).transpose(1, 0, 2, 3)
+    Fc = F_q.reshape(b, n_chunks, c, h).transpose(1, 0, 2, 3)
+    idx = jnp.arange(sp).reshape(n_chunks, c)
+
+    @jax.checkpoint
+    def q_block(args):
+        q_i, F_i, qidx = args  # (B,c,H,hd), (B,c,H), (c,)
+
+        def kv_step(carry, xs):
+            m, num, den = carry  # (B,c,H), (B,c,H,hd), (B,c,H)
+            k_j, v_j, li_j, F_j, kidx = xs
+            logw = (F_i[:, :, None, :] - F_j[:, None, :, :]
+                    + li_j[:, None, :, :])  # (B,c,c,H)
+            mask = kidx[None, :] <= qidx[:, None]  # (c,c)
+            logw = jnp.where(mask[None, :, :, None], logw, -1e30)
+            logw = logw.transpose(0, 1, 3, 2)  # (B,c,H,c)
+            m_new = jnp.maximum(m, jnp.max(logw, axis=-1))
+            wts = jnp.exp(logw - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            sc = jnp.einsum("bqhd,bchd->bqhc", q_i, k_j,
+                            preferred_element_type=jnp.float32)
+            a = wts * sc  # (B,c,H,c)
+            num = num * corr[..., None] + jnp.einsum(
+                "bqhc,bchd->bqhd", a.astype(v_j.dtype), v_j,
+                preferred_element_type=jnp.float32)
+            den = den * corr + jnp.sum(a, axis=-1)
+            return (m_new, num, den), None
+
+        m0 = jnp.full((b, c, h), -1e30, jnp.float32)
+        num0 = jnp.zeros((b, c, h, hd), jnp.float32)
+        den0 = jnp.zeros((b, c, h), jnp.float32)
+        (m, num, den), _ = jax.lax.scan(
+            kv_step, (m0, num0, den0), (kc, vc, ic, Fc, idx))
+        normalizer = jnp.maximum(jnp.abs(den), jnp.exp(-m))
+        return (num / normalizer[..., None]).astype(q.dtype)
+
+    out = jax.lax.map(q_block, (qc, Fc, idx))  # (n_chunks, B, c, H, hd)
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, sp, h, hd)
+    return out[:, :s]
+
+
+def mlstm_block(cfg, p, x, shd):
+    """Full mLSTM residual block. x: (B,S,d)."""
+    d, inner, h, hd, _ = _dims(cfg)
+    b, s, _ = x.shape
+    xin = L.rmsnorm(x, p["ln"]["scale"], cfg.norm_eps)
+    xu, q, k, v, log_i, log_f = _mlstm_qkv_gates(cfg, p, xin)
+    hh = mlstm_parallel(cfg, q, k, v, log_i, log_f)
+    hh = hh.reshape(b, s, inner)
+    hh = L.rmsnorm(hh, p["out_norm"]["scale"], cfg.norm_eps)
+    z = jnp.einsum("bsd,de->bse", xin, p["w_gate"])
+    y = hh * jax.nn.silu(z)
+    return x + shd.act_btd(jnp.einsum("bse,ed->bsd", y, p["w_down"]))
+
+
+def mlstm_decode(cfg, p, x, state, shd):
+    """One-token mLSTM step. state: dict(C (B,H,hd,hd), n (B,H,hd), m (B,H),
+    conv (B,T-1,inner)) all f32 except conv."""
+    d, inner, h, hd, _ = _dims(cfg)
+    b = x.shape[0]
+    xin = L.rmsnorm(x, p["ln"]["scale"], cfg.norm_eps)
+    xu = jnp.einsum("bsd,de->bse", xin, p["w_up"])
+    xc, conv = causal_conv1d(xu, p["conv_w"], p["conv_b"], state["conv"])
+    xc = jax.nn.silu(xc)
+    xh = xc.reshape(b, 1, h, hd)
+    q = jnp.einsum("bshc,hce->bshe", xh, p["wq"])[:, 0]  # (B,H,hd)
+    kk = jnp.einsum("bshc,hce->bshe", xh, p["wk"])[:, 0]
+    vv = jnp.einsum("bshc,hce->bshe", xu.reshape(b, 1, h, hd), p["wv"])[:, 0]
+    xuf = xu.astype(jnp.float32)[:, 0]
+    log_i = (xuf @ p["w_i"].astype(jnp.float32)) + p["b_i"].astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(
+        (xuf @ p["w_f"].astype(jnp.float32)) + p["b_f"].astype(jnp.float32))
+
+    m_new = jnp.maximum(log_f + state["m"], log_i)  # (B,H)
+    decay = jnp.exp(log_f + state["m"] - m_new)
+    inp = jnp.exp(log_i - m_new)
+    kf = kk.astype(jnp.float32)
+    vf = vv.astype(jnp.float32)
+    C = (state["C"] * decay[..., None, None]
+         + inp[..., None, None] * jnp.einsum("bhk,bhv->bhkv", kf, vf))
+    n = state["n"] * decay[..., None] + inp[..., None] * kf
+    scale = 1.0 / math.sqrt(hd)
+    qf = q.astype(jnp.float32) * scale
+    num = jnp.einsum("bhk,bhkv->bhv", qf, C)
+    den = jnp.maximum(jnp.abs(jnp.sum(n * qf, axis=-1)), jnp.exp(-m_new))
+    hh = (num / den[..., None]).reshape(b, 1, inner).astype(x.dtype)
+    hh = L.rmsnorm(hh, p["out_norm"]["scale"], cfg.norm_eps)
+    z = jnp.einsum("bsd,de->bse", xin, p["w_gate"])
+    y = hh * jax.nn.silu(z)
+    out = x + shd.act_btd(jnp.einsum("bse,ed->bsd", y, p["w_down"]))
+    return out, {"C": C, "n": n, "m": m_new, "conv": conv}
+
+
+# --------------------------------------------------------------------------- #
+# sLSTM
+# --------------------------------------------------------------------------- #
+def _slstm_cell(cfg, p, zifo, state):
+    """One time step. zifo: tuple of (B,d) pre-activations (x-part only).
+    state: (c,n,h,m) each (B,d) f32. Returns (h_out (B,d), new state)."""
+    d, _, heads, _, hd = _dims(cfg)
+    b = zifo[0].shape[0]
+    h_prev = state["h"]
+    hh = h_prev.reshape(b, heads, hd)
+
+    def rec(w):  # (H, hd, hd) applied per head
+        return jnp.einsum("bhc,hce->bhe", hh, w.astype(jnp.float32)).reshape(b, d)
+
+    z = jnp.tanh(zifo[0] + rec(p["r_z"]))
+    i_raw = zifo[1] + rec(p["r_i"])
+    f_raw = zifo[2] + rec(p["r_f"])
+    o = jax.nn.sigmoid(zifo[3] + rec(p["r_o"]))
+
+    log_f = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(log_f + state["m"], i_raw)
+    i_st = jnp.exp(i_raw - m_new)
+    f_st = jnp.exp(log_f + state["m"] - m_new)
+    c = f_st * state["c"] + i_st * z
+    n = f_st * state["n"] + i_st
+    h_out = o * c / jnp.maximum(n, 1e-6)
+    return h_out, {"c": c, "n": n, "h": h_out, "m": m_new}
+
+
+def slstm_block(cfg, p, x, shd, state=None, decode=False):
+    """sLSTM residual block + post-FFN. x: (B,S,d)."""
+    d, _, heads, _, hd = _dims(cfg)
+    b, s, _ = x.shape
+    xin = L.rmsnorm(x, p["ln"]["scale"], cfg.norm_eps)
+    xf = xin.astype(jnp.float32)
+    pre = {g: jnp.einsum("bsd,de->bse", xf, p[f"w_{g}"].astype(jnp.float32))
+           + p[f"b_{g}"].astype(jnp.float32) for g in ("z", "i", "f", "o")}
+    if state is None:
+        state = {k: jnp.zeros((b, d), jnp.float32) for k in ("c", "n", "h")}
+        state["m"] = jnp.full((b, d), -1e30, jnp.float32)
+
+    if decode:
+        h_out, state = _slstm_cell(
+            cfg, p, tuple(pre[g][:, 0] for g in ("z", "i", "f", "o")), state)
+        hs = h_out[:, None, :]
+    else:
+        def step(st, zifo):
+            h_out, st = _slstm_cell(cfg, p, zifo, st)
+            return st, h_out
+
+        xs = tuple(pre[g].transpose(1, 0, 2) for g in ("z", "i", "f", "o"))
+        # time-chunked remat: saving all S per-step residuals for backward
+        # costs O(S) f32 state tensors (58 GB/chip at train_4k); checkpoint
+        # at chunk boundaries and recompute inside — O(S/C) saved states.
+        chunk = 256
+        if s > chunk and s % chunk == 0:
+            xs = tuple(a.reshape(s // chunk, chunk, *a.shape[1:])
+                       for a in xs)
+
+            @jax.checkpoint
+            def chunk_step(st, zifo_chunk):
+                st, hs = jax.lax.scan(step, st, zifo_chunk)
+                return st, hs
+
+            state, hs = jax.lax.scan(chunk_step, state, xs)
+            hs = hs.reshape(s, *hs.shape[2:])
+        else:
+            state, hs = jax.lax.scan(step, state, xs)
+        hs = hs.transpose(1, 0, 2)  # (B,S,d)
+
+    hs = L.rmsnorm(hs.astype(x.dtype), p["out_norm"]["scale"], cfg.norm_eps)
+    x = x + shd.act_btd(hs)
+    # post-FFN
+    hf = L.rmsnorm(x, p["ln_ff"]["scale"], cfg.norm_eps)
+    gate = jnp.einsum("bsd,df->bsf", hf, p["ff_gate"])
+    up = jnp.einsum("bsd,df->bsf", hf, p["ff_in"])
+    y = jax.nn.silu(gate) * up
+    x = x + shd.act_btd(jnp.einsum("bsf,fd->bsd", y, p["ff_out"]))
+    return x, state
+
+
+# --------------------------------------------------------------------------- #
+# Model assembly
+# --------------------------------------------------------------------------- #
+def forward(cfg, params, tokens, shd):
+    unit, n_super = _pattern(cfg)
+    x = embed_tokens(cfg, params, tokens, shd)
+
+    def super_block(p, x):
+        for j, kind in enumerate(unit):
+            pj = p[f"u{j}"]
+            if kind == "mlstm":
+                x = mlstm_block(cfg, pj, x, shd)
+            else:
+                x, _ = slstm_block(cfg, pj, x, shd)
+        return (x,)
+
+    body = _remat(cfg, super_block)
+    if cfg.scan_layers:
+        (x,), _ = jax.lax.scan(lambda c, p: (body(p, c[0]), None), (x,),
+                               params["blocks"])
+    else:
+        for i in range(n_super):
+            p_i = jax.tree.map(lambda a: a[i], params["blocks"])
+            (x,) = body(p_i, x)
+
+    x = L.rmsnorm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    return unembed(cfg, params, x, shd), jnp.float32(0.0)
+
+
+def init_cache_abstract(cfg, shd, batch: int, seq_len: int):
+    d, inner, h, hd, hd_s = _dims(cfg)
+    unit, n_super = _pattern(cfg)
+    n_m = sum(1 for k in unit if k == "mlstm")
+    n_s = len(unit) - n_m
+    ct = cfg.conv1d_width - 1
+    dt = jnp.dtype(cfg.dtype)
+
+    def sds(shape, roles, dtype=jnp.float32):
+        return jax.ShapeDtypeStruct(shape, dtype, sharding=shd.named(roles, shape))
+
+    return {
+        "C": sds((n_m, n_super, batch, h, hd, hd),
+                 ("null", "null", "batch", "null", "null", "null")),
+        "n": sds((n_m, n_super, batch, h, hd),
+                 ("null", "null", "batch", "null", "null")),
+        "m": sds((n_m, n_super, batch, h),
+                 ("null", "null", "batch", "null")),
+        "conv": sds((n_m, n_super, batch, ct, inner),
+                    ("null", "null", "batch", "null", "tensor"), dt),
+        "s_c": sds((n_s, n_super, batch, d), ("null", "null", "batch", "null")),
+        "s_n": sds((n_s, n_super, batch, d), ("null", "null", "batch", "null")),
+        "s_h": sds((n_s, n_super, batch, d), ("null", "null", "batch", "null")),
+        "s_m": sds((n_s, n_super, batch, d), ("null", "null", "batch", "null")),
+        "t": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def init_cache(cfg, shd, batch: int, seq_len: int):
+    abs_cache = init_cache_abstract(cfg, shd, batch, seq_len)
+    cache = {k: jnp.zeros(s.shape, s.dtype) for k, s in abs_cache.items()}
+    cache["m"] = cache["m"] - 1e30
+    cache["s_m"] = cache["s_m"] - 1e30
+    return cache
+
+
+def decode_step(cfg, params, cache, tokens, shd):
+    unit, n_super = _pattern(cfg)
+    x = embed_tokens(cfg, params, tokens, shd)
+
+    def scan_fn(x, xs):
+        p, C, n, m, conv, s_c, s_n, s_h, s_m = xs
+        mi = si = 0
+        newC, newn, newm, newconv = [], [], [], []
+        new_s = {"c": [], "n": [], "h": [], "m": []}
+        for j, kind in enumerate(unit):
+            pj = p[f"u{j}"]
+            if kind == "mlstm":
+                st = {"C": C[mi], "n": n[mi], "m": m[mi], "conv": conv[mi]}
+                x, st = mlstm_decode(cfg, pj, x, st, shd)
+                newC.append(st["C"])
+                newn.append(st["n"])
+                newm.append(st["m"])
+                newconv.append(st["conv"])
+                mi += 1
+            else:
+                st = {"c": s_c[si], "n": s_n[si], "h": s_h[si], "m": s_m[si]}
+                x, st = slstm_block(cfg, pj, x, shd, state=st, decode=True)
+                for key in new_s:
+                    new_s[key].append(st[key])
+                si += 1
+        ys = (jnp.stack(newC), jnp.stack(newn), jnp.stack(newm),
+              jnp.stack(newconv), jnp.stack(new_s["c"]), jnp.stack(new_s["n"]),
+              jnp.stack(new_s["h"]), jnp.stack(new_s["m"]))
+        return x, ys
+
+    tr = lambda a: jnp.swapaxes(a, 0, 1)  # (n_kind, n_super, ...) -> scan axis
+    xs = (params["blocks"], tr(cache["C"]), tr(cache["n"]), tr(cache["m"]),
+          tr(cache["conv"]), tr(cache["s_c"]), tr(cache["s_n"]),
+          tr(cache["s_h"]), tr(cache["s_m"]))
+    x, ys = jax.lax.scan(scan_fn, x, xs)
+    C, n, m, conv, s_c, s_n, s_h, s_m = (tr(y) for y in ys)
+
+    x = L.rmsnorm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = unembed(cfg, params, x, shd)
+    new_cache = {"C": C, "n": n, "m": m, "conv": conv, "s_c": s_c,
+                 "s_n": s_n, "s_h": s_h, "s_m": s_m, "t": cache["t"] + 1}
+    return logits, new_cache
+
+
+# --------------------------------------------------------------------------- #
+def build(cfg) -> "model_zoo.Model":
+    table = param_table(cfg)
+
+    def fwd(params, batch, shd):
+        return forward(cfg, params, batch["tokens"], shd)
+
+    return model_zoo.Model(
+        cfg=cfg,
+        table=table,
+        forward=fwd,
+        decode_step=lambda params, cache, tokens, shd: decode_step(
+            cfg, params, cache, tokens, shd),
+        init_cache_abstract=lambda shd, b, s: init_cache_abstract(cfg, shd, b, s),
+        init_cache=lambda shd, b, s: init_cache(cfg, shd, b, s),
+        extra_inputs=lambda shape, shd: {},
+    )

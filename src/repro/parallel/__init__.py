@@ -1,0 +1,1 @@
+from repro.parallel.sharding import Sharder, mesh_axis_sizes  # noqa: F401

@@ -1,0 +1,127 @@
+"""Sharding rules: logical tensor roles -> mesh PartitionSpecs.
+
+The production mesh is ``("data", "model")`` single-pod or
+``("pod", "data", "model")`` multi-pod (see launch/mesh.py).  The GEPS
+grid-brick placement maps:
+
+- the *brick* axes (event/batch shards that never move) -> ``("pod","data")``,
+- tensor parallelism inside a node group                 -> ``"model"``,
+- FSDP (ZeRO-3) parameter sharding                       -> ``"data"``
+  (never ``"pod"``: GEPS keeps cross-pod/WAN traffic to result-merge only,
+  so parameters are replicated across pods and gradients are merged
+  hierarchically).
+
+Roles are resolved against actual dimension sizes: a dimension that does not
+divide the mesh axis falls back to replication (e.g. 24 heads on a 16-way
+model axis, 8 kv-heads on 16-way TP).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def mesh_axis_sizes(mesh: Mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+class Sharder:
+    """Resolves logical roles to mesh axes for one (config, mesh) pair.
+
+    Roles:
+      batch   – global batch / brick axis -> ("pod","data") (or ("data",))
+      fsdp    – parameter d_model-like dim -> "data" (if cfg.fsdp_params)
+      tensor  – TP dim (heads / d_ff / vocab / recurrent width) -> "model"
+      expert  – MoE expert dim -> "model" when cfg.moe_sharding == "ep"
+      moe_ff  – MoE d_ff dim   -> "model" when cfg.moe_sharding == "tp"
+      seq     – sequence dim -> "model" when cfg.seq_shard_norm (SP sections)
+      null    – replicated
+    """
+
+    def __init__(self, cfg, mesh: Mesh):
+        self.cfg = cfg
+        self.mesh = mesh
+        sizes = mesh_axis_sizes(mesh)
+        names = mesh.axis_names
+        self.batch_axes: Tuple[str, ...] = tuple(
+            a for a in ("pod", "data") if a in names
+        )
+        self.batch_size_total = 1
+        for a in self.batch_axes:
+            self.batch_size_total *= sizes[a]
+        self.fsdp_axis: Optional[str] = "data" if "data" in names else None
+        self.tensor_axis: Optional[str] = "model" if "model" in names else None
+        self.tensor_size = sizes.get("model", 1)
+        self.fsdp_size = sizes.get("data", 1)
+
+    # ------------------------------------------------------------------ #
+    def _resolve(self, role: str, dim: int):
+        cfg = self.cfg
+        if role in (None, "null"):
+            return None
+        if role == "batch":
+            if not self.batch_axes:
+                return None
+            return self.batch_axes if dim % self.batch_size_total == 0 else None
+        if role == "fsdp":
+            if not cfg.fsdp_params or self.fsdp_axis is None:
+                return None
+            return self.fsdp_axis if dim % self.fsdp_size == 0 else None
+        if role == "fsdp_act":  # activation dim sharded over data irrespective
+            if self.fsdp_axis is None:
+                return None
+            return self.fsdp_axis if dim % self.fsdp_size == 0 else None
+        if role == "tensor":
+            if self.tensor_axis is None:
+                return None
+            return self.tensor_axis if dim % self.tensor_size == 0 else None
+        if role == "expert":
+            if cfg.num_experts and cfg.moe_sharding == "ep":
+                return self._resolve("tensor", dim)
+            return None
+        if role == "moe_ff":
+            if cfg.num_experts and cfg.moe_sharding == "tp":
+                return self._resolve("tensor", dim)
+            return None
+        if role == "moe_d":
+            return self._resolve("fsdp", dim)
+        if role == "seq":
+            if not cfg.seq_shard_norm:
+                return None
+            return self._resolve("tensor", dim)
+        raise ValueError(f"unknown sharding role: {role}")
+
+    def spec(self, roles: Sequence[Optional[str]], shape: Sequence[int]) -> P:
+        assert len(roles) == len(shape), (roles, shape)
+        return P(*[self._resolve(r, d) for r, d in zip(roles, shape)])
+
+    def named(self, roles: Sequence[Optional[str]], shape: Sequence[int]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(roles, shape))
+
+    # ------------------------------------------------------------------ #
+    def ws(self, x: jax.Array, *roles: Optional[str]) -> jax.Array:
+        """with_sharding_constraint by logical roles (no-op outside jit)."""
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec(roles, x.shape))
+        )
+
+    # Convenience activation constraints ------------------------------- #
+    def act_btd(self, x):  # (batch, seq, d_model)
+        return self.ws(x, "batch", None, None)
+
+    def act_bthd(self, x):  # (batch, seq, heads, head_dim)
+        return self.ws(x, "batch", None, "tensor", None)
+
+    def act_btf(self, x):  # (batch, seq, d_ff)
+        return self.ws(x, "batch", None, "tensor")
+
+    def act_btv(self, x):  # (batch, seq, vocab)
+        return self.ws(x, "batch", None, "tensor")
+
+    def batch_spec(self, shape) -> P:
+        return self.spec(["batch"] + [None] * (len(shape) - 1), shape)
+
+

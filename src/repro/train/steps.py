@@ -1,0 +1,123 @@
+"""train_step / serve_step builders.
+
+These are the SPMD "jobs" the GEPS JSE dispatches: each step consumes the
+brick-resident batch shard on every device, computes locally, and merges
+results (gradients / logits) through the hierarchical collective schedule
+implied by the shardings — never moving raw event/token data off its brick.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.optim.adamw import AdamW, adamw_update
+from repro.parallel.sharding import Sharder
+
+
+def cross_entropy(logits, labels, vocab_size: int):
+    """logits (B,S,Vp) any-dtype, labels (B,S) int32; mean CE over real vocab."""
+    lf = logits.astype(jnp.float32)
+    vp = lf.shape[-1]
+    if vp != vocab_size:
+        # mask padded vocab slots out of the partition function
+        iota = jax.lax.broadcasted_iota(jnp.int32, (vp,), 0)
+        lf = jnp.where(iota >= vocab_size, -1e30, lf)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def make_loss_fn(cfg, model, shd):
+    def loss_fn(params, batch):
+        logits, aux = model.forward(params, batch, shd)
+        # next-token prediction: positions 0..S-2 predict labels 1..S-1
+        loss = cross_entropy(logits[:, :-1, :], batch["labels"][:, 1:],
+                             cfg.vocab_size)
+        total = loss + 0.01 * aux
+        return total, {"loss": loss, "aux_loss": aux}
+
+    return loss_fn
+
+
+def make_train_step(cfg, model, mesh, opt: Optional[AdamW] = None,
+                    lr: float = 3e-4):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    With cfg.microbatches > 1 the global batch is split into M microbatches
+    and gradients are accumulated in f32 over a lax.scan — this is what
+    bounds live activation memory (the GEPS "packet" granularity knob at
+    the SPMD level; see EXPERIMENTS.md section Perf for its tuning).
+    """
+    opt = opt or AdamW(moment_dtype=cfg.opt_moment_dtype)
+    shd = Sharder(cfg, mesh)
+    loss_fn = make_loss_fn(cfg, model, shd)
+    M = max(1, cfg.microbatches)
+    acc_dt = jnp.dtype(cfg.grad_accum_dtype)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if M == 1:
+            (total, metrics), grads = grads_of(params, batch)
+        else:
+            def split(x):
+                return x.reshape((M, x.shape[0] // M) + x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params)
+
+            def acc(carry, mb_i):
+                g_sum, tot_sum, m_sum = carry
+                (tot, met), g = grads_of(params, mb_i)
+                g_sum = jax.tree.map(
+                    lambda a, b: a + b.astype(acc_dt), g_sum, g)
+                m_sum = jax.tree.map(lambda a, b: a + b, m_sum, met)
+                return (g_sum, tot_sum + tot, m_sum), None
+
+            m0 = {"loss": jnp.float32(0.0), "aux_loss": jnp.float32(0.0)}
+            if cfg.unroll_microbatches:
+                carry = (g0, jnp.float32(0.0), m0)
+                for i in range(M):
+                    carry, _ = acc(carry, jax.tree.map(lambda x: x[i], mb))
+                g_sum, total, m_sum = carry
+            else:
+                (g_sum, total, m_sum), _ = jax.lax.scan(
+                    acc, (g0, jnp.float32(0.0), m0), mb)
+            grads = jax.tree.map(lambda g: g / M, g_sum)
+            total = total / M
+            metrics = jax.tree.map(lambda x: x / M, m_sum)
+
+        params, opt_state, opt_metrics = adamw_update(
+            params, grads, opt_state, lr, opt)
+        metrics = dict(metrics, **opt_metrics, total_loss=total)
+        return params, opt_state, metrics
+
+    return train_step, shd
+
+
+def make_prefill_step(cfg, model, mesh):
+    """serve prefill: full-sequence forward -> last-position logits."""
+    shd = Sharder(cfg, mesh)
+
+    def prefill_step(params, batch):
+        logits, _ = model.forward(params, batch, shd)
+        return logits[:, -1, :]
+
+    return prefill_step, shd
+
+
+def make_decode_step(cfg, model, mesh):
+    """serve decode: one token in, one token's logits out, cache updated."""
+    shd = Sharder(cfg, mesh)
+
+    def decode_step(params, cache, batch):
+        logits, cache = model.decode_step(params, cache, batch["tokens"], shd)
+        return logits[:, -1, :], cache
+
+    return decode_step, shd

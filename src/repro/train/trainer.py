@@ -1,0 +1,121 @@
+"""Training driver: brick-fed data, checkpoint/restart, failure recovery.
+
+The control loop is the GEPS JSE applied to training: the catalogue tracks
+node health, the packet scheduler feeds the batch from node-local bricks,
+checkpoints make any failure a bounded-loss restart, and elastic re-meshing
+(core/elastic.py + checkpoint restore-by-path) handles permanent node loss.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint.ckpt import CheckpointManager, latest_step
+from repro.core.catalog import MetadataCatalog
+from repro.data.pipeline import BrickDataPipeline, TokenBrickStore
+from repro.models import model_zoo
+from repro.optim.adamw import AdamW, init_opt_state
+from repro.parallel.sharding import Sharder
+from repro.train import steps as steps_lib
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 25
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep_ckpts: int = 3
+    global_batch: int = 8
+    seq_len: int = 128
+    lr: float = 3e-4
+    log_every: int = 10
+    async_ckpt: bool = True
+
+
+class Trainer:
+    def __init__(self, cfg, tcfg: TrainerConfig, mesh, *,
+                 n_data_nodes: int = 4,
+                 failure_hook: Optional[Callable[[int], Optional[int]]] = None):
+        """failure_hook(step) -> node_id to kill at that step (simulation)."""
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.model = model_zoo.build_model(cfg)
+        self.shd = Sharder(cfg, mesh)
+        self.opt = AdamW()
+        self.failure_hook = failure_hook
+
+        self.catalog = MetadataCatalog(n_data_nodes)
+        store = TokenBrickStore(
+            vocab_size=cfg.vocab_size, seq_len=tcfg.seq_len,
+            n_bricks=2 * n_data_nodes,
+            seqs_per_brick=max(4, tcfg.global_batch),
+            n_nodes=n_data_nodes)
+        self.pipeline = BrickDataPipeline(
+            store, self.catalog, global_batch=tcfg.global_batch, mesh=mesh)
+
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep_ckpts,
+                                      async_save=tcfg.async_ckpt)
+        step_fn, _ = steps_lib.make_train_step(cfg, self.model, mesh,
+                                               self.opt, lr=tcfg.lr)
+        self.step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+        self.history: list = []
+
+    # ------------------------------------------------------------------ #
+    def init_state(self):
+        params = self.model.table.init(jax.random.key(0))
+        params = jax.device_put(params, self.model.table.shardings(self.shd))
+        opt_state = init_opt_state(params, self.opt)
+        return params, opt_state
+
+    def _restore_or_init(self):
+        step = latest_step(self.tcfg.ckpt_dir)
+        if step is None:
+            params, opt_state = self.init_state()
+            return 0, params, opt_state
+        abstract = {
+            "params": self.model.table.abstract_sharded(self.shd),
+        }
+        tree, manifest = self.ckpt.restore_latest(
+            abstract=None)  # restore raw then place
+        params = jax.device_put(tree["params"],
+                                self.model.table.shardings(self.shd))
+        opt_state = jax.tree.map(jnp.asarray, tree["opt_state"])
+        return manifest["step"], params, opt_state
+
+    # ------------------------------------------------------------------ #
+    def train(self) -> Dict[str, float]:
+        start_step, params, opt_state = self._restore_or_init()
+        step = start_step
+        t0 = time.time()
+        while step < self.tcfg.total_steps:
+            # simulated node failure: mark dead, data fails over to replicas
+            if self.failure_hook is not None:
+                victim = self.failure_hook(step)
+                if victim is not None:
+                    self.catalog.mark_dead(victim)
+                    self.pipeline.sched.requeue_node(victim)
+            batch = self.pipeline.next_device_batch()
+            params, opt_state, metrics = self.step_fn(params, opt_state, batch)
+            step += 1
+            if step % self.tcfg.log_every == 0 or step == self.tcfg.total_steps:
+                loss = float(metrics["loss"])
+                self.history.append({"step": step, "loss": loss})
+            if step % self.tcfg.ckpt_every == 0:
+                self.ckpt.save(step, {"params": params,
+                                      "opt_state": opt_state},
+                               extra={"name": self.cfg.name})
+        self.ckpt.save(step, {"params": params, "opt_state": opt_state},
+                       extra={"name": self.cfg.name})
+        self.ckpt.wait()
+        return {
+            "steps": step - start_step,
+            "final_loss": self.history[-1]["loss"] if self.history else None,
+            "wall_s": time.time() - t0,
+        }

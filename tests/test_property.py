@@ -1,0 +1,165 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.geps_events import reduced
+from repro.core import events as ev
+from repro.core import merge as merge_lib
+from repro.core import query as query_lib
+from repro.core.brick import create_store, gather_store
+from repro.core.catalog import MetadataCatalog
+from repro.core.packets import AdaptivePacketScheduler
+from repro.core.replication import (failover_owner, place_replicas,
+                                    rereplication_plan)
+from repro.parallel.collectives import dequantize_int8, quantize_int8
+
+SCHEMA = ev.EventSchema.from_config(reduced())
+SETTINGS = dict(max_examples=30, deadline=None)
+
+
+# --------------- query compiler: predicate semantics ---------------- #
+@settings(**SETTINGS)
+@given(th=st.floats(0, 200), n=st.integers(4, 64), seed=st.integers(0, 999))
+def test_query_threshold_matches_numpy(th, n, seed):
+    rng = np.random.default_rng(seed)
+    batch = ev.host_events(rng, SCHEMA, n)
+    jb = {k: jnp.asarray(v) for k, v in batch.items()}
+    fn = query_lib.compile_query(f"e_total > {th}", SCHEMA)
+    mask = np.asarray(fn(jb)) != 0
+    np.testing.assert_array_equal(mask, batch["scalars"][:, 0] > th)
+
+
+@settings(**SETTINGS)
+@given(t1=st.floats(1, 100), t2=st.floats(1, 100), seed=st.integers(0, 99))
+def test_query_monotone_in_threshold(t1, t2, seed):
+    """Raising a '>' threshold can only shrink the selection."""
+    lo, hi = sorted((t1, t2))
+    rng = np.random.default_rng(seed)
+    batch = ev.host_events(rng, SCHEMA, 48)
+    jb = {k: jnp.asarray(v) for k, v in batch.items()}
+    n_lo = float(query_lib.compile_query(f"e_total > {lo}", SCHEMA)(jb).sum())
+    n_hi = float(query_lib.compile_query(f"e_total > {hi}", SCHEMA)(jb).sum())
+    assert n_hi <= n_lo
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 999))
+def test_query_and_is_intersection(seed):
+    rng = np.random.default_rng(seed)
+    batch = ev.host_events(rng, SCHEMA, 48)
+    jb = {k: jnp.asarray(v) for k, v in batch.items()}
+    a = query_lib.compile_query("e_total > 40", SCHEMA)(jb) != 0
+    b = query_lib.compile_query("n_tracks >= 3", SCHEMA)(jb) != 0
+    ab = query_lib.compile_query("e_total > 40 && n_tracks >= 3",
+                                 SCHEMA)(jb) != 0
+    np.testing.assert_array_equal(np.asarray(ab), np.asarray(a & b))
+
+
+# --------------- merge: associativity / partition invariance --------- #
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 999),
+       cuts=st.lists(st.integers(1, 99), min_size=0, max_size=6))
+def test_merge_partition_invariant(seed, cuts):
+    """Any partition of the events into bricks merges to the same result."""
+    rng = np.random.default_rng(seed)
+    n = 100
+    mask = rng.integers(0, 2, n)
+    var = rng.uniform(0, 500, n).astype(np.float32)
+    ids = np.arange(n)
+    whole = merge_lib.from_mask(mask, var, ids)
+    bounds = sorted(set([0, n] + [c % n for c in cuts]))
+    parts = [merge_lib.from_mask(mask[a:b], var[a:b], ids[a:b])
+             for a, b in zip(bounds[:-1], bounds[1:]) if b > a]
+    merged = merge_lib.tree_merge(parts)
+    assert merged.n_selected == whole.n_selected
+    assert np.isclose(merged.sum_var, whole.sum_var, rtol=1e-5)
+    np.testing.assert_array_equal(merged.hist, whole.hist)
+
+
+# --------------- packets: work conservation under failures ----------- #
+@settings(**SETTINGS)
+@given(n_nodes=st.integers(2, 8), total=st.integers(1, 500),
+       kill=st.integers(0, 7), seed=st.integers(0, 99))
+def test_packets_conserve_work_under_failure(n_nodes, total, kill, seed):
+    cat = MetadataCatalog(n_nodes)
+    rng = np.random.default_rng(seed)
+    for n in range(n_nodes):
+        cat.node(n).throughput_ema = float(rng.uniform(0.3, 3.0))
+    sched = AdaptivePacketScheduler(cat, base_packet=32)
+    sched.add_work(0, total)
+    done = 0
+    killed = False
+    step = 0
+    while not sched.exhausted:
+        for node in cat.alive_nodes():
+            pkt = sched.next_packet(node)
+            if pkt is None:
+                continue
+            if not killed and kill < n_nodes and node == kill and step > 2:
+                sched.fail(pkt.packet_id, node_dead=True)
+                killed = True
+                break
+            sched.complete(pkt.packet_id, pkt.size, 0.01 * pkt.size)
+            done += pkt.size
+            step += 1
+        if len(cat.alive_nodes()) == 0:
+            break
+    if cat.alive_nodes():
+        assert done == total  # exactly-once processing
+
+
+# --------------- replication invariants ------------------------------ #
+@settings(**SETTINGS)
+@given(n_nodes=st.integers(2, 16), repl=st.integers(1, 4),
+       bid=st.integers(0, 100))
+def test_replicas_never_on_primary(n_nodes, repl, bid):
+    node = bid % n_nodes
+    reps = place_replicas(bid, node, n_nodes, repl)
+    assert node not in reps
+    assert len(set(reps)) == len(reps)
+    assert len(reps) == min(repl - 1, n_nodes - 1)
+
+
+@settings(**SETTINGS)
+@given(n_nodes=st.integers(3, 10), seed=st.integers(0, 99))
+def test_rereplication_restores_coverage(n_nodes, seed):
+    store = create_store(SCHEMA, n_events=64, n_nodes=n_nodes,
+                         events_per_brick=8, replication=2, seed=seed)
+    rng = np.random.default_rng(seed)
+    dead = {int(rng.integers(0, n_nodes))}
+    plan = rereplication_plan(store.specs, dead, n_nodes)
+    for bid, src, dst in plan:
+        assert src not in dead and dst not in dead
+        spec = store.specs[bid]
+        spec.replicas = spec.replicas + (dst,)
+    for bid in store.specs:
+        owners = set(store.owners(bid)) - dead
+        assert len(owners) >= min(2, n_nodes - len(dead))
+
+
+# --------------- numerics ------------------------------------------- #
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 999), scale=st.floats(1e-3, 1e3))
+def test_quantize_roundtrip_error_bound(seed, scale):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray((rng.normal(size=(64,)) * scale).astype(np.float32))
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, s) - x))
+    assert err.max() <= float(s) * 0.5 + 1e-9 * scale
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 999))
+def test_attention_output_is_convex_combination(seed):
+    """Causal softmax attention outputs lie inside the convex hull of V."""
+    from repro.kernels.flash_attention.kernel import flash_attention
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(1, 32, 2, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 32, 2, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 32, 2, 16)), jnp.float32)
+    out = np.asarray(flash_attention(q, k, v, causal=True,
+                                     block_q=16, block_k=16))
+    vmax = np.asarray(v).max()
+    vmin = np.asarray(v).min()
+    assert out.max() <= vmax + 1e-4 and out.min() >= vmin - 1e-4
