@@ -5,6 +5,7 @@ table.  Prints ``name,value,derived`` CSV blocks.
   granularity  - paper section 6 packet-size effect
   straggler    - PROOF-style adaptive packets vs fixed
   failover     - node death with/without replication (paper future work)
+  multiquery   - K-query shared scan vs one-job-at-a-time + cache hits
   query_spmd   - SPMD grid-brick query step micro-benchmark (real compute)
   roofline     - per-(arch x shape) terms from the dry-run artifacts
                  (skipped unless artifacts exist; see launch/dryrun.py)
@@ -34,6 +35,10 @@ def main() -> None:
     _section("failover (paper future work)")
     from benchmarks import bench_failover
     bench_failover.main()
+
+    _section("multi-query shared scan + result cache (service)")
+    from benchmarks import bench_multiquery
+    bench_multiquery.main()
 
     _section("spmd query step (grid-brick job, wall time on this host)")
     import jax

@@ -11,4 +11,5 @@
 """
 from repro.core.brick import BrickSpec, BrickStore, create_store  # noqa: F401
 from repro.core.catalog import MetadataCatalog  # noqa: F401
-from repro.core.jse import JobSubmissionEngine, TimeModel, spmd_query_step  # noqa: F401
+from repro.core.jse import (JobSubmissionEngine, TimeModel,  # noqa: F401
+                            spmd_query_batch_step, spmd_query_step)

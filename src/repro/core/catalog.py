@@ -14,7 +14,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 PENDING, RUNNING, DONE, FAILED = "PENDING", "RUNNING", "DONE", "FAILED"
 
@@ -50,6 +50,8 @@ class JobRecord:
     events_processed: int = 0
     failures: int = 0
     note: str = ""
+    tenant: str = ""       # multi-tenant service: submitting tenant
+    batch_id: int = -1     # shared-scan batch this job was coalesced into
 
 
 class MetadataCatalog:
@@ -58,15 +60,42 @@ class MetadataCatalog:
         self.nodes: Dict[int, NodeInfo] = {
             i: NodeInfo(i) for i in range(n_nodes)}
         self._next_job = 0
+        # dataset version: bumped whenever the raw-data distribution
+        # changes (new run appended, brick recalibrated, ...) — consumers
+        # (the service result cache) subscribe to invalidate stale results
+        self.dataset_epoch = 0
+        self._epoch_hooks: List[Callable[[int], None]] = []
 
     # ------------------------- job tuples --------------------------- #
     def submit(self, expr: str, calib_iters: int = 4,
-               bricks: Tuple[int, ...] = ()) -> int:
+               bricks: Tuple[int, ...] = (), *, tenant: str = "",
+               batch_id: int = -1) -> int:
         jid = self._next_job
         self._next_job += 1
         self.jobs[jid] = JobRecord(jid, expr, calib_iters,
-                                   submit_time=time.time(), bricks=bricks)
+                                   submit_time=time.time(), bricks=bricks,
+                                   tenant=tenant, batch_id=batch_id)
         return jid
+
+    # ------------------------- dataset versioning ------------------- #
+    def on_dataset_bump(self, hook: Callable[[int], None]):
+        """Register a callback fired with the new epoch on every bump."""
+        self._epoch_hooks.append(hook)
+
+    def off_dataset_bump(self, hook: Callable[[int], None]):
+        """Remove a previously registered bump callback (no-op if absent)."""
+        try:
+            self._epoch_hooks.remove(hook)
+        except ValueError:
+            pass
+
+    def bump_dataset_version(self) -> int:
+        """Record a change to the raw-data distribution (paper: the
+        catalogue tracks where the data lives; here also *which version*)."""
+        self.dataset_epoch += 1
+        for hook in self._epoch_hooks:
+            hook(self.dataset_epoch)
+        return self.dataset_epoch
 
     def next_pending(self) -> Optional[JobRecord]:
         for jid in sorted(self.jobs):
@@ -106,6 +135,7 @@ class MetadataCatalog:
             "jobs": {k: dataclasses.asdict(v) for k, v in self.jobs.items()},
             "nodes": {k: dataclasses.asdict(v) for k, v in self.nodes.items()},
             "next_job": self._next_job,
+            "dataset_epoch": self.dataset_epoch,
         })
 
     @classmethod
@@ -118,4 +148,5 @@ class MetadataCatalog:
         for k, v in data["nodes"].items():
             cat.nodes[int(k)] = NodeInfo(**v)
         cat._next_job = data["next_job"]
+        cat.dataset_epoch = data.get("dataset_epoch", 0)
         return cat

@@ -43,9 +43,14 @@ class TimeModel:
     t_event_s: float = 2.0e-3          # per-event processing on a 1x node
     stage_overhead_s: float = 1.15     # executable staging (GRAM) per node
     dispatch_latency_s: float = 0.05   # per-packet control round trip
-    result_bytes: float = 2.0e5        # per-node result file
+    result_bytes: float = 2.0e5        # per-node result file (per query)
     bandwidth_Bps: float = 12.5e6      # 100 Mbit/s fast Ethernet
     merge_per_node_s: float = 0.02     # JSE merge cost per partial result
+
+    # A shared scan is read-dominated: evaluating K stacked predicates on a
+    # resident slice costs the same sweep as one (the extra FLOPs hide under
+    # the HBM/disk read), so per-packet compute is charged once per batch.
+    # Only the result files and the JSE merge scale with K.
 
 
 @dataclasses.dataclass
@@ -55,6 +60,8 @@ class JobStats:
     packets: int = 0
     failures: int = 0
     reassigned: int = 0
+    events_scanned: int = 0   # brick events swept (shared across a batch)
+    n_queries: int = 1        # queries amortized over that sweep
 
 
 class JobSubmissionEngine:
@@ -82,16 +89,26 @@ class JobSubmissionEngine:
         return rec.job_id
 
     # ------------------------------------------------------------------ #
-    def _eval_packet(self, predicate, brick_id: int, start: int, size: int,
-                     calib_iters: int) -> merge_lib.QueryResult:
+    def _eval_packet_batch(self, predicates, brick_id: int, start: int,
+                           size: int, calib_iters: int
+                           ) -> List[merge_lib.QueryResult]:
+        """One slice read + one calibration, K predicate evaluations —
+        the shared-scan inner loop (the slice is resident while every
+        in-flight query consumes it)."""
         batch = self.store.bricks[brick_id]
         sl = {k: v[start:start + size] for k, v in batch.items()}
         slj = {k: jnp.asarray(v) for k, v in sl.items()}
         if calib_iters:
             slj = dict(slj, tracks=query_lib.calibrate(slj, calib_iters))
-        mask = np.asarray(predicate(slj))
         var = np.asarray(slj["scalars"][:, 0])  # e_total summary variable
-        return merge_lib.from_mask(mask, var, np.asarray(sl["event_id"]))
+        ids = np.asarray(sl["event_id"])
+        return [merge_lib.from_mask(np.asarray(p(slj)), var, ids)
+                for p in predicates]
+
+    def _eval_packet(self, predicate, brick_id: int, start: int, size: int,
+                     calib_iters: int) -> merge_lib.QueryResult:
+        return self._eval_packet_batch([predicate], brick_id, start, size,
+                                       calib_iters)[0]
 
     def run_job_simulated(self, job_id: int, *,
                           failure_script: Optional[Dict[float, int]] = None
@@ -99,9 +116,33 @@ class JobSubmissionEngine:
         """Event-driven simulation: nodes pull packets, compute (really),
         and finish after a virtual duration; failures re-queue work on the
         surviving replicas (PROOF-style)."""
-        rec = self.catalog.jobs[job_id]
-        self.catalog.update(job_id, status=RUNNING, start_time=time.time())
-        predicate = query_lib.compile_query(rec.expr, self.store.schema)
+        merged, stats = self.run_job_batch_simulated(
+            [job_id], failure_script=failure_script)
+        return merged[0], stats
+
+    def run_job_batch_simulated(self, job_ids: List[int], *,
+                                failure_script: Optional[Dict[float, int]]
+                                = None
+                                ) -> Tuple[List[merge_lib.QueryResult],
+                                           JobStats]:
+        """Shared-scan execution of K coalesced jobs: ONE sweep over the
+        bricks evaluates every job's predicate on each resident packet, so
+        the event-store read is amortized K ways.  Scheduling, failure
+        handling and the per-query merges are identical to K independent
+        ``run_job_simulated`` runs — per-query results are bit-identical."""
+        recs = [self.catalog.jobs[j] for j in job_ids]
+        if not recs:
+            raise ValueError("empty job batch")
+        rec = recs[0]
+        for r in recs[1:]:
+            if r.bricks != rec.bricks or r.calib_iters != rec.calib_iters:
+                raise ValueError(
+                    f"job {r.job_id} incompatible with shared scan "
+                    f"(bricks/calib_iters differ from job {rec.job_id})")
+        for jid in job_ids:
+            self.catalog.update(jid, status=RUNNING, start_time=time.time())
+        predicates = [query_lib.compile_query(r.expr, self.store.schema)
+                      for r in recs]
         failure_script = dict(failure_script or {})
 
         sched = AdaptivePacketScheduler(self.catalog)
@@ -125,12 +166,14 @@ class JobSubmissionEngine:
             sched.add_work(bid, self.store.specs[bid].n_events)
 
         if lost:
-            self.catalog.update(job_id, status=FAILED,
-                                note=f"bricks lost (no replica): {lost}")
-            return merge_lib.QueryResult(), JobStats()
+            for jid in job_ids:
+                self.catalog.update(jid, status=FAILED,
+                                    note=f"bricks lost (no replica): {lost}")
+            return ([merge_lib.QueryResult() for _ in job_ids],
+                    JobStats(n_queries=len(job_ids)))
 
-        stats = JobStats()
-        results: List[merge_lib.QueryResult] = []
+        stats = JobStats(n_queries=len(job_ids))
+        results: List[List[merge_lib.QueryResult]] = []
         # virtual clock: heap of (t_free, node); staging charged on first use
         now = 0.0
         heap = [(0.0, n) for n in self.catalog.alive_nodes()]
@@ -160,9 +203,11 @@ class JobSubmissionEngine:
                 if sched.inflight:
                     heapq.heappush(heap, (now + 0.01, node))
                 continue
-            res = self._eval_packet(predicate, pkt.brick_id, pkt.start,
-                                    pkt.size, rec.calib_iters)
+            res = self._eval_packet_batch(predicates, pkt.brick_id,
+                                          pkt.start, pkt.size,
+                                          rec.calib_iters)
             results.append(res)
+            stats.events_scanned += pkt.size
             compute = pkt.size * self.tm.t_event_s / speed(node)
             dur = self.tm.dispatch_latency_s + compute
             if node not in staged:
@@ -176,22 +221,35 @@ class JobSubmissionEngine:
             stats.packets += 1
             heapq.heappush(heap, (now + dur, node))
 
-        # result transfer + JSE merge
+        if not sched.exhausted:
+            # every node died with work outstanding: the scan is truncated,
+            # never a DONE result (a cached partial would poison repeats)
+            for jid in job_ids:
+                self.catalog.update(jid, status=FAILED,
+                                    note="scan aborted: all nodes dead "
+                                         "with packets outstanding")
+            return ([merge_lib.QueryResult() for _ in job_ids], stats)
+
+        # result transfer + JSE merge (both scale with the batch width)
+        k = len(job_ids)
         n_active = len(stats.per_node_busy)
-        transfer = self.tm.result_bytes / self.tm.bandwidth_Bps
-        merged = merge_lib.tree_merge(results)
-        makespan = now + transfer + n_active * self.tm.merge_per_node_s
+        transfer = k * self.tm.result_bytes / self.tm.bandwidth_Bps
+        merged = (merge_lib.merge_batch(results) if results
+                  else [merge_lib.QueryResult() for _ in job_ids])
+        makespan = now + transfer + k * n_active * self.tm.merge_per_node_s
         stats.makespan_s = makespan
 
-        self.catalog.update(
-            job_id, status=DONE, end_time=time.time(),
-            events_processed=merged.n_processed, failures=stats.failures,
-            result={
-                "n_selected": merged.n_selected,
-                "n_processed": merged.n_processed,
-                "sum_var": merged.sum_var,
-                "makespan_s": makespan,
-            })
+        end = time.time()
+        for jid, m in zip(job_ids, merged):
+            self.catalog.update(
+                jid, status=DONE, end_time=end,
+                events_processed=m.n_processed, failures=stats.failures,
+                result={
+                    "n_selected": m.n_selected,
+                    "n_processed": m.n_processed,
+                    "sum_var": m.sum_var,
+                    "makespan_s": makespan,
+                })
         return merged, stats
 
     def single_node_time(self, n_events: int, calib_iters: int = 0,
@@ -238,6 +296,43 @@ def spmd_query_step(expr: str, schema: ev.EventSchema, calib_iters: int = 0,
             "n_processed": jnp.float32(maskf.shape[0]),
             "sum_var": jnp.sum(var * maskf),
             "hist": hist,
+        }
+
+    return step
+
+
+def spmd_query_batch_step(exprs: List[str], schema: ev.EventSchema,
+                          calib_iters: int = 0,
+                          use_pallas: bool = False) -> Callable:
+    """Batched twin of ``spmd_query_step``: ONE lockstep pass over the
+    sharded event store evaluates K queries, returning a dict whose leaves
+    carry a leading K axis.  The event shards (and the calibration pass)
+    are read/computed once and amortized over every query — the SPMD
+    realization of the service's shared scan."""
+    def step(batch):
+        if use_pallas:
+            from repro.kernels.event_filter import ops as ef_ops
+            masks, var = ef_ops.filter_and_summarize_batch(
+                exprs, schema, batch, calib_iters=calib_iters)
+        else:
+            bpred = query_lib.compile_query_batch(exprs, schema)
+            b = batch
+            if calib_iters:
+                b = dict(b, tracks=query_lib.calibrate(b, calib_iters))
+            masks = bpred(b)                      # (K, N)
+            var = b["scalars"][:, 0]
+        maskf = (masks != 0).astype(jnp.float32)  # (K, N)
+        lo, hi = merge_lib.HIST_RANGE
+        width = (hi - lo) / merge_lib.HIST_BINS
+        idx = jnp.clip(((var - lo) / width).astype(jnp.int32), 0,
+                       merge_lib.HIST_BINS - 1)
+        onehot = jax.nn.one_hot(idx, merge_lib.HIST_BINS, dtype=jnp.float32)
+        return {
+            "n_selected": jnp.sum(maskf, axis=-1),
+            "n_processed": jnp.full((maskf.shape[0],), maskf.shape[1],
+                                    jnp.float32),
+            "sum_var": maskf @ var,
+            "hist": maskf @ onehot,               # (K, HIST_BINS)
         }
 
     return step

@@ -55,6 +55,19 @@ def merge2(a: QueryResult, b: QueryResult) -> QueryResult:
     )
 
 
+def merge_batch(parts: Sequence[Sequence[QueryResult]]) -> List[QueryResult]:
+    """Batched JSE merge for a shared scan: ``parts[i][k]`` is packet *i*'s
+    partial for query *k*.  Each query's partials arrive in the same packet
+    order, so merging column *k* with ``tree_merge`` is bit-identical to
+    the merge an independent single-query job would have produced."""
+    if not parts:
+        return []
+    k = len(parts[0])
+    if any(len(p) != k for p in parts):
+        raise ValueError("ragged batch partials")
+    return [tree_merge([p[q] for p in parts]) for q in range(k)]
+
+
 def tree_merge(results: Sequence[QueryResult]) -> QueryResult:
     """Pairwise tree reduction (the JSE merge schedule)."""
     if not results:

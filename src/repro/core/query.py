@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Callable, List, Optional, Union
+from typing import Callable, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -172,6 +172,56 @@ def parse(src: str) -> Node:
     return _Parser(tokenize(src)).parse()
 
 
+def unparse(node: Node) -> str:
+    """Deterministic fully-parenthesized rendering of an AST."""
+    if isinstance(node, Num):
+        return repr(node.value)
+    if isinstance(node, Var):
+        return node.name
+    if isinstance(node, Agg):
+        return f"{node.fn}({unparse(node.arg)})"
+    if isinstance(node, Unary):
+        return f"{node.op}({unparse(node.arg)})"
+    if isinstance(node, Bin):
+        return f"({unparse(node.lhs)} {node.op} {unparse(node.rhs)})"
+    raise QueryError(f"bad node {node}")
+
+
+def canonical_expr(src: str) -> str:
+    """Canonical form of a filter expression: whitespace, redundant parens
+    and number spellings ("3" vs "3.0") are normalized away, so textually
+    different but identical queries share one result-cache key."""
+    return unparse(parse(src))
+
+
+def validate_expr(src: str, schema: ev.EventSchema) -> Node:
+    """Parse + resolve every variable against the schema (admission-time
+    check: a bad query must be rejected at submit, not on a grid node)."""
+    ast = parse(src)
+
+    def walk(node: Node, track_ctx: bool):
+        if isinstance(node, Var):
+            if node.name == "n_tracks":
+                return
+            if track_ctx and node.name in ev.TRACK_VARS:
+                return
+            try:
+                if schema.scalar_index(node.name) >= schema.n_scalars:
+                    raise ValueError
+            except ValueError:
+                raise QueryError(f"unknown variable {node.name!r}") from None
+        elif isinstance(node, Agg):
+            walk(node.arg, True)
+        elif isinstance(node, Unary):
+            walk(node.arg, track_ctx)
+        elif isinstance(node, Bin):
+            walk(node.lhs, track_ctx)
+            walk(node.rhs, track_ctx)
+
+    walk(ast, False)
+    return ast
+
+
 # ---------------------------- compiler ----------------------------------- #
 def compile_query(src: str, schema: ev.EventSchema) -> Callable:
     """Compile to ``fn(batch) -> (N,) f32`` (bool predicates return 0/1)."""
@@ -243,6 +293,23 @@ def compile_query(src: str, schema: ev.EventSchema) -> Callable:
 
     def fn(batch):
         return eval_node(ast, batch, False)
+
+    return fn
+
+
+def compile_query_batch(exprs: Sequence[str],
+                        schema: ev.EventSchema) -> Callable:
+    """Stack K compiled predicates into ONE fused pass over a batch.
+
+    Returns ``fn(batch) -> (K, N) f32``.  Under jit the K predicates share
+    every common subexpression (the scalars/tracks loads, validity masks,
+    track aggregates), so the event store is read once per sweep no matter
+    how many queries ride along — the shared-scan primitive of the
+    multi-tenant query service."""
+    fns = [compile_query(e, schema) for e in exprs]
+
+    def fn(batch):
+        return jnp.stack([f(batch) for f in fns], axis=0)
 
     return fn
 

@@ -67,6 +67,94 @@ def _kernel(scalars_ref, tracks_ref, ntr_ref, thr_ref,
         var_ref[...] = sc[:, 0]
 
 
+def _batch_kernel(scalars_ref, tracks_ref, ntr_ref, thr_ref,
+                  mask_ref, var_ref, cnt_ref, sum_ref, *,
+                  calib_iters: int, var_idx: tuple, block_t: int):
+    """K-query shared scan: tracks stream HBM->VMEM once; the per-query
+    track counts (cnt is (BE, K)) and masks amortize that single read
+    across the whole coalesced batch.  sum(pt) is query-independent, so
+    one (BE,) accumulator serves every query."""
+    tt = pl.program_id(1)
+    n_tiles = pl.num_programs(1)
+
+    @pl.when(tt == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+
+    trk = tracks_ref[...].astype(jnp.float32)  # (BE, BT, V)
+
+    def body(i, t):
+        pt = t[..., 0:1]
+        corr = 1.0 + 0.01 * jnp.tanh(t) * jax.lax.rsqrt(1.0 + pt * pt)
+        return t * corr
+
+    trk = jax.lax.fori_loop(0, calib_iters, body, trk)
+    pt = trk[..., 0]  # (BE, BT)
+
+    t0 = tt * block_t
+    tidx = t0 + jax.lax.broadcasted_iota(jnp.int32, pt.shape, 1)
+    valid = tidx < ntr_ref[...]  # (BE, BT)
+
+    pt_thr = thr_ref[1, :]       # (K,)
+    hit = valid[..., None] & (pt[..., None] > pt_thr)  # (BE, BT, K)
+    cnt_ref[...] += jnp.sum(jnp.where(hit, 1.0, 0.0), axis=1)
+    sum_ref[...] += jnp.sum(jnp.where(valid, pt, 0.0), axis=-1)
+
+    @pl.when(tt == n_tiles - 1)
+    def _finalize():
+        sc = scalars_ref[...].astype(jnp.float32)  # (BE, n_scalars)
+        # per-query scalar variable: static gather, K is small
+        sc_sel = jnp.stack([sc[:, i] for i in var_idx], axis=-1)  # (BE, K)
+        mask = (sc_sel > thr_ref[0, :]) & (cnt_ref[...] >= thr_ref[2, :])
+        mask = mask & jnp.where(thr_ref[3, :] > 0,
+                                sum_ref[...][:, None] < thr_ref[3, :], True)
+        mask_ref[...] = mask.astype(jnp.float32)
+        var_ref[...] = sc[:, 0]
+
+
+def event_filter_batch_pallas(scalars, tracks, n_tracks, thresholds, *,
+                              var_idx: tuple, calib_iters: int,
+                              block_e: int = 128, block_t: int = 512,
+                              interpret: bool = True):
+    """Batched variant: thresholds (4, K) f32 = per-query
+    [scalar_thresh; pt_thresh; min_count; sum_cap] columns, var_idx a
+    static K-tuple of scalar indices.  Returns (mask (N, K), var (N,))."""
+    n, s = scalars.shape
+    _, t, v = tracks.shape
+    k = thresholds.shape[1]
+    block_e = min(block_e, n)
+    block_t = min(block_t, t)
+    grid = (pl.cdiv(n, block_e), pl.cdiv(t, block_t))
+
+    kernel = functools.partial(_batch_kernel, calib_iters=calib_iters,
+                               var_idx=tuple(var_idx), block_t=block_t)
+    mask, var, _, _ = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_e, s), lambda e, tt: (e, 0)),
+            pl.BlockSpec((block_e, block_t, v), lambda e, tt: (e, tt, 0)),
+            pl.BlockSpec((block_e, 1), lambda e, tt: (e, 0)),
+            pl.BlockSpec((4, k), lambda e, tt: (0, 0)),  # thresholds (whole)
+        ],
+        out_specs=[
+            pl.BlockSpec((block_e, k), lambda e, tt: (e, 0)),
+            pl.BlockSpec((block_e,), lambda e, tt: (e,)),
+            pl.BlockSpec((block_e, k), lambda e, tt: (e, 0)),
+            pl.BlockSpec((block_e,), lambda e, tt: (e,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, k), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n, k), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(scalars, tracks, n_tracks[:, None], thresholds)
+    return mask, var
+
+
 def event_filter_pallas(scalars, tracks, n_tracks, thresholds, *,
                         var_idx: int, calib_iters: int,
                         block_e: int = 128, block_t: int = 512,

@@ -17,8 +17,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import query as q
-from repro.kernels.event_filter.kernel import event_filter_pallas
-from repro.kernels.event_filter.ref import event_filter_ref
+from repro.kernels.event_filter.kernel import (event_filter_batch_pallas,
+                                               event_filter_pallas)
+from repro.kernels.event_filter.ref import (event_filter_batch_ref,
+                                            event_filter_ref)
 
 
 def match_canonical(expr: str, schema) -> Optional[dict]:
@@ -112,3 +114,44 @@ def filter_and_summarize(expr: str, schema, batch, *, calib_iters: int = 0,
         batch["scalars"], batch["tracks"], batch["n_tracks"], thresholds,
         var_idx=params["var_idx"], calib_iters=calib_iters,
         interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("var_idx", "calib_iters",
+                                             "interpret", "use_pallas"))
+def event_filter_batch(scalars, tracks, n_tracks, thresholds, *,
+                       var_idx: Tuple[int, ...], calib_iters: int,
+                       interpret: bool = True, use_pallas: bool = True):
+    if use_pallas:
+        return event_filter_batch_pallas(
+            scalars, tracks, n_tracks, thresholds, var_idx=var_idx,
+            calib_iters=calib_iters, interpret=interpret)
+    return event_filter_batch_ref(
+        scalars, tracks, n_tracks, thresholds, var_idx=var_idx,
+        calib_iters=calib_iters)
+
+
+def filter_and_summarize_batch(exprs, schema, batch, *, calib_iters: int = 0,
+                               interpret: bool = True):
+    """K-query shared scan: (masks (K, N), var (N,)).
+
+    The fused batched kernel runs when EVERY expression matches the
+    canonical hot family; a single non-canonical straggler drops the whole
+    window to the stacked-predicate jnp path (still one sweep, one shared
+    calibration — just without the kernel's track-streaming fusion)."""
+    params = [match_canonical(e, schema) for e in exprs]
+    if any(p is None for p in params):
+        bpred = q.compile_query_batch(exprs, schema)
+        b = batch
+        if calib_iters:
+            b = dict(b, tracks=q.calibrate(b, calib_iters))
+        return bpred(b), b["scalars"][:, 0]
+    thresholds = jnp.array(
+        [[p["scalar_thresh"] for p in params],
+         [p["pt_thresh"] for p in params],
+         [p["min_count"] for p in params],
+         [p["sum_cap"] for p in params]], jnp.float32)   # (4, K)
+    var_idx = tuple(p["var_idx"] for p in params)
+    mask, var = event_filter_batch(
+        batch["scalars"], batch["tracks"], batch["n_tracks"], thresholds,
+        var_idx=var_idx, calib_iters=calib_iters, interpret=interpret)
+    return mask.T, var

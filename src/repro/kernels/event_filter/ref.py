@@ -41,3 +41,22 @@ def event_filter_ref(scalars, tracks, n_tracks, *, var_idx: int,
     if sum_cap > 0:
         mask = mask & (ssum < sum_cap)
     return mask.astype(jnp.float32), scalars[:, 0]
+
+
+def event_filter_batch_ref(scalars, tracks, n_tracks, thresholds, *,
+                           var_idx, calib_iters: int):
+    """Batched oracle: thresholds (4, K) columns per query, var_idx a
+    K-tuple.  Returns (mask (N, K) f32 in {0,1}, var (N,) f32) — one
+    calibration + one track sweep shared by all K queries."""
+    trk = calibrate_tracks(tracks.astype(jnp.float32), calib_iters)
+    pt = trk[..., 0]  # (N, T)
+    t = jnp.arange(pt.shape[-1])
+    valid = t[None, :] < n_tracks[:, None]
+    hit = valid[..., None] & (pt[..., None] > thresholds[1, :])  # (N, T, K)
+    cnt = jnp.sum(jnp.where(hit, 1.0, 0.0), axis=1)              # (N, K)
+    ssum = jnp.sum(jnp.where(valid, pt, 0.0), axis=-1)           # (N,)
+    sc_sel = jnp.stack([scalars[:, i] for i in var_idx], axis=-1)
+    mask = (sc_sel > thresholds[0, :]) & (cnt >= thresholds[2, :])
+    mask = mask & jnp.where(thresholds[3, :] > 0,
+                            ssum[:, None] < thresholds[3, :], True)
+    return mask.astype(jnp.float32), scalars[:, 0]

@@ -1,10 +1,16 @@
-"""Serving launcher: batched prefill -> decode loop over the brick-sharded
-KV cache.  ``python -m repro.launch.serve --arch <id> --reduced``.
+"""Serving launcher with two modes.
 
-The serve path is the GEPS query flow applied to generation: the prompt
-batch is the "job", the KV bricks hold the per-chip context shards, each
-decode step computes locally and merges the per-brick softmax partials
-(core/brick_attention.py).
+``--mode lm`` (default): batched prefill -> decode loop over the
+brick-sharded KV cache.  ``python -m repro.launch.serve --arch <id>
+--reduced``.  The serve path is the GEPS query flow applied to generation:
+the prompt batch is the "job", the KV bricks hold the per-chip context
+shards, each decode step computes locally and merges the per-brick softmax
+partials (core/brick_attention.py).
+
+``--mode query``: the multi-tenant GEPS query service —
+``python -m repro.launch.serve --mode query --tenants 4 --queries 64``.
+Stands up a brick store + QueryService, replays a multi-tenant workload
+with repeats, and reports shared-scan amortization and cache hit rates.
 """
 from __future__ import annotations
 
@@ -49,15 +55,70 @@ def generate(cfg, model, params, shd, prompt, max_new_tokens=16,
     return jnp.concatenate(out, axis=1)
 
 
+def serve_queries(args):
+    """Query-serving mode: multi-tenant traffic over the brick store."""
+    from repro.configs.geps_events import reduced as geps_reduced
+    from repro.core import events as ev
+    from repro.core.brick import create_store
+    from repro.service import QueryService
+
+    cfg = geps_reduced()
+    schema = ev.EventSchema.from_config(cfg)
+    store = create_store(schema, n_events=args.n_events,
+                         n_nodes=args.n_nodes,
+                         events_per_brick=cfg.events_per_brick,
+                         replication=cfg.replication_factor, seed=0)
+    svc = QueryService(store)
+    # multi-tenant workload: a few hot queries repeated across tenants
+    # (the interactive-analysis regime) plus per-tenant long-tail queries
+    hot = ["e_total > 40 && count(pt > 15) >= 2",
+           "e_t_miss > 30", "pt_lead > 60 || n_tracks >= 8"]
+    t0 = time.time()
+    for i in range(args.queries):
+        tenant = f"tenant{i % args.tenants}"
+        if i % 3 != 2:
+            expr = hot[i % len(hot)]
+        else:
+            expr = f"e_total > {20 + (i % 7) * 10} && n_tracks >= {1 + i % 4}"
+        svc.submit(expr, tenant=tenant)
+        if (i + 1) % args.window == 0:
+            svc.step()
+    svc.drain()
+    dt = time.time() - t0
+    s = svc.stats
+    scanned_per_query = s.events_scanned / max(1, s.served - s.cache_hits)
+    print(f"query-service: {s.served}/{s.submitted} served in {dt:.2f}s "
+          f"({s.served / dt:.1f} q/s wall)")
+    print(f"  batches={s.batches} jobs_run={s.jobs_run} "
+          f"cache_hits={s.cache_hits} rejected={s.rejected}")
+    print(f"  events_scanned={s.events_scanned} "
+          f"(store={store.n_events} events; "
+          f"{scanned_per_query:.0f} scanned/executed-query)")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--mode", choices=("lm", "query"), default="lm")
+    ap.add_argument("--arch", choices=list_archs())
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--production-mesh", action="store_true")
+    # query mode
+    ap.add_argument("--n-events", type=int, default=1024)
+    ap.add_argument("--n-nodes", type=int, default=4)
+    ap.add_argument("--tenants", type=int, default=4)
+    ap.add_argument("--queries", type=int, default=64)
+    ap.add_argument("--window", type=int, default=16,
+                    help="submissions per dispatch window")
     args = ap.parse_args(argv)
+
+    if args.mode == "query":
+        serve_queries(args)
+        return
+    if args.arch is None:
+        ap.error("--arch is required for --mode lm")
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     mesh = (make_production_mesh() if args.production_mesh

@@ -1,0 +1,13 @@
+"""Multi-tenant query service over the GEPS grid-brick substrate:
+shared-scan batched execution + result cache + concurrent job queue."""
+from repro.service.cache import CacheStats, ResultCache
+from repro.service.frontend import (QUEUED, REJECTED, SERVED, QueryService,
+                                    ServiceStats, Ticket)
+from repro.service.scheduler import (AdmissionError, QueryScheduler,
+                                     Submission, make_submission)
+
+__all__ = [
+    "AdmissionError", "CacheStats", "QueryScheduler", "QueryService",
+    "QUEUED", "REJECTED", "ResultCache", "SERVED", "ServiceStats",
+    "Submission", "Ticket", "make_submission",
+]

@@ -1,0 +1,94 @@
+"""Query-result cache for the multi-tenant service.
+
+At interactive scale the dominant cost is re-reading brick-resident events
+for queries the grid has already answered (the LHC operational lesson:
+cache and amortize, don't re-scan).  Entries are keyed on
+
+    (canonical expression, calib_iters, dataset epoch)
+
+so textually different but identical queries share one slot, and a
+``MetadataCatalog.bump_dataset_version()`` (new run appended, brick
+recalibrated) makes every older entry unreachable; a registered
+invalidation hook also purges them eagerly to free memory.  Eviction is
+plain LRU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Optional, Tuple
+
+from repro.core import merge as merge_lib
+from repro.core import query as query_lib
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    invalidated: int = 0
+
+
+class ResultCache:
+    def __init__(self, capacity: int = 256, catalog=None):
+        if capacity <= 0:
+            raise ValueError("capacity must be positive")
+        self.capacity = capacity
+        self._entries: "OrderedDict[Tuple, merge_lib.QueryResult]" = \
+            OrderedDict()
+        self.stats = CacheStats()
+        self._catalog = catalog
+        if catalog is not None:
+            catalog.on_dataset_bump(self._on_dataset_bump)
+
+    def detach(self):
+        """Unhook from the catalog (a long-lived catalog would otherwise
+        keep every cache ever attached alive through its hook list)."""
+        if self._catalog is not None:
+            self._catalog.off_dataset_bump(self._on_dataset_bump)
+            self._catalog = None
+
+    @staticmethod
+    def key(expr: str, calib_iters: int, epoch: int,
+            canonical: Optional[str] = None) -> Tuple:
+        # pass `canonical` when the caller already canonicalized (the
+        # service does at admission) to avoid re-parsing the expression
+        if canonical is None:
+            canonical = query_lib.canonical_expr(expr)
+        return (canonical, int(calib_iters), int(epoch))
+
+    def get(self, expr: str, calib_iters: int, epoch: int, *,
+            canonical: Optional[str] = None
+            ) -> Optional[merge_lib.QueryResult]:
+        k = self.key(expr, calib_iters, epoch, canonical)
+        hit = self._entries.get(k)
+        if hit is None:
+            self.stats.misses += 1
+            return None
+        self._entries.move_to_end(k)
+        self.stats.hits += 1
+        return hit
+
+    def put(self, expr: str, calib_iters: int, epoch: int,
+            result: merge_lib.QueryResult, *,
+            canonical: Optional[str] = None):
+        k = self.key(expr, calib_iters, epoch, canonical)
+        self._entries[k] = result
+        self._entries.move_to_end(k)
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.stats.evictions += 1
+
+    def _on_dataset_bump(self, epoch: int):
+        stale = [k for k in self._entries if k[2] != epoch]
+        for k in stale:
+            del self._entries[k]
+        self.stats.invalidated += len(stale)
+
+    def clear(self):
+        self.stats.invalidated += len(self._entries)
+        self._entries.clear()
+
+    def __len__(self) -> int:
+        return len(self._entries)

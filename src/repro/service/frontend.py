@@ -1,0 +1,191 @@
+"""Multi-tenant query front-end over the JSE/brick substrate.
+
+The flow per dispatch window::
+
+    submit(expr, tenant) --admission--> scheduler queues (per tenant)
+                       \\--cache hit--> answered with zero brick I/O
+    step(): window = scheduler.next_batch()        (fairness + coalescing)
+            dedup identical canonical queries      (one execution, fan-out)
+            jse.run_job_batch_simulated(jobs)      (ONE shared scan)
+            results -> cache, tickets, catalog
+
+Everything lands in the existing ``MetadataCatalog`` job records (tenant +
+batch id included), so failover, stragglers and persistence keep working
+unchanged underneath the service.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, List, Optional
+
+from repro.core import merge as merge_lib
+from repro.core.brick import BrickStore
+from repro.core.catalog import DONE, FAILED, MetadataCatalog
+from repro.core.jse import JobSubmissionEngine, TimeModel
+from repro.service.cache import ResultCache
+from repro.service.scheduler import (AdmissionError, QueryScheduler,
+                                     Submission, make_submission)
+
+QUEUED, SERVED, REJECTED = "QUEUED", "SERVED", "REJECTED"
+
+
+@dataclasses.dataclass
+class Ticket:
+    ticket_id: int
+    tenant: str
+    expr: str
+    calib_iters: int
+    status: str = QUEUED
+    job_id: int = -1
+    batch_id: int = -1
+    from_cache: bool = False
+    result: Optional[merge_lib.QueryResult] = None
+    note: str = ""
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    submitted: int = 0
+    served: int = 0
+    rejected: int = 0
+    cache_hits: int = 0
+    batches: int = 0
+    jobs_run: int = 0
+    events_scanned: int = 0
+
+
+class QueryService:
+    def __init__(self, store: BrickStore,
+                 catalog: Optional[MetadataCatalog] = None, *,
+                 cache: Optional[ResultCache] = None,
+                 scheduler: Optional[QueryScheduler] = None,
+                 time_model: Optional[TimeModel] = None,
+                 node_speed: Optional[Dict[int, float]] = None,
+                 use_cache: bool = True):
+        self.store = store
+        self.catalog = catalog or MetadataCatalog(store.n_nodes)
+        self.jse = JobSubmissionEngine(self.catalog, store,
+                                       time_model=time_model,
+                                       node_speed=node_speed)
+        self.cache = cache or ResultCache(catalog=self.catalog)
+        self.scheduler = scheduler or QueryScheduler()
+        self.use_cache = use_cache
+        self.tickets: Dict[int, Ticket] = {}
+        self.stats = ServiceStats()
+        self._next_ticket = 0
+        self._next_batch = 0
+
+    # ------------------------------------------------------------------ #
+    def submit(self, expr: str, *, tenant: str = "default",
+               calib_iters: int = 0) -> int:
+        """Accept (or reject) one query; returns a ticket id.
+
+        Cache hits are answered immediately — the catalog still gets a job
+        record (marked DONE, zero events processed) so the tenant's history
+        is complete."""
+        tid = self._next_ticket
+        self._next_ticket += 1
+        ticket = Ticket(tid, tenant, expr, calib_iters)
+        self.tickets[tid] = ticket
+        self.stats.submitted += 1
+        try:
+            sub = make_submission(tid, tenant, expr, calib_iters,
+                                  self.store.schema)
+        except AdmissionError as e:
+            ticket.status = REJECTED
+            ticket.note = str(e)
+            self.stats.rejected += 1
+            return tid
+
+        if self.use_cache:
+            hit = self.cache.get(expr, calib_iters,
+                                 self.catalog.dataset_epoch,
+                                 canonical=sub.canonical)
+            if hit is not None:
+                jid = self.catalog.submit(expr, calib_iters,
+                                          tuple(sorted(self.store.bricks)),
+                                          tenant=tenant)
+                self.catalog.update(jid, status=DONE, note="cache-hit",
+                                    result={"n_selected": hit.n_selected,
+                                            "n_processed": hit.n_processed,
+                                            "sum_var": hit.sum_var})
+                ticket.status = SERVED
+                ticket.job_id = jid
+                ticket.from_cache = True
+                ticket.result = hit
+                self.stats.served += 1
+                self.stats.cache_hits += 1
+                return tid
+
+        try:
+            self.scheduler.enqueue(sub)
+        except AdmissionError as e:
+            ticket.status = REJECTED
+            ticket.note = str(e)
+            self.stats.rejected += 1
+        return tid
+
+    # ------------------------------------------------------------------ #
+    def step(self, *, failure_script=None) -> List[int]:
+        """Run one dispatch window; returns the ticket ids served
+        SUCCESSFULLY (failed tickets resolve to status FAILED with the
+        reason in their note, and are not returned)."""
+        window = self.scheduler.next_batch()
+        if not window:
+            return []
+        batch_id = self._next_batch
+        self._next_batch += 1
+        self.stats.batches += 1
+
+        # dedup: identical canonical queries execute once, fan out to all
+        groups: "OrderedDict[str, List[Submission]]" = OrderedDict()
+        for sub in window:
+            groups.setdefault(sub.canonical, []).append(sub)
+
+        bricks = tuple(sorted(self.store.bricks))
+        epoch = self.catalog.dataset_epoch
+        job_ids = []
+        for canonical, subs in groups.items():
+            rep = subs[0]
+            jid = self.catalog.submit(
+                rep.expr, rep.calib_iters, bricks, tenant=rep.tenant,
+                batch_id=batch_id)
+            job_ids.append(jid)
+        merged, stats = self.jse.run_job_batch_simulated(
+            job_ids, failure_script=failure_script)
+        self.stats.jobs_run += len(job_ids)
+        self.stats.events_scanned += stats.events_scanned
+
+        served = []
+        for (canonical, subs), jid, res in zip(groups.items(), job_ids,
+                                               merged):
+            ok = self.catalog.jobs[jid].status == DONE
+            if ok and self.use_cache:
+                self.cache.put(subs[0].expr, subs[0].calib_iters, epoch, res,
+                               canonical=canonical)
+            for sub in subs:
+                ticket = self.tickets[sub.ticket]
+                ticket.job_id = jid
+                ticket.batch_id = batch_id
+                ticket.result = res if ok else None
+                ticket.status = SERVED if ok else FAILED
+                ticket.note = "" if ok else self.catalog.jobs[jid].note
+                if ok:
+                    self.stats.served += 1
+                    served.append(sub.ticket)
+        return served
+
+    def drain(self, *, max_windows: int = 10_000) -> List[int]:
+        """Dispatch windows until no work is pending; returns every
+        ticket id served successfully across those windows."""
+        served: List[int] = []
+        for _ in range(max_windows):
+            if self.scheduler.n_pending == 0:
+                break
+            served.extend(self.step())
+        return served
+
+    # ------------------------------------------------------------------ #
+    def result(self, ticket_id: int) -> Ticket:
+        return self.tickets[ticket_id]

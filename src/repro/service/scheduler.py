@@ -1,0 +1,119 @@
+"""Dispatch-window scheduler: admission control, per-tenant fairness, and
+coalescing of compatible pending queries into shared-scan batches.
+
+Every dispatch window the scheduler picks ONE shared-scan-compatible group
+(same ``calib_iters`` — those jobs can ride the same calibrated sweep) and
+fills it round-robin across tenants, one query per tenant per turn, so a
+tenant spraying hundreds of submissions cannot starve everyone else: each
+window serves the widest set of tenants first and depth second.  The
+round-robin cursor persists across windows.
+
+Admission control is two bounded queues deep: a per-tenant cap (one noisy
+tenant saturates only its own allowance) and a global cap (the service
+sheds load instead of accumulating unbounded backlog).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict, deque
+from typing import Deque, Dict, List, Optional
+
+from repro.core import query as query_lib
+
+
+class AdmissionError(RuntimeError):
+    """Submission rejected at the door (queue caps or a bad expression)."""
+
+
+@dataclasses.dataclass
+class Submission:
+    ticket: int
+    tenant: str
+    expr: str
+    canonical: str
+    calib_iters: int
+
+
+class QueryScheduler:
+    def __init__(self, *, max_batch: int = 64,
+                 max_pending_per_tenant: int = 64,
+                 max_pending_total: int = 512):
+        self.max_batch = max_batch
+        self.max_pending_per_tenant = max_pending_per_tenant
+        self.max_pending_total = max_pending_total
+        # OrderedDict keeps tenant rotation stable in arrival order
+        self._pending: "OrderedDict[str, Deque[Submission]]" = OrderedDict()
+        self._total = 0
+        self._rr = 0  # persistent round-robin cursor over tenants
+
+    # ------------------------------------------------------------------ #
+    @property
+    def n_pending(self) -> int:
+        return self._total
+
+    def pending_for(self, tenant: str) -> int:
+        return len(self._pending.get(tenant, ()))
+
+    def enqueue(self, sub: Submission):
+        if self._total >= self.max_pending_total:
+            raise AdmissionError(
+                f"service overloaded ({self._total} pending)")
+        q = self._pending.setdefault(sub.tenant, deque())
+        if len(q) >= self.max_pending_per_tenant:
+            raise AdmissionError(
+                f"tenant {sub.tenant!r} over quota ({len(q)} pending)")
+        q.append(sub)
+        self._total += 1
+
+    # ------------------------------------------------------------------ #
+    def _oldest(self) -> Optional[Submission]:
+        heads = [q[0] for q in self._pending.values() if q]
+        return min(heads, key=lambda s: s.ticket) if heads else None
+
+    def next_batch(self) -> List[Submission]:
+        """One dispatch window: the shared-scan group (calib_iters) of the
+        oldest pending query, filled round-robin across tenants."""
+        oldest = self._oldest()
+        if oldest is None:
+            return []
+        group = oldest.calib_iters
+        out: List[Submission] = []
+        tenants = list(self._pending)
+        start = self._rr % max(1, len(tenants))
+        progressed = True
+        while len(out) < self.max_batch and progressed:
+            progressed = False
+            for off in range(len(tenants)):
+                if len(out) >= self.max_batch:
+                    break
+                tenant = tenants[(start + off) % len(tenants)]
+                q = self._pending[tenant]
+                taken = self._take_matching(q, group)
+                if taken is not None:
+                    out.append(taken)
+                    self._total -= 1
+                    progressed = True
+        self._rr += 1
+        for tenant in [t for t, q in self._pending.items() if not q]:
+            del self._pending[tenant]
+        return out
+
+    @staticmethod
+    def _take_matching(q: Deque[Submission],
+                       group: int) -> Optional[Submission]:
+        for i, sub in enumerate(q):
+            if sub.calib_iters == group:
+                del q[i]
+                return sub
+        return None
+
+
+def make_submission(ticket: int, tenant: str, expr: str, calib_iters: int,
+                    schema) -> Submission:
+    """Validate at the door and canonicalize for dedup/caching."""
+    try:
+        query_lib.validate_expr(expr, schema)
+        canonical = query_lib.canonical_expr(expr)
+    except query_lib.QueryError as e:
+        raise AdmissionError(f"bad expression: {e}") from e
+    return Submission(ticket, tenant, expr, canonical, calib_iters)

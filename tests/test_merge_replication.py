@@ -1,0 +1,117 @@
+"""Satellite coverage: merge algebra (associativity/commutativity incl.
+selected_ids bounding) and multi-node re-replication."""
+import numpy as np
+
+from repro.configs.geps_events import reduced
+from repro.core import events as ev
+from repro.core import merge as merge_lib
+from repro.core.brick import create_store
+from repro.core.replication import rereplication_plan
+
+SCHEMA = ev.EventSchema.from_config(reduced())
+
+
+def _parts(seed, n_parts=5, n=40):
+    rng = np.random.default_rng(seed)
+    parts = []
+    for i in range(n_parts):
+        mask = rng.integers(0, 2, n)
+        var = rng.uniform(0, 500, n).astype(np.float32)
+        ids = np.arange(i * n, (i + 1) * n)
+        parts.append(merge_lib.from_mask(mask, var, ids))
+    return parts
+
+
+def _agg_equal(a, b):
+    assert a.n_selected == b.n_selected
+    assert a.n_processed == b.n_processed
+    assert np.isclose(a.sum_var, b.sum_var, rtol=1e-6)
+    np.testing.assert_array_equal(a.hist, b.hist)
+
+
+# ------------------------- merge2 algebra ------------------------------ #
+def test_merge2_commutative_on_aggregates():
+    a, b = _parts(0, n_parts=2)
+    _agg_equal(merge_lib.merge2(a, b), merge_lib.merge2(b, a))
+
+
+def test_merge2_associative_on_aggregates():
+    a, b, c = _parts(1, n_parts=3)
+    left = merge_lib.merge2(merge_lib.merge2(a, b), c)
+    right = merge_lib.merge2(a, merge_lib.merge2(b, c))
+    _agg_equal(left, right)
+    # selected_ids: same ID SET prefix regardless of association, and
+    # always bounded
+    assert len(left.selected_ids) == len(right.selected_ids) <= \
+        merge_lib.MAX_IDS
+    np.testing.assert_array_equal(left.selected_ids, right.selected_ids)
+
+
+def test_selected_ids_bounded_under_merge():
+    rng = np.random.default_rng(2)
+    parts = []
+    for i in range(4):
+        n = 200  # each part alone selects > MAX_IDS events
+        mask = np.ones(n, np.int64)
+        var = rng.uniform(0, 500, n).astype(np.float32)
+        parts.append(merge_lib.from_mask(mask, var,
+                                         np.arange(i * n, (i + 1) * n)))
+        assert len(parts[-1].selected_ids) == merge_lib.MAX_IDS
+    merged = merge_lib.tree_merge(parts)
+    assert len(merged.selected_ids) == merge_lib.MAX_IDS
+    # bounded sample keeps the earliest packet's ids (deterministic prefix)
+    np.testing.assert_array_equal(merged.selected_ids,
+                                  parts[0].selected_ids)
+
+
+def test_tree_merge_equals_linear_fold_and_identity():
+    parts = _parts(3, n_parts=7)
+    lin = parts[0]
+    for p in parts[1:]:
+        lin = merge_lib.merge2(lin, p)
+    _agg_equal(merge_lib.tree_merge(parts), lin)
+    # empty QueryResult is the merge identity
+    ident = merge_lib.merge2(parts[0], merge_lib.QueryResult())
+    _agg_equal(ident, parts[0])
+    np.testing.assert_array_equal(ident.selected_ids,
+                                  parts[0].selected_ids)
+
+
+def test_merge_batch_is_per_query_tree_merge():
+    cols = [_parts(s, n_parts=4) for s in (4, 5, 6)]  # 3 queries
+    packets = [[cols[q][i] for q in range(3)] for i in range(4)]
+    merged = merge_lib.merge_batch(packets)
+    assert len(merged) == 3
+    for q in range(3):
+        _agg_equal(merged[q], merge_lib.tree_merge(cols[q]))
+
+
+# ------------------------- re-replication ------------------------------ #
+def test_rereplication_restores_factor_after_multi_node_failure():
+    n_nodes, repl = 8, 3
+    store = create_store(SCHEMA, n_events=256, n_nodes=n_nodes,
+                         events_per_brick=16, replication=repl, seed=9)
+    dead = {1, 4}  # simultaneous two-node failure
+    plan = rereplication_plan(store.specs, dead, n_nodes)
+    for bid, src, dst in plan:
+        assert src not in dead and dst not in dead
+        spec = store.specs[bid]
+        assert dst not in (spec.node, *spec.replicas)  # no double placement
+        spec.replicas = spec.replicas + (dst,)
+    for bid, spec in store.specs.items():
+        alive_owners = {n for n in store.owners(bid) if n not in dead}
+        assert len(alive_owners) >= min(repl, n_nodes - len(dead))
+
+
+def test_rereplication_plan_spreads_copy_load():
+    n_nodes = 10
+    store = create_store(SCHEMA, n_events=320, n_nodes=n_nodes,
+                         events_per_brick=16, replication=2, seed=10)
+    # ring stride is 5, so {0, 4} never kills a full owner set
+    dead = {0, 4}
+    plan = rereplication_plan(store.specs, dead, n_nodes)
+    assert plan, "two dead nodes must require copies"
+    dsts = [dst for _, _, dst in plan]
+    # round-robin destination choice: no single node absorbs everything
+    counts = {d: dsts.count(d) for d in set(dsts)}
+    assert max(counts.values()) <= len(plan) // 2 + 1

@@ -1,0 +1,321 @@
+"""Multi-tenant query service: shared-scan equivalence (incl. failures),
+batched SPMD/Pallas paths, result cache, scheduler fairness + admission."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.geps_events import reduced
+from repro.core import events as ev
+from repro.core import query as query_lib
+from repro.core.brick import create_store, gather_store
+from repro.core.catalog import DONE, MetadataCatalog
+from repro.core.jse import (JobSubmissionEngine, spmd_query_batch_step,
+                            spmd_query_step)
+from repro.service import (AdmissionError, QueryScheduler, QueryService,
+                           ResultCache, make_submission)
+
+CFG = reduced()
+SCHEMA = ev.EventSchema.from_config(CFG)
+
+
+def make_store(n_events=192, n_nodes=4, replication=2, seed=7):
+    return create_store(SCHEMA, n_events=n_events, n_nodes=n_nodes,
+                        events_per_brick=CFG.events_per_brick,
+                        replication=replication, seed=seed)
+
+
+def random_exprs(rng, k):
+    """Randomized expressions spanning scalars, aggregates and logic."""
+    out = []
+    for _ in range(k):
+        a = rng.uniform(10, 80)
+        b = rng.uniform(5, 25)
+        c = rng.integers(1, 4)
+        form = rng.integers(0, 4)
+        if form == 0:
+            out.append(f"e_total > {a:.3f}")
+        elif form == 1:
+            out.append(f"e_total > {a:.3f} && count(pt > {b:.3f}) >= {c}")
+        elif form == 2:
+            out.append(f"sum(pt) < {a * 10:.2f} || n_tracks >= {c}")
+        else:
+            out.append(f"e_t_miss > {b:.3f} && pt_lead > {a:.3f}")
+    return out
+
+
+def assert_results_identical(got, want):
+    assert got.n_selected == want.n_selected
+    assert got.n_processed == want.n_processed
+    assert got.sum_var == want.sum_var  # bit-identical float merge
+    np.testing.assert_array_equal(got.hist, want.hist)
+    np.testing.assert_array_equal(got.selected_ids, want.selected_ids)
+
+
+# ------------------- shared-scan equivalence (acceptance) -------------- #
+@pytest.mark.parametrize("failure_script", [None, {0.5: 1}])
+def test_batch_run_bit_identical_to_independent_jobs(failure_script):
+    store = make_store(n_events=256)
+    rng = np.random.default_rng(3)
+    exprs = random_exprs(rng, 6)
+
+    # K independent jobs, each from a pristine catalog (identical virtual
+    # trajectory -> identical packet partition as the batch run)
+    singles = []
+    for e in exprs:
+        cat = MetadataCatalog(store.n_nodes)
+        jse = JobSubmissionEngine(cat, store)
+        merged, _ = jse.run_job_simulated(
+            jse.submit(e), failure_script=failure_script)
+        singles.append(merged)
+
+    cat = MetadataCatalog(store.n_nodes)
+    jse = JobSubmissionEngine(cat, store)
+    jids = [jse.submit(e) for e in exprs]
+    batch, stats = jse.run_job_batch_simulated(
+        jids, failure_script=failure_script)
+
+    assert stats.events_scanned >= store.n_events  # one sweep (+ requeues)
+    for got, want in zip(batch, singles):
+        assert_results_identical(got, want)
+    for jid in jids:
+        assert cat.jobs[jid].status == DONE
+
+
+def test_batch_run_rejects_incompatible_jobs():
+    store = make_store()
+    cat = MetadataCatalog(store.n_nodes)
+    jse = JobSubmissionEngine(cat, store)
+    j0 = jse.submit("e_total > 10", calib_iters=0)
+    j1 = jse.submit("e_total > 20", calib_iters=2)
+    with pytest.raises(ValueError):
+        jse.run_job_batch_simulated([j0, j1])
+
+
+def test_batch_scan_amortizes_events_scanned():
+    store = make_store(n_events=256)
+    exprs = [f"e_total > {30 + i}" for i in range(8)]
+    cat = MetadataCatalog(store.n_nodes)
+    jse = JobSubmissionEngine(cat, store)
+    seq = 0
+    for e in exprs:
+        _, st = jse.run_job_simulated(jse.submit(e))
+        seq += st.events_scanned
+    cat2 = MetadataCatalog(store.n_nodes)
+    jse2 = JobSubmissionEngine(cat2, store)
+    _, st2 = jse2.run_job_batch_simulated([jse2.submit(e) for e in exprs])
+    assert seq == 8 * store.n_events
+    assert st2.events_scanned == store.n_events
+
+
+# ------------------- batched SPMD / Pallas paths ----------------------- #
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_spmd_batch_step_matches_individual_steps(use_pallas):
+    store = make_store()
+    batch = {k: jnp.asarray(v) for k, v in gather_store(store).items()}
+    # all-canonical family so the pallas case exercises the batched kernel
+    exprs = ["e_total > 40 && count(pt > 15) >= 2",
+             "e_t_miss > 25 && count(pt > 8) >= 1",
+             "e_total > 10 && count(pt > 20) >= 1 && sum(pt) < 400"]
+    bstep = spmd_query_batch_step(exprs, SCHEMA, calib_iters=2,
+                                  use_pallas=use_pallas)
+    out = bstep(batch)
+    assert out["hist"].shape == (len(exprs), 64)
+    for i, e in enumerate(exprs):
+        single = spmd_query_step(e, SCHEMA, calib_iters=2,
+                                 use_pallas=use_pallas)(batch)
+        assert int(out["n_selected"][i]) == int(single["n_selected"])
+        np.testing.assert_allclose(float(out["sum_var"][i]),
+                                   float(single["sum_var"]), rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(out["hist"][i]),
+                                      np.asarray(single["hist"]))
+
+
+def test_spmd_batch_step_mixed_exprs_falls_back():
+    store = make_store()
+    batch = {k: jnp.asarray(v) for k, v in gather_store(store).items()}
+    exprs = ["e_total > 40 && count(pt > 15) >= 2",
+             "sum(pt) < 300 || n_tracks >= 5"]  # second is non-canonical
+    out = spmd_query_batch_step(exprs, SCHEMA, use_pallas=True)(batch)
+    for i, e in enumerate(exprs):
+        single = spmd_query_step(e, SCHEMA)(batch)
+        assert int(out["n_selected"][i]) == int(single["n_selected"])
+
+
+# ------------------- canonicalization ---------------------------------- #
+def test_canonical_expr_normalizes_spelling():
+    a = query_lib.canonical_expr("e_total>40&&count(pt>15)>=2")
+    b = query_lib.canonical_expr("  e_total > 40.0 && "
+                                 "(count((pt > 15.0)) >= 2) ")
+    assert a == b
+    c = query_lib.canonical_expr("e_total > 41 && count(pt > 15) >= 2")
+    assert a != c
+
+
+def test_validate_expr_rejects_unknown_variable():
+    with pytest.raises(query_lib.QueryError):
+        query_lib.validate_expr("bogus_var > 1", SCHEMA)
+    with pytest.raises(query_lib.QueryError):
+        query_lib.validate_expr("pt > 1", SCHEMA)  # track var outside agg
+    query_lib.validate_expr("count(pt > 1) >= 1", SCHEMA)  # ok inside
+
+
+# ------------------- result cache --------------------------------------- #
+def test_cache_lru_eviction_and_epoch_invalidation():
+    cat = MetadataCatalog(1)
+    cache = ResultCache(capacity=2, catalog=cat)
+    from repro.core.merge import QueryResult
+    cache.put("e_total > 1", 0, cat.dataset_epoch, QueryResult(n_selected=1))
+    cache.put("e_total > 2", 0, cat.dataset_epoch, QueryResult(n_selected=2))
+    assert cache.get("e_total>1", 0, cat.dataset_epoch).n_selected == 1
+    cache.put("e_total > 3", 0, cat.dataset_epoch, QueryResult(n_selected=3))
+    # "e_total > 2" was LRU -> evicted; "e_total > 1" survives
+    assert cache.get("e_total > 2", 0, cat.dataset_epoch) is None
+    assert cache.get("e_total > 1", 0, cat.dataset_epoch) is not None
+    assert cache.stats.evictions == 1
+    # dataset bump invalidates everything cached under the old epoch
+    cat.bump_dataset_version()
+    assert len(cache) == 0
+    assert cache.get("e_total > 1", 0, cat.dataset_epoch) is None
+
+
+def test_service_cache_hit_skips_brick_scan():
+    svc = QueryService(make_store())
+    t1 = svc.submit("e_total > 40", tenant="a")
+    svc.drain()
+    scanned = svc.stats.events_scanned
+    assert scanned > 0
+    t2 = svc.submit(" e_total>40.0 ", tenant="b")  # near-duplicate
+    tk2 = svc.result(t2)
+    assert tk2.status == "SERVED" and tk2.from_cache
+    assert svc.stats.events_scanned == scanned  # zero additional brick I/O
+    assert_results_identical(tk2.result, svc.result(t1).result)
+    # dataset bump -> next submission is a miss and rescans
+    svc.catalog.bump_dataset_version()
+    t3 = svc.submit("e_total > 40", tenant="c")
+    svc.drain()
+    assert not svc.result(t3).from_cache
+    assert svc.stats.events_scanned > scanned
+
+
+# ------------------- scheduler ------------------------------------------ #
+def test_scheduler_round_robin_fairness():
+    sched = QueryScheduler(max_batch=4)
+    tick = 0
+    for i in range(6):  # noisy tenant floods first
+        sched.enqueue(make_submission(tick, "noisy", f"e_total > {i}", 0,
+                                      SCHEMA))
+        tick += 1
+    for t in ("a", "b", "c"):
+        sched.enqueue(make_submission(tick, t, "e_t_miss > 5", 0, SCHEMA))
+        tick += 1
+    window = sched.next_batch()
+    assert len(window) == 4
+    # every tenant represented before the noisy tenant gets depth
+    assert {s.tenant for s in window} == {"noisy", "a", "b", "c"}
+
+
+def test_scheduler_coalesces_by_calib_iters():
+    sched = QueryScheduler(max_batch=8)
+    sched.enqueue(make_submission(0, "a", "e_total > 1", 0, SCHEMA))
+    sched.enqueue(make_submission(1, "a", "e_total > 2", 4, SCHEMA))
+    sched.enqueue(make_submission(2, "b", "e_total > 3", 0, SCHEMA))
+    w1 = sched.next_batch()
+    assert [s.calib_iters for s in w1] == [0, 0]
+    w2 = sched.next_batch()
+    assert [s.calib_iters for s in w2] == [4]
+    assert sched.next_batch() == []
+
+
+def test_scheduler_admission_control():
+    sched = QueryScheduler(max_pending_per_tenant=2, max_pending_total=3)
+    sched.enqueue(make_submission(0, "a", "e_total > 1", 0, SCHEMA))
+    sched.enqueue(make_submission(1, "a", "e_total > 2", 0, SCHEMA))
+    with pytest.raises(AdmissionError):  # tenant quota
+        sched.enqueue(make_submission(2, "a", "e_total > 3", 0, SCHEMA))
+    sched.enqueue(make_submission(3, "b", "e_total > 4", 0, SCHEMA))
+    with pytest.raises(AdmissionError):  # global cap
+        sched.enqueue(make_submission(4, "c", "e_total > 5", 0, SCHEMA))
+    with pytest.raises(AdmissionError):  # bad expression rejected early
+        make_submission(5, "c", "nonsense_var > 1", 0, SCHEMA)
+
+
+# ------------------- frontend end-to-end -------------------------------- #
+def test_service_end_to_end_matches_oracle_and_dedups():
+    store = make_store(n_events=160)
+    svc = QueryService(store, scheduler=QueryScheduler(max_batch=16),
+                       use_cache=False)
+    batch = gather_store(store)
+    expect = int((batch["scalars"][:, 0] > 40).sum())
+    # 3 tenants x 2 copies of the same query + one distinct query
+    tids = [svc.submit("e_total > 40", tenant=f"t{i % 3}") for i in range(6)]
+    tids.append(svc.submit("e_t_miss > 25", tenant="t0"))
+    served = svc.step()
+    assert sorted(served) == sorted(tids)
+    for tid in tids[:6]:
+        tk = svc.result(tid)
+        assert tk.status == "SERVED"
+        assert tk.result.n_selected == expect
+    # dedup: 7 tickets -> 2 catalog jobs in one shared-scan batch
+    assert svc.stats.jobs_run == 2
+    assert svc.stats.batches == 1
+    jobs = [j for j in svc.catalog.jobs.values()]
+    assert len({j.batch_id for j in jobs}) == 1
+    assert {j.tenant for j in jobs} <= {"t0", "t1", "t2"}
+    # one sweep total for all 7 tickets
+    assert svc.stats.events_scanned == store.n_events
+
+
+def test_service_rejected_ticket_reports_reason():
+    svc = QueryService(make_store())
+    tid = svc.submit("definitely_not_a_var > 3", tenant="a")
+    tk = svc.result(tid)
+    assert tk.status == "REJECTED"
+    assert "bad expression" in tk.note
+    assert svc.scheduler.n_pending == 0
+
+
+def test_all_nodes_dead_mid_scan_fails_and_never_caches():
+    store = make_store(n_events=256)
+    svc = QueryService(store)
+    tid = svc.submit("e_total > 40", tenant="a")
+    # kill every node early: the scan truncates and must NOT surface DONE
+    served = svc.step(failure_script={0.01: 0, 0.02: 1, 0.03: 2, 0.04: 3})
+    assert served == []  # failed tickets are not reported as served
+    tk = svc.result(tid)
+    assert tk.status == "FAILED" and "aborted" in tk.note
+    assert len(svc.cache) == 0  # a truncated partial is never cached
+    # a later identical query misses the cache (no poisoned repeat)
+    for n in range(store.n_nodes):
+        svc.catalog.mark_alive(n)
+    tid2 = svc.submit("e_total > 40", tenant="b")
+    svc.drain()
+    tk2 = svc.result(tid2)
+    assert tk2.status == "SERVED" and not tk2.from_cache
+    batch = gather_store(store)
+    assert tk2.result.n_selected == int((batch["scalars"][:, 0] > 40).sum())
+
+
+def test_cache_detach_removes_catalog_hook():
+    cat = MetadataCatalog(1)
+    cache = ResultCache(capacity=4, catalog=cat)
+    from repro.core.merge import QueryResult
+    cache.put("e_total > 1", 0, cat.dataset_epoch, QueryResult())
+    cache.detach()
+    cat.bump_dataset_version()  # no longer reaches the cache
+    assert len(cache) == 1
+    assert not cat._epoch_hooks
+
+
+def test_service_survives_node_failure_in_shared_scan():
+    store = make_store(n_events=256)
+    svc = QueryService(store, use_cache=False)
+    batch = gather_store(store)
+    tids = [svc.submit(f"e_total > {40 + i}", tenant=f"t{i}")
+            for i in range(3)]
+    svc.step(failure_script={0.5: 1})
+    for i, tid in enumerate(tids):
+        tk = svc.result(tid)
+        assert tk.status == "SERVED"
+        expect = int((batch["scalars"][:, 0] > 40 + i).sum())
+        assert tk.result.n_selected == expect  # no events lost
