@@ -6,6 +6,7 @@ table.  Prints ``name,value,derived`` CSV blocks.
   straggler    - PROOF-style adaptive packets vs fixed
   failover     - node death with/without replication (paper future work)
   multiquery   - K-query shared scan vs one-job-at-a-time + cache hits
+  planner      - common-subexpression factoring on near-duplicate queries
   query_spmd   - SPMD grid-brick query step micro-benchmark (real compute)
   roofline     - per-(arch x shape) terms from the dry-run artifacts
                  (skipped unless artifacts exist; see launch/dryrun.py)
@@ -39,6 +40,10 @@ def main() -> None:
     _section("multi-query shared scan + result cache (service)")
     from benchmarks import bench_multiquery
     bench_multiquery.main()
+
+    _section("shared-aggregate planner (fragment factoring)")
+    from benchmarks import bench_planner
+    bench_planner.main()
 
     _section("spmd query step (grid-brick job, wall time on this host)")
     import jax

@@ -1,0 +1,102 @@
+#!/usr/bin/env python3
+"""Docs sanity checker (run by the CI docs job).
+
+- Fenced ``python`` blocks in README.md / docs/*.md / src/**/README.md
+  must compile (syntax-valid snippets).
+- Fenced ``bash`` blocks must shlex-parse line by line (no mangled
+  commands in quickstarts).
+- Relative markdown links must resolve to files in the repo.
+- No ``*.pyc`` / ``__pycache__`` files may be tracked by git.
+
+Exits non-zero with a per-finding report on any violation.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import shlex
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+FENCE_RE = re.compile(r"^```(\w*)\s*$")
+LINK_RE = re.compile(r"\[[^\]]+\]\(([^)#]+)(?:#[^)]*)?\)")
+
+
+def doc_files():
+    out = [ROOT / "README.md"]
+    out += sorted((ROOT / "docs").glob("*.md"))
+    out += sorted((ROOT / "src").rglob("README.md"))
+    return [p for p in out if p.exists()]
+
+
+def fenced_blocks(text):
+    """Yield (language, start_line, block_text) for each fenced block."""
+    lang, start, buf = None, 0, []
+    for i, line in enumerate(text.splitlines(), 1):
+        m = FENCE_RE.match(line.strip())
+        if m and lang is None:
+            lang, start, buf = m.group(1) or "text", i, []
+        elif line.strip() == "```" and lang is not None:
+            yield lang, start, "\n".join(buf)
+            lang = None
+        elif lang is not None:
+            buf.append(line)
+
+
+def check_file(path):
+    errors = []
+    text = path.read_text()
+    rel = path.relative_to(ROOT)
+    for lang, line, block in fenced_blocks(text):
+        if lang == "python":
+            try:
+                compile(block, f"{rel}:{line}", "exec")
+            except SyntaxError as e:
+                errors.append(f"{rel}:{line}: python block fails to "
+                              f"compile: {e}")
+        elif lang in ("bash", "sh", "shell"):
+            for off, cmd in enumerate(block.splitlines()):
+                cmd = cmd.strip()
+                if not cmd or cmd.startswith("#"):
+                    continue
+                try:
+                    shlex.split(cmd.rstrip("\\"))
+                except ValueError as e:
+                    errors.append(f"{rel}:{line + off}: bash line does "
+                                  f"not parse: {e}")
+    for m in LINK_RE.finditer(text):
+        target = m.group(1).strip()
+        if "://" in target or target.startswith("mailto:"):
+            continue
+        resolved = (path.parent / target).resolve()
+        if not resolved.exists():
+            errors.append(f"{rel}: broken relative link: {target}")
+    return errors
+
+
+def check_no_tracked_pyc():
+    out = subprocess.run(["git", "ls-files"], cwd=ROOT, check=True,
+                         capture_output=True, text=True).stdout
+    bad = [f for f in out.splitlines()
+           if f.endswith(".pyc") or "__pycache__" in f]
+    return [f"tracked bytecode must not be committed: {f}" for f in bad]
+
+
+def main() -> int:
+    errors = []
+    for path in doc_files():
+        errors += check_file(path)
+    errors += check_no_tracked_pyc()
+    if errors:
+        print(f"check_docs: {len(errors)} problem(s)")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"check_docs: OK ({len(doc_files())} docs checked, "
+          f"no tracked bytecode)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -62,6 +62,13 @@ class JobStats:
     reassigned: int = 0
     events_scanned: int = 0   # brick events swept (shared across a batch)
     n_queries: int = 1        # queries amortized over that sweep
+    # fragment accounting (common-subexpression factoring across the batch)
+    fragment_evals: int = 0           # unique-fragment evaluations performed
+    fragment_evals_unshared: int = 0  # what K independent compiles would do
+    # merged results for materialized shared fragments, keyed by fragment
+    # canonical (query_lib.node_key) — fed to the fragment-level cache
+    fragment_results: Dict[str, merge_lib.QueryResult] = \
+        dataclasses.field(default_factory=dict)
 
 
 class JobSubmissionEngine:
@@ -89,12 +96,13 @@ class JobSubmissionEngine:
         return rec.job_id
 
     # ------------------------------------------------------------------ #
-    def _eval_packet_batch(self, predicates, brick_id: int, start: int,
-                           size: int, calib_iters: int
+    def _eval_packet_batch(self, plan: query_lib.FragmentPlan, brick_id: int,
+                           start: int, size: int, calib_iters: int
                            ) -> List[merge_lib.QueryResult]:
-        """One slice read + one calibration, K predicate evaluations —
+        """One slice read + one calibration, one fragment-factored pass —
         the shared-scan inner loop (the slice is resident while every
-        in-flight query consumes it)."""
+        in-flight query consumes it).  Returns one partial per plan target
+        (per-query roots first, then materialized shared fragments)."""
         batch = self.store.bricks[brick_id]
         sl = {k: v[start:start + size] for k, v in batch.items()}
         slj = {k: jnp.asarray(v) for k, v in sl.items()}
@@ -102,13 +110,8 @@ class JobSubmissionEngine:
             slj = dict(slj, tracks=query_lib.calibrate(slj, calib_iters))
         var = np.asarray(slj["scalars"][:, 0])  # e_total summary variable
         ids = np.asarray(sl["event_id"])
-        return [merge_lib.from_mask(np.asarray(p(slj)), var, ids)
-                for p in predicates]
-
-    def _eval_packet(self, predicate, brick_id: int, start: int, size: int,
-                     calib_iters: int) -> merge_lib.QueryResult:
-        return self._eval_packet_batch([predicate], brick_id, start, size,
-                                       calib_iters)[0]
+        masks = plan.evaluate(slj, self.store.schema)
+        return [merge_lib.from_mask(np.asarray(m), var, ids) for m in masks]
 
     def run_job_simulated(self, job_id: int, *,
                           failure_script: Optional[Dict[float, int]] = None
@@ -122,14 +125,23 @@ class JobSubmissionEngine:
 
     def run_job_batch_simulated(self, job_ids: List[int], *,
                                 failure_script: Optional[Dict[float, int]]
-                                = None
+                                = None,
+                                plan: Optional[query_lib.FragmentPlan] = None
                                 ) -> Tuple[List[merge_lib.QueryResult],
                                            JobStats]:
         """Shared-scan execution of K coalesced jobs: ONE sweep over the
         bricks evaluates every job's predicate on each resident packet, so
-        the event-store read is amortized K ways.  Scheduling, failure
-        handling and the per-query merges are identical to K independent
-        ``run_job_simulated`` runs — per-query results are bit-identical."""
+        the event-store read is amortized K ways.  The batch is compiled
+        through a :class:`~repro.core.query.FragmentPlan` (pass ``plan`` to
+        reuse one the service planner already built, e.g. with materialized
+        shared fragments), so common subexpressions across the K queries are
+        evaluated once per packet.  Scheduling, failure handling and the
+        per-query merges are identical to K independent
+        ``run_job_simulated`` runs — per-query results are bit-identical.
+
+        Returns ``(merged, stats)`` where ``merged[k]`` is job *k*'s result;
+        merged results for any materialized shared fragments are in
+        ``stats.fragment_results``."""
         recs = [self.catalog.jobs[j] for j in job_ids]
         if not recs:
             raise ValueError("empty job batch")
@@ -141,8 +153,11 @@ class JobSubmissionEngine:
                     f"(bricks/calib_iters differ from job {rec.job_id})")
         for jid in job_ids:
             self.catalog.update(jid, status=RUNNING, start_time=time.time())
-        predicates = [query_lib.compile_query(r.expr, self.store.schema)
-                      for r in recs]
+        if plan is None:
+            plan = query_lib.build_fragment_plan([r.expr for r in recs])
+        elif len(plan.roots) != len(recs):
+            raise ValueError(
+                f"plan has {len(plan.roots)} roots for {len(recs)} jobs")
         failure_script = dict(failure_script or {})
 
         sched = AdaptivePacketScheduler(self.catalog)
@@ -203,11 +218,13 @@ class JobSubmissionEngine:
                 if sched.inflight:
                     heapq.heappush(heap, (now + 0.01, node))
                 continue
-            res = self._eval_packet_batch(predicates, pkt.brick_id,
+            res = self._eval_packet_batch(plan, pkt.brick_id,
                                           pkt.start, pkt.size,
                                           rec.calib_iters)
             results.append(res)
             stats.events_scanned += pkt.size
+            stats.fragment_evals += plan.evals_per_batch
+            stats.fragment_evals_unshared += plan.unshared_evals
             compute = pkt.size * self.tm.t_event_s / speed(node)
             dur = self.tm.dispatch_latency_s + compute
             if node not in staged:
@@ -235,7 +252,12 @@ class JobSubmissionEngine:
         n_active = len(stats.per_node_busy)
         transfer = k * self.tm.result_bytes / self.tm.bandwidth_Bps
         merged = (merge_lib.merge_batch(results) if results
-                  else [merge_lib.QueryResult() for _ in job_ids])
+                  else [merge_lib.QueryResult()
+                        for _ in range(len(plan.targets()))])
+        # plan targets are roots first, then materialized shared fragments
+        stats.fragment_results = dict(
+            zip(plan.materialize_keys(), merged[k:]))
+        merged = merged[:k]
         makespan = now + transfer + k * n_active * self.tm.merge_per_node_s
         stats.makespan_s = makespan
 

@@ -223,93 +223,258 @@ def validate_expr(src: str, schema: ev.EventSchema) -> Node:
 
 
 # ---------------------------- compiler ----------------------------------- #
+def eval_node(node: Node, batch, schema: ev.EventSchema,
+              track_ctx: bool = False, memo: Optional[dict] = None):
+    """Evaluate one AST node over an EventBatch.
+
+    This is the single source of truth for query semantics: ``compile_query``
+    calls it without a memo (one evaluation per node *occurrence*, the PR 1
+    behaviour) and the fragment planner calls it with a shared ``memo`` dict
+    keyed on ``(id(node), track_ctx)`` so interned common subexpressions are
+    evaluated ONCE across a whole dispatch window.  Memoization reuses the
+    exact arrays an unmemoized walk would recompute from identical inputs,
+    so per-query outputs are bit-identical either way.
+    """
+    if memo is not None:
+        key = (id(node), track_ctx)
+        hit = memo.get(key)
+        if hit is not None:
+            return hit
+    val = _eval_node_raw(node, batch, schema, track_ctx, memo)
+    if memo is not None:
+        memo[key] = val
+    return val
+
+
+def _eval_node_raw(node: Node, batch, schema: ev.EventSchema,
+                   track_ctx: bool, memo: Optional[dict]):
+    if isinstance(node, Num):
+        return jnp.float32(node.value)
+    if isinstance(node, Var):
+        if node.name == "n_tracks":
+            return batch["n_tracks"].astype(jnp.float32)
+        if track_ctx:
+            try:
+                idx = schema.track_index(node.name)
+                return batch["tracks"][..., idx]
+            except ValueError:
+                pass
+        try:
+            idx = schema.scalar_index(node.name)
+        except ValueError:
+            raise QueryError(f"unknown variable {node.name!r}") from None
+        if idx >= schema.n_scalars:
+            raise QueryError(f"variable {node.name!r} outside schema")
+        val = batch["scalars"][..., idx]
+        if track_ctx:
+            val = val[..., None]  # broadcast over tracks
+        return val
+    if isinstance(node, Agg):
+        inner = eval_node(node.arg, batch, schema, True, memo)  # (N, T)
+        t = jnp.arange(inner.shape[-1])
+        valid = t[None, :] < batch["n_tracks"][:, None]
+        if node.fn == "count":
+            return jnp.sum(jnp.where(valid, (inner != 0).astype(
+                jnp.float32), 0.0), axis=-1)
+        if node.fn == "sum":
+            return jnp.sum(jnp.where(valid, inner, 0.0), axis=-1)
+        if node.fn == "mean":
+            s = jnp.sum(jnp.where(valid, inner, 0.0), axis=-1)
+            return s / jnp.maximum(batch["n_tracks"].astype(jnp.float32), 1)
+        if node.fn == "max":
+            return jnp.max(jnp.where(valid, inner, -jnp.inf), axis=-1)
+        if node.fn == "min":
+            return jnp.min(jnp.where(valid, inner, jnp.inf), axis=-1)
+        raise QueryError(node.fn)
+    if isinstance(node, Unary):
+        val = eval_node(node.arg, batch, schema, track_ctx, memo)
+        return -val if node.op == "-" else (val == 0).astype(jnp.float32)
+    if isinstance(node, Bin):
+        a = eval_node(node.lhs, batch, schema, track_ctx, memo)
+        b = eval_node(node.rhs, batch, schema, track_ctx, memo)
+        ops = {
+            "+": lambda: a + b,
+            "-": lambda: a - b,
+            "*": lambda: a * b,
+            "/": lambda: a / jnp.where(b == 0, 1e-30, b),
+            "<": lambda: (a < b).astype(jnp.float32),
+            "<=": lambda: (a <= b).astype(jnp.float32),
+            ">": lambda: (a > b).astype(jnp.float32),
+            ">=": lambda: (a >= b).astype(jnp.float32),
+            "==": lambda: (a == b).astype(jnp.float32),
+            "!=": lambda: (a != b).astype(jnp.float32),
+            "&&": lambda: ((a != 0) & (b != 0)).astype(jnp.float32),
+            "||": lambda: ((a != 0) | (b != 0)).astype(jnp.float32),
+        }
+        if node.op not in ops:
+            raise QueryError(node.op)
+        return ops[node.op]()
+    raise QueryError(f"bad node {node}")
+
+
 def compile_query(src: str, schema: ev.EventSchema) -> Callable:
     """Compile to ``fn(batch) -> (N,) f32`` (bool predicates return 0/1)."""
     ast = parse(src)
 
-    def eval_node(node: Node, batch, track_ctx: bool):
-        if isinstance(node, Num):
-            return jnp.float32(node.value)
-        if isinstance(node, Var):
-            if node.name == "n_tracks":
-                return batch["n_tracks"].astype(jnp.float32)
-            if track_ctx:
-                try:
-                    idx = schema.track_index(node.name)
-                    return batch["tracks"][..., idx]
-                except ValueError:
-                    pass
-            try:
-                idx = schema.scalar_index(node.name)
-            except ValueError:
-                raise QueryError(f"unknown variable {node.name!r}") from None
-            if idx >= schema.n_scalars:
-                raise QueryError(f"variable {node.name!r} outside schema")
-            val = batch["scalars"][..., idx]
-            if track_ctx:
-                val = val[..., None]  # broadcast over tracks
-            return val
-        if isinstance(node, Agg):
-            inner = eval_node(node.arg, batch, True)  # (N, T)
-            t = jnp.arange(inner.shape[-1])
-            valid = t[None, :] < batch["n_tracks"][:, None]
-            if node.fn == "count":
-                return jnp.sum(jnp.where(valid, (inner != 0).astype(
-                    jnp.float32), 0.0), axis=-1)
-            if node.fn == "sum":
-                return jnp.sum(jnp.where(valid, inner, 0.0), axis=-1)
-            if node.fn == "mean":
-                s = jnp.sum(jnp.where(valid, inner, 0.0), axis=-1)
-                return s / jnp.maximum(batch["n_tracks"].astype(jnp.float32), 1)
-            if node.fn == "max":
-                return jnp.max(jnp.where(valid, inner, -jnp.inf), axis=-1)
-            if node.fn == "min":
-                return jnp.min(jnp.where(valid, inner, jnp.inf), axis=-1)
-            raise QueryError(node.fn)
-        if isinstance(node, Unary):
-            val = eval_node(node.arg, batch, track_ctx)
-            return -val if node.op == "-" else (val == 0).astype(jnp.float32)
-        if isinstance(node, Bin):
-            a = eval_node(node.lhs, batch, track_ctx)
-            b = eval_node(node.rhs, batch, track_ctx)
-            ops = {
-                "+": lambda: a + b,
-                "-": lambda: a - b,
-                "*": lambda: a * b,
-                "/": lambda: a / jnp.where(b == 0, 1e-30, b),
-                "<": lambda: (a < b).astype(jnp.float32),
-                "<=": lambda: (a <= b).astype(jnp.float32),
-                ">": lambda: (a > b).astype(jnp.float32),
-                ">=": lambda: (a >= b).astype(jnp.float32),
-                "==": lambda: (a == b).astype(jnp.float32),
-                "!=": lambda: (a != b).astype(jnp.float32),
-                "&&": lambda: ((a != 0) & (b != 0)).astype(jnp.float32),
-                "||": lambda: ((a != 0) | (b != 0)).astype(jnp.float32),
-            }
-            if node.op not in ops:
-                raise QueryError(node.op)
-            return ops[node.op]()
-        raise QueryError(f"bad node {node}")
-
     def fn(batch):
-        return eval_node(ast, batch, False)
+        return eval_node(ast, batch, schema, False)
 
     return fn
 
 
+# ---------------------------- fragment plans ------------------------------ #
+def node_key(node: Node) -> str:
+    """Canonical string identity of a subexpression (the fragment key used
+    by the planner and the fragment-level result cache).  Two ASTs with the
+    same ``node_key`` evaluate identically on every batch."""
+    return unparse(node)
+
+
+class Interner:
+    """Hash-conses ASTs so structurally identical subexpressions across a
+    window of queries become the SAME node object; shared identity is what
+    lets a memoized :func:`eval_node` walk evaluate each unique fragment
+    exactly once."""
+
+    def __init__(self):
+        self._table: dict = {}
+
+    def intern(self, node: Node) -> Node:
+        if isinstance(node, Num):
+            key = ("num", node.value)
+        elif isinstance(node, Var):
+            key = ("var", node.name)
+        elif isinstance(node, Agg):
+            arg = self.intern(node.arg)
+            key = ("agg", node.fn, id(arg))
+            node = Agg(node.fn, arg)
+        elif isinstance(node, Unary):
+            arg = self.intern(node.arg)
+            key = ("unary", node.op, id(arg))
+            node = Unary(node.op, arg)
+        elif isinstance(node, Bin):
+            lhs, rhs = self.intern(node.lhs), self.intern(node.rhs)
+            key = ("bin", node.op, id(lhs), id(rhs))
+            node = Bin(node.op, lhs, rhs)
+        else:
+            raise QueryError(f"bad node {node}")
+        return self._table.setdefault(key, node)
+
+    def __len__(self) -> int:
+        return len(self._table)
+
+
+def count_occurrences(node: Node) -> int:
+    """Total node *occurrences* in a tree — the number of evaluations an
+    unmemoized walk (PR 1's per-query compile) performs."""
+    if isinstance(node, (Num, Var)):
+        return 1
+    if isinstance(node, (Agg, Unary)):
+        return 1 + count_occurrences(node.arg)
+    if isinstance(node, Bin):
+        return 1 + count_occurrences(node.lhs) + count_occurrences(node.rhs)
+    raise QueryError(f"bad node {node}")
+
+
+def _reachable(node: Node, track_ctx: bool, seen: set):
+    """Walk unique (interned node, context) pairs reachable from ``node``."""
+    key = (id(node), track_ctx)
+    if key in seen:
+        return
+    seen.add(key)
+    if isinstance(node, Agg):
+        _reachable(node.arg, True, seen)
+    elif isinstance(node, Unary):
+        _reachable(node.arg, track_ctx, seen)
+    elif isinstance(node, Bin):
+        _reachable(node.lhs, track_ctx, seen)
+        _reachable(node.rhs, track_ctx, seen)
+
+
+def is_boolean(node: Node) -> bool:
+    """True when the node's value is a 0/1 mask (comparison, logic, not)."""
+    if isinstance(node, Bin):
+        return node.op in ("<", "<=", ">", ">=", "==", "!=", "&&", "||")
+    return isinstance(node, Unary) and node.op == "!"
+
+
+@dataclasses.dataclass
+class FragmentPlan:
+    """Deduplicated execution plan for a window of queries.
+
+    ``roots`` are the per-query interned ASTs; structurally identical
+    subexpressions are the same object, so :meth:`evaluate` with one shared
+    memo computes each unique fragment once per batch and reassembles every
+    query's predicate from fragment outputs.  ``materialize`` lists extra
+    shared fragments whose masks the executor should surface as first-class
+    results (fed to the fragment-level cache by the service).
+
+    ``unique_fragments`` (evaluations this plan performs per batch) vs.
+    ``unshared_evals`` (evaluations K independent compiles would perform)
+    is the factoring win the planner benchmark measures.  ``shared=False``
+    disables cross-query memo sharing — the PR 1 baseline semantics.
+    """
+    exprs: List[str]
+    roots: List[Node]
+    unique_fragments: int
+    unshared_evals: int
+    shared: bool = True
+    materialize: List[Node] = dataclasses.field(default_factory=list)
+
+    @property
+    def evals_per_batch(self) -> int:
+        return self.unique_fragments if self.shared else self.unshared_evals
+
+    def targets(self) -> List[Node]:
+        return list(self.roots) + list(self.materialize)
+
+    def materialize_keys(self) -> List[str]:
+        return [node_key(m) for m in self.materialize]
+
+    def evaluate(self, batch, schema: ev.EventSchema) -> List:
+        """Evaluate every root (then every materialized fragment) on one
+        batch; returns a list of (N,) arrays, roots first.  In unshared
+        mode no memo is used at all, so the work performed matches
+        ``unshared_evals`` exactly (one evaluation per node occurrence)."""
+        memo: Optional[dict] = {} if self.shared else None
+        return [eval_node(tgt, batch, schema, False, memo)
+                for tgt in self.targets()]
+
+
+def build_fragment_plan(exprs: Sequence[str], *,
+                        shared: bool = True) -> FragmentPlan:
+    """Canonicalize + hash-cons every subexpression of each query into a
+    deduplicated fragment plan (the planner's common-subexpression
+    factoring).  Near-duplicate queries (same aggregates under different
+    outer filters) end up sharing fragment objects, hence compute."""
+    interner = Interner()
+    roots = [interner.intern(parse(e)) for e in exprs]
+    seen: set = set()
+    for r in roots:
+        _reachable(r, False, seen)
+    return FragmentPlan(
+        exprs=[node_key(r) for r in roots],
+        roots=roots,
+        unique_fragments=len(seen),
+        unshared_evals=sum(count_occurrences(r) for r in roots),
+        shared=shared,
+    )
+
+
 def compile_query_batch(exprs: Sequence[str],
                         schema: ev.EventSchema) -> Callable:
-    """Stack K compiled predicates into ONE fused pass over a batch.
+    """Stack K predicates into ONE fused, fragment-factored pass.
 
-    Returns ``fn(batch) -> (K, N) f32``.  Under jit the K predicates share
-    every common subexpression (the scalars/tracks loads, validity masks,
-    track aggregates), so the event store is read once per sweep no matter
-    how many queries ride along — the shared-scan primitive of the
-    multi-tenant query service."""
-    fns = [compile_query(e, schema) for e in exprs]
+    Returns ``fn(batch) -> (K, N) f32``.  The window is compiled through a
+    :class:`FragmentPlan`, so common subexpressions (scalar loads, validity
+    masks, shared track aggregates like ``count(pt > 30)``) are evaluated
+    once per sweep and reused by every query that references them; under
+    jit XLA fuses the remainder.  Per-query rows are bit-identical to K
+    independent ``compile_query`` evaluations."""
+    plan = build_fragment_plan(exprs)
 
     def fn(batch):
-        return jnp.stack([f(batch) for f in fns], axis=0)
+        return jnp.stack(plan.evaluate(batch, schema), axis=0)
 
     return fn
 

@@ -56,11 +56,17 @@ def generate(cfg, model, params, shd, prompt, max_new_tokens=16,
 
 
 def serve_queries(args):
-    """Query-serving mode: multi-tenant traffic over the brick store."""
+    """Query-serving mode: multi-tenant traffic over the brick store.
+
+    With ``--adaptive-window`` the service runs a virtual arrival clock at
+    ``--arrival-rate`` q/s and lets the EWMA WindowController size each
+    dispatch window against measured (virtual) scan latency, instead of
+    stepping every fixed ``--window`` submissions.  ``--cost-budget``
+    enables per-tenant cost-budgeted admission (planner cost units)."""
     from repro.configs.geps_events import reduced as geps_reduced
     from repro.core import events as ev
     from repro.core.brick import create_store
-    from repro.service import QueryService
+    from repro.service import QueryScheduler, QueryService, WindowController
 
     cfg = geps_reduced()
     schema = ev.EventSchema.from_config(cfg)
@@ -68,9 +74,21 @@ def serve_queries(args):
                          n_nodes=args.n_nodes,
                          events_per_brick=cfg.events_per_brick,
                          replication=cfg.replication_factor, seed=0)
-    svc = QueryService(store)
+    sched = QueryScheduler(
+        max_batch=args.window,
+        cost_budget_per_tenant=args.cost_budget)
+    wc = clock = None
+    if args.adaptive_window:
+        # virtual clock: arrivals spaced 1/rate apart, same units as the
+        # simulator's makespans the controller sees as scan latency
+        vnow = [0.0]
+        clock = lambda: vnow[0]
+        wc = WindowController(initial=args.window)
+    svc = QueryService(store, scheduler=sched, window_controller=wc,
+                       **({"clock": clock} if clock else {}))
     # multi-tenant workload: a few hot queries repeated across tenants
-    # (the interactive-analysis regime) plus per-tenant long-tail queries
+    # (the interactive-analysis regime) plus per-tenant near-duplicate
+    # long-tail queries sharing aggregate fragments
     hot = ["e_total > 40 && count(pt > 15) >= 2",
            "e_t_miss > 30", "pt_lead > 60 || n_tracks >= 8"]
     t0 = time.time()
@@ -79,9 +97,14 @@ def serve_queries(args):
         if i % 3 != 2:
             expr = hot[i % len(hot)]
         else:
-            expr = f"e_total > {20 + (i % 7) * 10} && n_tracks >= {1 + i % 4}"
+            expr = (f"e_total > {20 + (i % 7) * 10} && "
+                    f"count(pt > 15) >= {1 + i % 4}")
         svc.submit(expr, tenant=tenant)
-        if (i + 1) % args.window == 0:
+        if args.adaptive_window:
+            vnow[0] += 1.0 / args.arrival_rate
+            if svc.scheduler.n_pending >= wc.window():
+                svc.step()
+        elif (i + 1) % args.window == 0:
             svc.step()
     svc.drain()
     dt = time.time() - t0
@@ -94,6 +117,14 @@ def serve_queries(args):
     print(f"  events_scanned={s.events_scanned} "
           f"(store={store.n_events} events; "
           f"{scanned_per_query:.0f} scanned/executed-query)")
+    if s.fragment_evals:
+        print(f"  planner: fragment_evals={s.fragment_evals} "
+              f"vs unshared={s.fragment_evals_unshared} "
+              f"({s.fragment_evals_unshared / s.fragment_evals:.2f}x "
+              f"factored out), "
+              f"fragment_cache_puts={svc.cache.stats.fragment_puts}")
+    if svc.window_history and args.adaptive_window:
+        print(f"  adaptive windows: {svc.window_history}")
 
 
 def main(argv=None):
@@ -112,6 +143,13 @@ def main(argv=None):
     ap.add_argument("--queries", type=int, default=64)
     ap.add_argument("--window", type=int, default=16,
                     help="submissions per dispatch window")
+    ap.add_argument("--adaptive-window", action="store_true",
+                    help="EWMA-controlled window width (arrival rate vs. "
+                         "measured scan latency)")
+    ap.add_argument("--arrival-rate", type=float, default=8.0,
+                    help="virtual arrivals/sec for --adaptive-window")
+    ap.add_argument("--cost-budget", type=float, default=None,
+                    help="per-tenant pending cost budget (planner units)")
     args = ap.parse_args(argv)
 
     if args.mode == "query":

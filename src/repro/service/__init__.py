@@ -1,13 +1,20 @@
 """Multi-tenant query service over the GEPS grid-brick substrate:
-shared-scan batched execution + result cache + concurrent job queue."""
+shared-aggregate query planner (fragment factoring + cost model),
+shared-scan batched execution, result cache, and a concurrent job queue
+with cost-budgeted admission and adaptive dispatch windows."""
 from repro.service.cache import CacheStats, ResultCache
 from repro.service.frontend import (QUEUED, REJECTED, SERVED, QueryService,
-                                    ServiceStats, Ticket)
+                                    ServiceStats, Ticket, WindowController)
+from repro.service.planner import (count_aggregates, estimate_cost,
+                                   plan_window, shared_boolean_fragments,
+                                   window_cost)
 from repro.service.scheduler import (AdmissionError, QueryScheduler,
                                      Submission, make_submission)
 
 __all__ = [
     "AdmissionError", "CacheStats", "QueryScheduler", "QueryService",
     "QUEUED", "REJECTED", "ResultCache", "SERVED", "ServiceStats",
-    "Submission", "Ticket", "make_submission",
+    "Submission", "Ticket", "WindowController", "count_aggregates",
+    "estimate_cost", "make_submission", "plan_window",
+    "shared_boolean_fragments", "window_cost",
 ]

@@ -11,6 +11,13 @@ so textually different but identical queries share one slot, and a
 recalibrated) makes every older entry unreachable; a registered
 invalidation hook also purges them eagerly to free memory.  Eviction is
 plain LRU.
+
+Entries come in at two granularities sharing one keyspace: whole-query
+results (``put``) and *fragment-level* results (``put_fragment``) — shared
+boolean subexpressions the planner materialized during a shared scan.  A
+fragment's key is its canonical form (``query_lib.node_key``), which is
+exactly what a future submission of that expression canonicalizes to, so
+fragment entries are hit by the ordinary ``get`` path with zero brick I/O.
 """
 from __future__ import annotations
 
@@ -28,6 +35,7 @@ class CacheStats:
     misses: int = 0
     evictions: int = 0
     invalidated: int = 0
+    fragment_puts: int = 0  # fragment-level entries installed by the planner
 
 
 class ResultCache:
@@ -73,12 +81,23 @@ class ResultCache:
     def put(self, expr: str, calib_iters: int, epoch: int,
             result: merge_lib.QueryResult, *,
             canonical: Optional[str] = None):
+        """Install a whole-query result (canonicalizes ``expr`` unless the
+        caller already did); evicts LRU entries over capacity."""
         k = self.key(expr, calib_iters, epoch, canonical)
         self._entries[k] = result
         self._entries.move_to_end(k)
         while len(self._entries) > self.capacity:
             self._entries.popitem(last=False)
             self.stats.evictions += 1
+
+    def put_fragment(self, fragment_key: str, calib_iters: int, epoch: int,
+                     result: merge_lib.QueryResult):
+        """Install a fragment-level result under its canonical fragment key
+        (already canonical — produced by ``query_lib.node_key``; no
+        re-parse).  Future queries equal to the fragment hit via ``get``."""
+        self.put(fragment_key, calib_iters, epoch, result,
+                 canonical=fragment_key)
+        self.stats.fragment_puts += 1
 
     def _on_dataset_bump(self, epoch: int):
         stale = [k for k in self._entries if k[2] != epoch]

@@ -2,12 +2,19 @@
 
 The flow per dispatch window::
 
-    submit(expr, tenant) --admission--> scheduler queues (per tenant)
+    submit(expr, tenant) --admission--> scheduler queues (per tenant,
+                       |                count caps + cost budgets)
                        \\--cache hit--> answered with zero brick I/O
     step(): window = scheduler.next_batch()        (fairness + coalescing)
             dedup identical canonical queries      (one execution, fan-out)
-            jse.run_job_batch_simulated(jobs)      (ONE shared scan)
-            results -> cache, tickets, catalog
+            planner.plan_window(uniques)           (fragment factoring +
+                                                    materialization policy)
+            jse.run_job_batch_simulated(jobs, plan=plan)  (ONE shared scan,
+                                                    each unique fragment
+                                                    evaluated once/packet)
+            results -> cache (queries AND shared fragments), tickets,
+            catalog; WindowController observes scan latency and retunes
+            scheduler.max_batch for the next window
 
 Everything lands in the existing ``MetadataCatalog`` job records (tenant +
 batch id included), so failover, stragglers and persistence keep working
@@ -16,13 +23,15 @@ unchanged underneath the service.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import OrderedDict
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 from repro.core import merge as merge_lib
 from repro.core.brick import BrickStore
 from repro.core.catalog import DONE, FAILED, MetadataCatalog
 from repro.core.jse import JobSubmissionEngine, TimeModel
+from repro.service import planner as planner_lib
 from repro.service.cache import ResultCache
 from repro.service.scheduler import (AdmissionError, QueryScheduler,
                                      Submission, make_submission)
@@ -32,6 +41,10 @@ QUEUED, SERVED, REJECTED = "QUEUED", "SERVED", "REJECTED"
 
 @dataclasses.dataclass
 class Ticket:
+    """Per-submission record a tenant polls via ``QueryService.result``.
+
+    ``status`` moves QUEUED -> SERVED/REJECTED/FAILED; ``note`` carries the
+    rejection/failure reason; ``from_cache`` marks zero-I/O answers."""
     ticket_id: int
     tenant: str
     expr: str
@@ -46,6 +59,8 @@ class Ticket:
 
 @dataclasses.dataclass
 class ServiceStats:
+    """Service-lifetime counters (monotonic; see also ``ResultCache.stats``
+    and the per-window history in ``QueryService.window_history``)."""
     submitted: int = 0
     served: int = 0
     rejected: int = 0
@@ -53,16 +68,124 @@ class ServiceStats:
     batches: int = 0
     jobs_run: int = 0
     events_scanned: int = 0
+    # planner accounting: unique-fragment evaluations actually performed
+    # vs. what K independent per-query compiles would have performed
+    # (fragment-cache installs are counted by ResultCache.stats)
+    fragment_evals: int = 0
+    fragment_evals_unshared: int = 0
+
+
+class WindowController:
+    """EWMA controller for dispatch-window width.
+
+    The queueing sweet spot for a batching server: a window should be
+    about as wide as the number of arrivals during one scan, ``w = λ·L``
+    (arrival rate x scan latency).  Narrower windows waste sweeps on
+    near-empty batches; wider windows add queueing delay without extra
+    amortization.  The controller tracks an EWMA of submission
+    inter-arrival gaps and of observed scan latencies and proposes
+    ``clamp(round(λ·L), min_window, max_window)``.
+
+    Arrival timestamps and scan latencies must share ONE clock.  The
+    simulated service feeds virtual-time scan makespans, so drive arrivals
+    with a virtual clock too (``QueryService(clock=...)``); a wall-clock
+    deployment feeds wall-clock latencies instead.
+    """
+
+    def __init__(self, *, initial: int = 16, min_window: int = 1,
+                 max_window: int = 256, alpha: float = 0.3):
+        if not (0.0 < alpha <= 1.0):
+            raise ValueError("alpha must be in (0, 1]")
+        if not (1 <= min_window <= max_window):
+            raise ValueError("need 1 <= min_window <= max_window")
+        self.initial = initial
+        self.min_window = min_window
+        self.max_window = max_window
+        self.alpha = alpha
+        self._interarrival: Optional[float] = None
+        self._latency: Optional[float] = None
+        self._last_arrival: Optional[float] = None
+
+    def observe_arrival(self, t: float):
+        """Record one submission at time ``t`` (controller clock units)."""
+        if self._last_arrival is not None:
+            gap = max(0.0, t - self._last_arrival)
+            if self._interarrival is None:
+                self._interarrival = gap
+            else:
+                self._interarrival = (self.alpha * gap
+                                      + (1 - self.alpha) * self._interarrival)
+        self._last_arrival = t
+
+    def observe_scan(self, latency_s: float):
+        """Record one dispatch window's measured scan latency."""
+        if latency_s <= 0:
+            return
+        if self._latency is None:
+            self._latency = latency_s
+        else:
+            self._latency = (self.alpha * latency_s
+                             + (1 - self.alpha) * self._latency)
+
+    @property
+    def arrival_rate(self) -> Optional[float]:
+        """Smoothed arrivals/second, or None before two arrivals."""
+        if self._interarrival is None:
+            return None
+        return 1.0 / max(self._interarrival, 1e-9)
+
+    @property
+    def scan_latency(self) -> Optional[float]:
+        """Smoothed scan latency (seconds), or None before one window."""
+        return self._latency
+
+    def window(self) -> int:
+        """Proposed window width for the next dispatch."""
+        lam, lat = self.arrival_rate, self.scan_latency
+        if lam is None or lat is None:
+            return max(self.min_window, min(self.max_window, self.initial))
+        return max(self.min_window,
+                   min(self.max_window, round(lam * lat)))
 
 
 class QueryService:
+    """Multi-tenant query service: tickets in, shared scans underneath.
+
+    Public API: :meth:`submit` (admission + cache probe), :meth:`step`
+    (one dispatch window), :meth:`drain` (windows until idle),
+    :meth:`result` (ticket lookup).
+
+    Parameters
+    ----------
+    store / catalog:
+        The brick-sharded event store and the metadata catalogue (one is
+        created when not supplied).
+    cache / scheduler:
+        Injectable :class:`ResultCache` / :class:`QueryScheduler`; pass a
+        scheduler with cost budgets for cost-based admission.
+    window_controller:
+        Optional :class:`WindowController`; when present the service feeds
+        it arrival timestamps (from ``clock``) and per-window virtual scan
+        makespans, and retunes ``scheduler.max_batch`` before each window.
+    clock:
+        Timestamp source for arrival telemetry (default
+        ``time.monotonic``).  Use a virtual clock when replaying traffic
+        so arrivals and the simulator's makespans share units.
+    planner_materialize:
+        Cache shared boolean fragments of each window as first-class
+        results (fragment-level cache entries).
+    """
+
     def __init__(self, store: BrickStore,
                  catalog: Optional[MetadataCatalog] = None, *,
                  cache: Optional[ResultCache] = None,
                  scheduler: Optional[QueryScheduler] = None,
                  time_model: Optional[TimeModel] = None,
                  node_speed: Optional[Dict[int, float]] = None,
-                 use_cache: bool = True):
+                 use_cache: bool = True,
+                 window_controller: Optional[WindowController] = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 planner_materialize: bool = True):
         self.store = store
         self.catalog = catalog or MetadataCatalog(store.n_nodes)
         self.jse = JobSubmissionEngine(self.catalog, store,
@@ -71,8 +194,12 @@ class QueryService:
         self.cache = cache or ResultCache(catalog=self.catalog)
         self.scheduler = scheduler or QueryScheduler()
         self.use_cache = use_cache
+        self.window_controller = window_controller
+        self.clock = clock
+        self.planner_materialize = planner_materialize
         self.tickets: Dict[int, Ticket] = {}
         self.stats = ServiceStats()
+        self.window_history: List[int] = []  # max_batch used per window
         self._next_ticket = 0
         self._next_batch = 0
 
@@ -81,9 +208,13 @@ class QueryService:
                calib_iters: int = 0) -> int:
         """Accept (or reject) one query; returns a ticket id.
 
-        Cache hits are answered immediately — the catalog still gets a job
-        record (marked DONE, zero events processed) so the tenant's history
-        is complete."""
+        Admission: the expression is validated and costed
+        (``planner.estimate_cost`` over the store size), then checked
+        against the scheduler's count caps and cost budgets.  Cache hits
+        are answered immediately — the catalog still gets a job record
+        (marked DONE, zero events processed) so the tenant's history is
+        complete.  Rejections surface as ticket status REJECTED with the
+        reason in ``note``; nothing raises."""
         tid = self._next_ticket
         self._next_ticket += 1
         ticket = Ticket(tid, tenant, expr, calib_iters)
@@ -91,7 +222,8 @@ class QueryService:
         self.stats.submitted += 1
         try:
             sub = make_submission(tid, tenant, expr, calib_iters,
-                                  self.store.schema)
+                                  self.store.schema,
+                                  n_events=self.store.n_events)
         except AdmissionError as e:
             ticket.status = REJECTED
             ticket.note = str(e)
@@ -120,6 +252,11 @@ class QueryService:
 
         try:
             self.scheduler.enqueue(sub)
+            # only queued work counts as an arrival: cache hits and
+            # rejections never reach a dispatch window, and sizing the
+            # window from them would defer scans past the lambda*L spot
+            if self.window_controller is not None:
+                self.window_controller.observe_arrival(self.clock())
         except AdmissionError as e:
             ticket.status = REJECTED
             ticket.note = str(e)
@@ -130,10 +267,19 @@ class QueryService:
     def step(self, *, failure_script=None) -> List[int]:
         """Run one dispatch window; returns the ticket ids served
         SUCCESSFULLY (failed tickets resolve to status FAILED with the
-        reason in their note, and are not returned)."""
+        reason in their note, and are not returned).
+
+        The window is deduplicated on canonical form, fragment-factored by
+        the planner (each unique subexpression evaluated once per resident
+        packet), and executed as ONE shared scan; shared boolean fragments
+        the planner materialized are installed in the result cache
+        alongside the per-query results."""
+        if self.window_controller is not None:
+            self.scheduler.max_batch = self.window_controller.window()
         window = self.scheduler.next_batch()
         if not window:
             return []
+        self.window_history.append(self.scheduler.max_batch)
         batch_id = self._next_batch
         self._next_batch += 1
         self.stats.batches += 1
@@ -142,6 +288,11 @@ class QueryService:
         groups: "OrderedDict[str, List[Submission]]" = OrderedDict()
         for sub in window:
             groups.setdefault(sub.canonical, []).append(sub)
+
+        # fragment factoring across the window's unique queries
+        plan = planner_lib.plan_window(
+            list(groups), materialize=self.planner_materialize
+            and self.use_cache)
 
         bricks = tuple(sorted(self.store.bricks))
         epoch = self.catalog.dataset_epoch
@@ -153,11 +304,17 @@ class QueryService:
                 batch_id=batch_id)
             job_ids.append(jid)
         merged, stats = self.jse.run_job_batch_simulated(
-            job_ids, failure_script=failure_script)
+            job_ids, failure_script=failure_script, plan=plan)
         self.stats.jobs_run += len(job_ids)
         self.stats.events_scanned += stats.events_scanned
+        self.stats.fragment_evals += stats.fragment_evals
+        self.stats.fragment_evals_unshared += stats.fragment_evals_unshared
+        if self.window_controller is not None:
+            self.window_controller.observe_scan(stats.makespan_s)
 
+        calib = window[0].calib_iters
         served = []
+        batch_ok = all(self.catalog.jobs[j].status == DONE for j in job_ids)
         for (canonical, subs), jid, res in zip(groups.items(), job_ids,
                                                merged):
             ok = self.catalog.jobs[jid].status == DONE
@@ -174,11 +331,17 @@ class QueryService:
                 if ok:
                     self.stats.served += 1
                     served.append(sub.ticket)
+        # fragment-level cache entries: a future query equal to a shared
+        # conjunct of this window is then a zero-I/O hit
+        if batch_ok and self.use_cache:
+            for frag_key, frag_res in stats.fragment_results.items():
+                self.cache.put_fragment(frag_key, calib, epoch, frag_res)
         return served
 
     def drain(self, *, max_windows: int = 10_000) -> List[int]:
-        """Dispatch windows until no work is pending; returns every
-        ticket id served successfully across those windows."""
+        """Dispatch windows until no work is pending (bounded by
+        ``max_windows``); returns every ticket id served successfully
+        across those windows."""
         served: List[int] = []
         for _ in range(max_windows):
             if self.scheduler.n_pending == 0:
@@ -188,4 +351,6 @@ class QueryService:
 
     # ------------------------------------------------------------------ #
     def result(self, ticket_id: int) -> Ticket:
+        """Look up the :class:`Ticket` for a submission (KeyError if the
+        id was never issued)."""
         return self.tickets[ticket_id]

@@ -1,0 +1,139 @@
+"""Shared-aggregate query planner: the layer between the scheduler's
+dispatch window and shared-scan execution.
+
+PR 1's coalescing dedups *identical* canonical queries; interactive HEP
+analysis traffic (the DIAL regime) is dominated by *near*-duplicates —
+the same expensive track aggregates under different outer scalar filters.
+The planner closes that gap with three mechanisms:
+
+1. **Common-subexpression factoring** — every subexpression of every
+   pending query is canonicalized and hash-consed
+   (:func:`repro.core.query.build_fragment_plan`); the resulting
+   :class:`~repro.core.query.FragmentPlan` evaluates each unique fragment
+   once per resident packet and reassembles per-query predicates from
+   fragment outputs.  Per-query results stay bit-identical to unshared
+   execution (same ops on same inputs, just computed once).
+
+2. **Materialization policy** — shared boolean fragments (referenced by
+   two or more queries in the window, e.g. a common ``count(pt > 30) >= 2``
+   conjunct) are surfaced as first-class merged results so the service can
+   install them in the result cache; a later query equal to such a
+   fragment is answered with zero brick I/O.
+
+3. **Cost model** — :func:`estimate_cost` scores a query as
+   ``events x calibration work x per-event expression work`` (aggregates
+   weighted by the track sweep they imply).  The scheduler uses it for
+   per-tenant cost budgets; :func:`window_cost` totals a window.
+
+The adaptive dispatch-window controller lives in
+:class:`repro.service.frontend.WindowController` (it needs arrival/latency
+telemetry only the front-end sees).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Union
+
+from repro.core import query as query_lib
+
+# ---------------------------- cost model --------------------------------- #
+# Cost units are "per-event evaluation units": a pure scalar expression
+# costs ~1 per event; every track aggregate adds a sweep over the padded
+# tracks axis (AGG_WEIGHT events-equivalents); each calibration iteration
+# multiplies the per-event work (the paper's compute-heavy refinement).
+AGG_WEIGHT = 4.0
+CALIB_WEIGHT = 1.0
+
+
+def count_aggregates(node: query_lib.Node) -> int:
+    """Number of track-aggregate occurrences in a query AST."""
+    if isinstance(node, query_lib.Agg):
+        return 1 + count_aggregates(node.arg)
+    if isinstance(node, query_lib.Unary):
+        return count_aggregates(node.arg)
+    if isinstance(node, query_lib.Bin):
+        return count_aggregates(node.lhs) + count_aggregates(node.rhs)
+    return 0
+
+
+def estimate_cost(expr_or_ast: Union[str, query_lib.Node], *,
+                  n_events: int, calib_iters: int = 0) -> float:
+    """Estimated cost of one query: events x calib work x aggregate depth.
+
+    ``cost = n_events * (1 + CALIB_WEIGHT*calib_iters)
+                      * (1 + AGG_WEIGHT*n_aggregates)``
+
+    Deliberately coarse — it only has to rank queries well enough for
+    admission budgets (a 6-aggregate calibrated query over the full store
+    must cost more than a scalar cut), not predict wall-clock.
+    """
+    ast = (query_lib.parse(expr_or_ast)
+           if isinstance(expr_or_ast, str) else expr_or_ast)
+    per_event = 1.0 + AGG_WEIGHT * count_aggregates(ast)
+    return float(n_events) * (1.0 + CALIB_WEIGHT * calib_iters) * per_event
+
+
+def window_cost(exprs: Sequence[str], *, n_events: int,
+                calib_iters: int = 0) -> float:
+    """Total unshared cost of a window (what admission budgeting charges)."""
+    return sum(estimate_cost(e, n_events=n_events, calib_iters=calib_iters)
+               for e in exprs)
+
+
+# ---------------------------- window planning ---------------------------- #
+def shared_boolean_fragments(plan: query_lib.FragmentPlan,
+                             *, min_refs: int = 2) -> List[query_lib.Node]:
+    """Boolean-valued fragments referenced by >= ``min_refs`` distinct
+    queries of the window, excluding whole-query roots (those are already
+    cached under their own canonical key).  Only scalar-context fragments
+    qualify — a track-context array is not a per-event mask.  Trivial
+    fragments (bare comparisons of two leaves with no aggregate) are kept
+    too: they are exactly the "shared ``count(pt > B)`` conjunct" shape the
+    roadmap calls out, and materializing a mask we already computed is
+    nearly free."""
+    refs: dict = {}
+
+    def walk(node, seen):
+        if id(node) in seen:
+            return
+        seen.add(id(node))
+        refs.setdefault(id(node), [0, node])
+        refs[id(node)][0] += 1
+        # do not descend into aggregates: their arguments are track-context
+        if isinstance(node, query_lib.Agg):
+            return
+        if isinstance(node, query_lib.Unary):
+            walk(node.arg, seen)
+        elif isinstance(node, query_lib.Bin):
+            walk(node.lhs, seen)
+            walk(node.rhs, seen)
+
+    for root in plan.roots:
+        walk(root, set())  # fresh `seen` per root: refs = #roots referencing
+    root_ids = {id(r) for r in plan.roots}
+    out = []
+    for nrefs, node in refs.values():
+        if (nrefs >= min_refs and id(node) not in root_ids
+                and query_lib.is_boolean(node)):
+            out.append(node)
+    # deterministic order for stable merge/caching downstream
+    out.sort(key=query_lib.node_key)
+    return out
+
+
+def plan_window(exprs: Sequence[str], *, materialize: bool = True,
+                max_materialized: int = 8,
+                shared: bool = True) -> query_lib.FragmentPlan:
+    """Build the fragment plan for one dispatch window.
+
+    Factors common subexpressions across ``exprs`` (one entry per unique
+    canonical query) and, when ``materialize`` is set, marks up to
+    ``max_materialized`` shared boolean fragments for first-class
+    materialization (largest first, so compound conjuncts win the budget
+    over their own sub-comparisons).  ``shared=False`` builds the PR 1
+    baseline plan (no cross-query factoring) for A/B measurement."""
+    plan = query_lib.build_fragment_plan(exprs, shared=shared)
+    if materialize and shared:
+        cands = shared_boolean_fragments(plan)
+        cands.sort(key=query_lib.count_occurrences, reverse=True)
+        plan.materialize = cands[:max_materialized]
+    return plan

@@ -8,9 +8,16 @@ tenant spraying hundreds of submissions cannot starve everyone else: each
 window serves the widest set of tenants first and depth second.  The
 round-robin cursor persists across windows.
 
-Admission control is two bounded queues deep: a per-tenant cap (one noisy
+Admission control is two bounded queues deep — a per-tenant cap (one noisy
 tenant saturates only its own allowance) and a global cap (the service
-sheds load instead of accumulating unbounded backlog).
+sheds load instead of accumulating unbounded backlog) — and, when
+configured, *cost-budgeted*: each submission carries an estimated cost
+(``planner.estimate_cost``: events x calibration x aggregate depth) and a
+tenant whose queued cost would exceed ``cost_budget_per_tenant`` is
+rejected even if it is under its count quota.  Count caps bound queue
+*length*; cost budgets bound queued *work* — a tenant submitting three
+6-aggregate calibrated full-store scans can be over budget while a tenant
+submitting thirty scalar cuts is not.
 """
 from __future__ import annotations
 
@@ -19,51 +26,113 @@ from collections import OrderedDict, deque
 from typing import Deque, Dict, List, Optional
 
 from repro.core import query as query_lib
+from repro.service import planner as planner_lib
 
 
 class AdmissionError(RuntimeError):
-    """Submission rejected at the door (queue caps or a bad expression)."""
+    """Submission rejected at the door (queue caps, cost budgets, or a bad
+    expression)."""
 
 
 @dataclasses.dataclass
 class Submission:
+    """One admitted query waiting for a dispatch window.
+
+    ``canonical`` is the normalized expression (dedup/cache key) and
+    ``cost`` the planner's estimate of the work this query represents if
+    executed unshared (0.0 when the submitter opted out of costing).
+    """
     ticket: int
     tenant: str
     expr: str
     canonical: str
     calib_iters: int
+    cost: float = 0.0
 
 
 class QueryScheduler:
+    """Bounded multi-tenant queue with fair, coalescing dispatch windows.
+
+    Parameters
+    ----------
+    max_batch:
+        Widest dispatch window (queries per shared scan).  The front-end's
+        :class:`~repro.service.frontend.WindowController` retunes this
+        every window when adaptive sizing is enabled.
+    max_pending_per_tenant / max_pending_total:
+        Count caps: queue *length* bounds (PR 1 behaviour, always on).
+    cost_budget_per_tenant / cost_budget_total:
+        Cost budgets in planner cost units; ``None`` disables.  A
+        submission is rejected when the submitting tenant's queued cost
+        (or the global queued cost) would exceed the budget.
+    """
+
     def __init__(self, *, max_batch: int = 64,
                  max_pending_per_tenant: int = 64,
-                 max_pending_total: int = 512):
+                 max_pending_total: int = 512,
+                 cost_budget_per_tenant: Optional[float] = None,
+                 cost_budget_total: Optional[float] = None):
         self.max_batch = max_batch
         self.max_pending_per_tenant = max_pending_per_tenant
         self.max_pending_total = max_pending_total
+        self.cost_budget_per_tenant = cost_budget_per_tenant
+        self.cost_budget_total = cost_budget_total
         # OrderedDict keeps tenant rotation stable in arrival order
         self._pending: "OrderedDict[str, Deque[Submission]]" = OrderedDict()
         self._total = 0
+        self._cost: Dict[str, float] = {}
+        self._cost_total = 0.0
         self._rr = 0  # persistent round-robin cursor over tenants
 
     # ------------------------------------------------------------------ #
     @property
     def n_pending(self) -> int:
+        """Queries queued across all tenants."""
         return self._total
 
+    @property
+    def pending_cost(self) -> float:
+        """Total queued cost across all tenants (planner cost units)."""
+        return self._cost_total
+
     def pending_for(self, tenant: str) -> int:
+        """Queries queued for one tenant."""
         return len(self._pending.get(tenant, ()))
 
+    def pending_cost_for(self, tenant: str) -> float:
+        """Queued cost for one tenant (planner cost units)."""
+        return self._cost.get(tenant, 0.0)
+
     def enqueue(self, sub: Submission):
+        """Admit one submission or raise :class:`AdmissionError`.
+
+        Checks, in order: global count cap, per-tenant count cap, global
+        cost budget, per-tenant cost budget.  Nothing is queued on
+        rejection."""
         if self._total >= self.max_pending_total:
             raise AdmissionError(
                 f"service overloaded ({self._total} pending)")
-        q = self._pending.setdefault(sub.tenant, deque())
-        if len(q) >= self.max_pending_per_tenant:
+        q = self._pending.get(sub.tenant)
+        if q is not None and len(q) >= self.max_pending_per_tenant:
             raise AdmissionError(
                 f"tenant {sub.tenant!r} over quota ({len(q)} pending)")
-        q.append(sub)
+        if (self.cost_budget_total is not None
+                and self._cost_total + sub.cost > self.cost_budget_total):
+            raise AdmissionError(
+                f"service over cost budget "
+                f"({self._cost_total:.0f} + {sub.cost:.0f} queued "
+                f"> {self.cost_budget_total:.0f})")
+        tenant_cost = self._cost.get(sub.tenant, 0.0)
+        if (self.cost_budget_per_tenant is not None
+                and tenant_cost + sub.cost > self.cost_budget_per_tenant):
+            raise AdmissionError(
+                f"tenant {sub.tenant!r} over cost budget "
+                f"({tenant_cost:.0f} + {sub.cost:.0f} queued "
+                f"> {self.cost_budget_per_tenant:.0f})")
+        self._pending.setdefault(sub.tenant, deque()).append(sub)
         self._total += 1
+        self._cost[sub.tenant] = tenant_cost + sub.cost
+        self._cost_total += sub.cost
 
     # ------------------------------------------------------------------ #
     def _oldest(self) -> Optional[Submission]:
@@ -71,8 +140,9 @@ class QueryScheduler:
         return min(heads, key=lambda s: s.ticket) if heads else None
 
     def next_batch(self) -> List[Submission]:
-        """One dispatch window: the shared-scan group (calib_iters) of the
-        oldest pending query, filled round-robin across tenants."""
+        """One dispatch window: the shared-scan group (``calib_iters``) of
+        the oldest pending query, filled round-robin across tenants up to
+        ``max_batch`` wide.  Dequeued submissions release their cost."""
         oldest = self._oldest()
         if oldest is None:
             return []
@@ -92,10 +162,15 @@ class QueryScheduler:
                 if taken is not None:
                     out.append(taken)
                     self._total -= 1
+                    self._cost[tenant] = max(
+                        0.0, self._cost.get(tenant, 0.0) - taken.cost)
+                    self._cost_total = max(0.0,
+                                           self._cost_total - taken.cost)
                     progressed = True
         self._rr += 1
         for tenant in [t for t, q in self._pending.items() if not q]:
             del self._pending[tenant]
+            self._cost.pop(tenant, None)
         return out
 
     @staticmethod
@@ -109,11 +184,20 @@ class QueryScheduler:
 
 
 def make_submission(ticket: int, tenant: str, expr: str, calib_iters: int,
-                    schema) -> Submission:
-    """Validate at the door and canonicalize for dedup/caching."""
+                    schema, *, n_events: int = 0) -> Submission:
+    """Validate at the door, canonicalize for dedup/caching, and estimate
+    cost for budgeted admission.
+
+    ``n_events`` is the store size the query would sweep (0 disables
+    costing — the submission carries cost 0.0 and only count caps apply).
+    Raises :class:`AdmissionError` on an invalid expression: a bad query
+    must be rejected at submit, not on a grid node."""
     try:
-        query_lib.validate_expr(expr, schema)
+        ast = query_lib.validate_expr(expr, schema)
         canonical = query_lib.canonical_expr(expr)
     except query_lib.QueryError as e:
         raise AdmissionError(f"bad expression: {e}") from e
-    return Submission(ticket, tenant, expr, canonical, calib_iters)
+    cost = (planner_lib.estimate_cost(ast, n_events=n_events,
+                                      calib_iters=calib_iters)
+            if n_events > 0 else 0.0)
+    return Submission(ticket, tenant, expr, canonical, calib_iters, cost)

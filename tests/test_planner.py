@@ -1,0 +1,339 @@
+"""Shared-aggregate query planner: fragment-factoring equivalence (incl.
+property-based over random ASTs and node-failure scripts), cost-budget
+admission, fragment-level cache entries, adaptive-window convergence."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.geps_events import reduced
+from repro.core import events as ev
+from repro.core import query as query_lib
+from repro.core.catalog import DONE, MetadataCatalog
+from repro.core.jse import JobSubmissionEngine
+from repro.service import (AdmissionError, QueryScheduler, QueryService,
+                           WindowController, estimate_cost, make_submission,
+                           plan_window, shared_boolean_fragments)
+
+CFG = reduced()
+SCHEMA = ev.EventSchema.from_config(CFG)
+
+
+def make_store(n_events=192, n_nodes=4, replication=2, seed=7):
+    from repro.core.brick import create_store
+    return create_store(SCHEMA, n_events=n_events, n_nodes=n_nodes,
+                        events_per_brick=CFG.events_per_brick,
+                        replication=replication, seed=seed)
+
+
+def near_duplicates(k):
+    shared = ["count(pt > 15) >= 2", "sum(pt) < 350", "count(pt > 25) >= 1"]
+    return [f"e_total > {20 + i} && {shared[i % len(shared)]}"
+            for i in range(k)]
+
+
+def assert_results_identical(got, want):
+    assert got.n_selected == want.n_selected
+    assert got.n_processed == want.n_processed
+    assert got.sum_var == want.sum_var  # bit-identical float merge
+    np.testing.assert_array_equal(got.hist, want.hist)
+    np.testing.assert_array_equal(got.selected_ids, want.selected_ids)
+
+
+# ------------------- fragment factoring --------------------------------- #
+def test_plan_factors_common_subexpressions():
+    plan = query_lib.build_fragment_plan(near_duplicates(64))
+    # >= 2x fewer evaluations than per-query compilation (acceptance bar)
+    assert plan.unique_fragments * 2 <= plan.unshared_evals
+    # identical canonical subtrees are the same interned object
+    roots = plan.roots
+    assert roots[0].rhs is roots[3].rhs  # shared "count(pt > 15) >= 2"
+
+
+def test_plan_eval_matches_per_query_compile():
+    batch = ev.synthetic_events(jax.random.key(0), SCHEMA, 96)
+    exprs = near_duplicates(12)
+    plan = query_lib.build_fragment_plan(exprs)
+    outs = plan.evaluate(batch, SCHEMA)
+    for e, out in zip(exprs, outs):
+        ref = query_lib.compile_query(e, SCHEMA)(batch)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_compile_query_batch_is_fragment_factored():
+    batch = ev.synthetic_events(jax.random.key(1), SCHEMA, 64)
+    exprs = near_duplicates(6)
+    stacked = query_lib.compile_query_batch(exprs, SCHEMA)(batch)
+    assert stacked.shape == (6, 64)
+    for i, e in enumerate(exprs):
+        ref = query_lib.compile_query(e, SCHEMA)(batch)
+        np.testing.assert_array_equal(np.asarray(stacked[i]),
+                                      np.asarray(ref))
+
+
+def test_shared_boolean_fragments_found():
+    exprs = ["e_total > 40 && count(pt > 15) >= 2",
+             "e_t_miss > 25 && count(pt > 15) >= 2",
+             "pt_lead > 60"]
+    plan = query_lib.build_fragment_plan(exprs)
+    keys = [query_lib.node_key(n) for n in shared_boolean_fragments(plan)]
+    assert query_lib.canonical_expr("count(pt > 15) >= 2") in keys
+    # whole-query roots are excluded (cached under their own key already)
+    assert query_lib.canonical_expr(exprs[0]) not in keys
+
+
+@pytest.mark.parametrize("failure_script", [None, {0.5: 1}])
+def test_planned_batch_bit_identical_to_singles(failure_script):
+    """Factored + materialized execution vs. independent jobs, including
+    under a node-failure script (the acceptance bit-identity bar)."""
+    store = make_store(n_events=256)
+    exprs = near_duplicates(6)
+
+    singles = []
+    for e in exprs:
+        cat = MetadataCatalog(store.n_nodes)
+        jse = JobSubmissionEngine(cat, store)
+        merged, _ = jse.run_job_simulated(
+            jse.submit(e), failure_script=failure_script)
+        singles.append(merged)
+
+    cat = MetadataCatalog(store.n_nodes)
+    jse = JobSubmissionEngine(cat, store)
+    jids = [jse.submit(e) for e in exprs]
+    plan = plan_window(exprs)
+    assert plan.materialize  # the shared conjuncts are materialized
+    batch, stats = jse.run_job_batch_simulated(
+        jids, failure_script=failure_script, plan=plan)
+
+    assert len(batch) == len(exprs)  # materialized extras not in results
+    for got, want in zip(batch, singles):
+        assert_results_identical(got, want)
+    assert stats.fragment_evals < stats.fragment_evals_unshared
+    assert set(stats.fragment_results) == set(plan.materialize_keys())
+
+
+def test_materialized_fragment_matches_standalone_query():
+    """A materialized shared fragment's merged result equals running that
+    fragment as its own query."""
+    store = make_store(n_events=256)
+    exprs = ["e_total > 40 && count(pt > 15) >= 2",
+             "e_t_miss > 25 && count(pt > 15) >= 2"]
+    cat = MetadataCatalog(store.n_nodes)
+    jse = JobSubmissionEngine(cat, store)
+    jids = [jse.submit(e) for e in exprs]
+    _, stats = jse.run_job_batch_simulated(jids, plan=plan_window(exprs))
+    frag_key = query_lib.canonical_expr("count(pt > 15) >= 2")
+    assert frag_key in stats.fragment_results
+
+    cat2 = MetadataCatalog(store.n_nodes)
+    jse2 = JobSubmissionEngine(cat2, store)
+    want, _ = jse2.run_job_simulated(jse2.submit("count(pt > 15) >= 2"))
+    assert_results_identical(stats.fragment_results[frag_key], want)
+
+
+# ------------------- property-based equivalence ------------------------- #
+def _hypothesis_strategies():
+    st = pytest.importorskip("hypothesis").strategies
+    num = st.builds(query_lib.Num,
+                    st.floats(min_value=0.0, max_value=100.0,
+                              allow_nan=False).map(lambda x: round(x, 2)))
+    scalar_var = st.builds(query_lib.Var, st.sampled_from(
+        ("e_total", "e_t_miss", "pt_lead", "n_tracks")))
+    track_var = st.builds(query_lib.Var, st.sampled_from(
+        ("pt", "eta", "phi", "e_total")))
+    ops = st.sampled_from(("+", "-", "*", "/", "<", "<=", ">", ">=",
+                           "==", "!=", "&&", "||"))
+    unary_ops = st.sampled_from(("-", "!"))
+
+    def grow(children):
+        return (st.builds(query_lib.Bin, ops, children, children)
+                | st.builds(query_lib.Unary, unary_ops, children))
+
+    track = st.recursive(num | track_var, grow, max_leaves=6)
+    agg = st.builds(query_lib.Agg,
+                    st.sampled_from(query_lib.AGGS), track)
+    scalar = st.recursive(num | scalar_var | agg, grow, max_leaves=10)
+    return st, scalar
+
+
+def test_property_plan_eval_bit_identical_random_asts():
+    hypothesis = pytest.importorskip("hypothesis")
+    st, scalar = _hypothesis_strategies()
+    batch = ev.synthetic_events(jax.random.key(3), SCHEMA, 48)
+
+    @hypothesis.settings(max_examples=30, deadline=None)
+    @hypothesis.given(st.lists(scalar, min_size=2, max_size=5))
+    def check(asts):
+        exprs = [query_lib.unparse(a) for a in asts]
+        plan = query_lib.build_fragment_plan(exprs)
+        outs = plan.evaluate(batch, SCHEMA)
+        for e, out in zip(exprs, outs):
+            ref = query_lib.compile_query(e, SCHEMA)(batch)
+            np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+    check()
+
+
+# ------------------- cost model + budgeted admission -------------------- #
+def test_estimate_cost_scales_with_work():
+    cheap = estimate_cost("e_total > 40", n_events=1000)
+    agg = estimate_cost("count(pt > 15) >= 2", n_events=1000)
+    calib = estimate_cost("count(pt > 15) >= 2", n_events=1000,
+                          calib_iters=4)
+    more_events = estimate_cost("e_total > 40", n_events=4000)
+    assert cheap < agg < calib
+    assert more_events == 4 * cheap
+
+
+def test_cost_budget_admission_rejects_over_budget_tenant():
+    sched = QueryScheduler(cost_budget_per_tenant=5000.0)
+    # one aggregate over 1000 events: 1000 * (1 + 4) = 5000 -> at budget
+    sched.enqueue(make_submission(0, "a", "count(pt > 15) >= 2", 0, SCHEMA,
+                                  n_events=1000))
+    assert sched.pending_cost_for("a") == 5000.0
+    with pytest.raises(AdmissionError, match="cost budget"):
+        sched.enqueue(make_submission(1, "a", "e_total > 1", 0, SCHEMA,
+                                      n_events=1000))
+    # another tenant has its own budget
+    sched.enqueue(make_submission(2, "b", "e_total > 1", 0, SCHEMA,
+                                  n_events=1000))
+    # dispatching releases the cost -> tenant a admits again
+    assert len(sched.next_batch()) == 2
+    assert sched.pending_cost == 0.0
+    sched.enqueue(make_submission(3, "a", "e_total > 2", 0, SCHEMA,
+                                  n_events=1000))
+
+
+def test_global_cost_budget():
+    sched = QueryScheduler(cost_budget_total=2500.0)
+    sched.enqueue(make_submission(0, "a", "e_total > 1", 0, SCHEMA,
+                                  n_events=1000))
+    sched.enqueue(make_submission(1, "b", "e_total > 2", 0, SCHEMA,
+                                  n_events=1000))
+    with pytest.raises(AdmissionError, match="cost budget"):
+        sched.enqueue(make_submission(2, "c", "e_total > 3", 0, SCHEMA,
+                                      n_events=1000))
+
+
+def test_service_cost_budget_rejects_with_reason():
+    store = make_store()
+    sched = QueryScheduler(
+        cost_budget_per_tenant=float(store.n_events))  # one scalar query
+    svc = QueryService(store, scheduler=sched, use_cache=False)
+    t1 = svc.submit("e_total > 40", tenant="a")
+    t2 = svc.submit("e_total > 50", tenant="a")  # over budget
+    t3 = svc.submit("e_total > 60", tenant="b")  # other tenant fine
+    assert svc.result(t1).status == "QUEUED"
+    assert svc.result(t2).status == "REJECTED"
+    assert "cost budget" in svc.result(t2).note
+    assert svc.result(t3).status == "QUEUED"
+    svc.drain()
+    assert svc.result(t1).status == "SERVED"
+
+
+# ------------------- fragment-level cache entries ----------------------- #
+def test_fragment_cache_serves_future_subexpression_query():
+    store = make_store(n_events=256)
+    svc = QueryService(store)
+    t0 = svc.submit("e_total > 40 && count(pt > 15) >= 2", tenant="a")
+    t1 = svc.submit("e_t_miss > 25 && count(pt > 15) >= 2", tenant="b")
+    svc.drain()
+    assert svc.result(t0).status == "SERVED"
+    assert svc.result(t1).status == "SERVED"
+    assert svc.cache.stats.fragment_puts >= 1
+    scanned = svc.stats.events_scanned
+
+    # the shared conjunct arrives later as its own query -> zero brick I/O
+    t2 = svc.submit("count(pt > 15) >= 2", tenant="c")
+    tk = svc.result(t2)
+    assert tk.status == "SERVED" and tk.from_cache
+    assert svc.stats.events_scanned == scanned
+
+    # and the cached fragment equals an independent execution
+    cat = MetadataCatalog(store.n_nodes)
+    jse = JobSubmissionEngine(cat, store)
+    want, _ = jse.run_job_simulated(jse.submit("count(pt > 15) >= 2"))
+    assert_results_identical(tk.result, want)
+
+
+def test_failed_batch_caches_no_fragments():
+    store = make_store(n_events=256)
+    svc = QueryService(store)
+    svc.submit("e_total > 40 && count(pt > 15) >= 2", tenant="a")
+    svc.submit("e_t_miss > 25 && count(pt > 15) >= 2", tenant="b")
+    svc.step(failure_script={0.01: 0, 0.02: 1, 0.03: 2, 0.04: 3})
+    assert svc.cache.stats.fragment_puts == 0
+    assert len(svc.cache) == 0
+
+
+# ------------------- adaptive dispatch windows -------------------------- #
+def test_window_controller_converges_to_rate_times_latency():
+    wc = WindowController(initial=4, max_window=512, alpha=0.4)
+    assert wc.window() == 4  # no telemetry yet -> initial
+    t = 0.0
+    for _ in range(60):
+        wc.observe_arrival(t)
+        t += 0.01  # 100 arrivals/s
+    for _ in range(10):
+        wc.observe_scan(0.5)  # scans take 0.5s
+    # sweet spot: lambda * L = 100 * 0.5 = 50 arrivals per scan
+    assert 45 <= wc.window() <= 55
+
+
+def test_window_controller_tracks_bursts_and_recovers():
+    wc = WindowController(initial=8, max_window=1024, alpha=0.4)
+    t = 0.0
+    for _ in range(50):
+        wc.observe_arrival(t)
+        t += 0.05  # calm: 20/s
+    for _ in range(6):
+        wc.observe_scan(1.0)
+    calm = wc.window()
+    assert 15 <= calm <= 25
+    for _ in range(80):
+        wc.observe_arrival(t)
+        t += 0.002  # burst: 500/s
+    burst = wc.window()
+    assert burst > 4 * calm  # widens to absorb the burst
+    for _ in range(120):
+        wc.observe_arrival(t)
+        t += 0.05  # calm again
+    recovered = wc.window()
+    assert 15 <= recovered <= 30  # converges back near lambda*L
+
+
+def test_window_controller_clamps():
+    wc = WindowController(initial=8, min_window=2, max_window=16, alpha=0.5)
+    t = 0.0
+    for _ in range(20):
+        wc.observe_arrival(t)
+        t += 1e-4  # 10k/s
+    wc.observe_scan(10.0)
+    assert wc.window() == 16
+    wc2 = WindowController(min_window=2, max_window=16, alpha=0.5)
+    t = 0.0
+    for _ in range(20):
+        wc2.observe_arrival(t)
+        t += 100.0  # glacial arrivals
+    wc2.observe_scan(1e-3)
+    assert wc2.window() == 2
+
+
+def test_service_adaptive_windows_end_to_end():
+    """Bursty arrivals through the full service: the controller retunes
+    scheduler.max_batch between windows and everything still serves."""
+    store = make_store(n_events=192)
+    vnow = [0.0]
+    wc = WindowController(initial=4, max_window=64, alpha=0.5)
+    svc = QueryService(store, window_controller=wc, clock=lambda: vnow[0],
+                       use_cache=False)
+    served = []
+    for i in range(24):
+        svc.submit(f"e_total > {30 + i}", tenant=f"t{i % 3}")
+        vnow[0] += 0.02 if i < 12 else 0.2  # burst then calm
+        if (i + 1) % 8 == 0:
+            served.extend(svc.step())
+    served.extend(svc.drain())
+    assert len(served) == 24
+    assert len(svc.window_history) == svc.stats.batches
+    # the controller actually changed the window away from its seed
+    assert len(set(svc.window_history)) > 1
