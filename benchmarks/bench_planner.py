@@ -24,6 +24,7 @@ from repro.core import events as ev
 from repro.core.brick import create_store
 from repro.core.catalog import MetadataCatalog
 from repro.core.jse import JobSubmissionEngine
+from repro.core.merge import results_identical
 from repro.service import plan_window
 
 N_EVENTS = 2048
@@ -39,12 +40,6 @@ SHARED = ["count(pt > 15) >= 2", "sum(pt) < 350", "count(pt > 25) >= 1"]
 def near_duplicate_workload(k: int):
     return [f"e_total > {20 + i} && {SHARED[i % len(SHARED)]}"
             for i in range(k)]
-
-
-def results_identical(a, b) -> bool:
-    return (a.n_selected == b.n_selected and a.n_processed == b.n_processed
-            and a.sum_var == b.sum_var and np.array_equal(a.hist, b.hist)
-            and np.array_equal(a.selected_ids, b.selected_ids))
 
 
 def run_batch(store, exprs, *, shared: bool, failure_script=None):

@@ -7,6 +7,8 @@ table.  Prints ``name,value,derived`` CSV blocks.
   failover     - node death with/without replication (paper future work)
   multiquery   - K-query shared scan vs one-job-at-a-time + cache hits
   planner      - common-subexpression factoring on near-duplicate queries
+  streaming    - time-to-first-partial vs time-to-final (progressive
+                 delivery; writes the BENCH_streaming.json snapshot)
   query_spmd   - SPMD grid-brick query step micro-benchmark (real compute)
   roofline     - per-(arch x shape) terms from the dry-run artifacts
                  (skipped unless artifacts exist; see launch/dryrun.py)
@@ -44,6 +46,10 @@ def main() -> None:
     _section("shared-aggregate planner (fragment factoring)")
     from benchmarks import bench_planner
     bench_planner.main()
+
+    _section("streaming partial-merge delivery (progressive histograms)")
+    from benchmarks import bench_streaming
+    bench_streaming.main()
 
     _section("spmd query step (grid-brick job, wall time on this host)")
     import jax

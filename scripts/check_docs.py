@@ -7,11 +7,15 @@
   commands in quickstarts).
 - Relative markdown links must resolve to files in the repo.
 - No ``*.pyc`` / ``__pycache__`` files may be tracked by git.
+- Public-API doc coverage: every public module / class / function /
+  method in ``src/repro/core`` and ``src/repro/service`` must carry a
+  docstring (the packages tenants program against stay documented).
 
 Exits non-zero with a per-finding report on any violation.
 """
 from __future__ import annotations
 
+import ast
 import pathlib
 import re
 import shlex
@@ -21,6 +25,7 @@ import sys
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 FENCE_RE = re.compile(r"^```(\w*)\s*$")
 LINK_RE = re.compile(r"\[[^\]]+\]\(([^)#]+)(?:#[^)]*)?\)")
+API_PACKAGES = ("src/repro/core", "src/repro/service")
 
 
 def doc_files():
@@ -75,6 +80,40 @@ def check_file(path):
     return errors
 
 
+def check_api_docs():
+    """Undocumented public symbols in the API packages (see module doc).
+
+    Public = not underscore-prefixed; covered: the module itself,
+    top-level classes and functions, and methods of public classes."""
+    errors = []
+    for pkg in API_PACKAGES:
+        for path in sorted((ROOT / pkg).glob("*.py")):
+            rel = path.relative_to(ROOT)
+            tree = ast.parse(path.read_text())
+            if not ast.get_docstring(tree):
+                errors.append(f"{rel}:1: public module lacks a docstring")
+            for node in tree.body:
+                if not isinstance(node, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef,
+                                         ast.ClassDef)):
+                    continue
+                if node.name.startswith("_"):
+                    continue
+                if not ast.get_docstring(node):
+                    errors.append(f"{rel}:{node.lineno}: public "
+                                  f"{node.name!r} lacks a docstring")
+                if isinstance(node, ast.ClassDef):
+                    for sub in node.body:
+                        if (isinstance(sub, (ast.FunctionDef,
+                                             ast.AsyncFunctionDef))
+                                and not sub.name.startswith("_")
+                                and not ast.get_docstring(sub)):
+                            errors.append(
+                                f"{rel}:{sub.lineno}: public method "
+                                f"{node.name}.{sub.name} lacks a docstring")
+    return errors
+
+
 def check_no_tracked_pyc():
     out = subprocess.run(["git", "ls-files"], cwd=ROOT, check=True,
                          capture_output=True, text=True).stdout
@@ -88,13 +127,15 @@ def main() -> int:
     for path in doc_files():
         errors += check_file(path)
     errors += check_no_tracked_pyc()
+    errors += check_api_docs()
     if errors:
         print(f"check_docs: {len(errors)} problem(s)")
         for e in errors:
             print(f"  {e}")
         return 1
     print(f"check_docs: OK ({len(doc_files())} docs checked, "
-          f"no tracked bytecode)")
+          f"no tracked bytecode, public API of "
+          f"{'+'.join(p.split('/')[-1] for p in API_PACKAGES)} documented)")
     return 0
 
 

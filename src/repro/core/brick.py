@@ -29,6 +29,8 @@ from repro.core.replication import place_replicas
 
 @dataclasses.dataclass
 class BrickSpec:
+    """Catalogue entry for one brick: primary owner, replica owners, and
+    the global event-id range the brick covers."""
     brick_id: int
     node: int                       # primary owner
     replicas: Tuple[int, ...]       # replica owners (paper section 7)
@@ -38,6 +40,9 @@ class BrickSpec:
 
 @dataclasses.dataclass
 class BrickStore:
+    """Host-level realization of the brick-sharded event store: per-brick
+    numpy EventBatches plus the placement/replication map the JSE
+    simulation schedules against."""
     schema: ev.EventSchema
     bricks: Dict[int, dict]                 # brick_id -> EventBatch (numpy)
     specs: Dict[int, BrickSpec]
@@ -45,9 +50,11 @@ class BrickStore:
 
     @property
     def n_events(self) -> int:
+        """Total events across every brick in the store."""
         return sum(s.n_events for s in self.specs.values())
 
     def bricks_on_node(self, node: int, include_replicas=False) -> List[int]:
+        """Brick ids whose primary (optionally: any replica) is ``node``."""
         out = []
         for bid, spec in self.specs.items():
             if spec.node == node or (include_replicas and node in spec.replicas):
@@ -55,6 +62,7 @@ class BrickStore:
         return sorted(out)
 
     def owners(self, brick_id: int) -> List[int]:
+        """Every node holding the brick, primary first (failover order)."""
         spec = self.specs[brick_id]
         return [spec.node, *spec.replicas]
 
@@ -83,6 +91,8 @@ def create_store(schema: ev.EventSchema, *, n_events: int, n_nodes: int,
 # SPMD realization
 # --------------------------------------------------------------------------- #
 def batch_sharding(mesh) -> NamedSharding:
+    """Sharding that splits the event axis over the mesh's brick axes
+    (``pod``/``data``) — the SPMD twin of brick placement."""
     axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     return NamedSharding(mesh, P(axes))
 

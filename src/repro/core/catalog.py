@@ -21,6 +21,9 @@ PENDING, RUNNING, DONE, FAILED = "PENDING", "RUNNING", "DONE", "FAILED"
 
 @dataclasses.dataclass
 class NodeInfo:
+    """Per-node resource record (the paper's GRIS/LDAP entry): liveness,
+    nominal capacity, and the PROOF-style throughput EMA the adaptive
+    packet scheduler sizes packets from."""
     node_id: int
     n_cpus: int = 8
     bandwidth_mbps: float = 100.0  # paper: fast Ethernet
@@ -29,6 +32,7 @@ class NodeInfo:
     packets_done: int = 0
 
     def observe(self, events: int, seconds: float, decay: float = 0.7):
+        """Fold one completed packet's measured rate into the EMA."""
         if seconds <= 0:
             return
         rate = events / seconds
@@ -38,6 +42,8 @@ class NodeInfo:
 
 @dataclasses.dataclass
 class JobRecord:
+    """One job tuple in the catalogue: expression, lifecycle status and
+    timestamps, target bricks, and the merged result summary."""
     job_id: int
     expr: str
     calib_iters: int
@@ -55,6 +61,10 @@ class JobRecord:
 
 
 class MetadataCatalog:
+    """The paper's PostgreSQL meta-data catalogue + GRIS in one object:
+    job tuples, per-node resource info, dataset versioning (epoch hooks
+    drive cache invalidation), and JSON persistence."""
+
     def __init__(self, n_nodes: int = 0):
         self.jobs: Dict[int, JobRecord] = {}
         self.nodes: Dict[int, NodeInfo] = {
@@ -70,6 +80,7 @@ class MetadataCatalog:
     def submit(self, expr: str, calib_iters: int = 4,
                bricks: Tuple[int, ...] = (), *, tenant: str = "",
                batch_id: int = -1) -> int:
+        """Insert a PENDING job tuple; returns the new job id."""
         jid = self._next_job
         self._next_job += 1
         self.jobs[jid] = JobRecord(jid, expr, calib_iters,
@@ -98,30 +109,37 @@ class MetadataCatalog:
         return self.dataset_epoch
 
     def next_pending(self) -> Optional[JobRecord]:
+        """Oldest PENDING job, or None (what the polling broker picks up)."""
         for jid in sorted(self.jobs):
             if self.jobs[jid].status == PENDING:
                 return self.jobs[jid]
         return None
 
     def update(self, jid: int, **fields):
+        """Set fields on a job tuple (status transitions, results, ...)."""
         rec = self.jobs[jid]
         for k, v in fields.items():
             setattr(rec, k, v)
 
     # ------------------------- node info (GRIS) --------------------- #
     def node(self, node_id: int) -> NodeInfo:
+        """NodeInfo for ``node_id`` (created on first reference)."""
         return self.nodes.setdefault(node_id, NodeInfo(node_id))
 
     def mark_dead(self, node_id: int):
+        """Record a node death (failover and re-queue consult this)."""
         self.node(node_id).alive = False
 
     def mark_alive(self, node_id: int):
+        """Bring a node back (rejoin after repair/elastic scale-up)."""
         self.node(node_id).alive = True
 
     def alive_nodes(self) -> List[int]:
+        """Sorted ids of nodes currently marked alive."""
         return sorted(n for n, info in self.nodes.items() if info.alive)
 
     def dead_nodes(self) -> set:
+        """Ids of nodes currently marked dead."""
         return {n for n, info in self.nodes.items() if not info.alive}
 
     def grid_info(self, node_id: int) -> dict:
@@ -131,6 +149,7 @@ class MetadataCatalog:
 
     # ------------------------- persistence -------------------------- #
     def to_json(self) -> str:
+        """Serialize the whole catalogue (jobs, nodes, epoch) to JSON."""
         return json.dumps({
             "jobs": {k: dataclasses.asdict(v) for k, v in self.jobs.items()},
             "nodes": {k: dataclasses.asdict(v) for k, v in self.nodes.items()},
@@ -140,6 +159,8 @@ class MetadataCatalog:
 
     @classmethod
     def from_json(cls, text: str) -> "MetadataCatalog":
+        """Rebuild a catalogue from :meth:`to_json` output (JSE restart
+        recovery at the control plane)."""
         data = json.loads(text)
         cat = cls()
         for k, v in data["jobs"].items():

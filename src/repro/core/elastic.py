@@ -22,17 +22,23 @@ from repro.core.replication import failover_owner, rereplication_plan
 
 @dataclasses.dataclass
 class MigrationPlan:
+    """Outcome of a node join/leave: primary reassignments, replica
+    copies to schedule, and bricks with no surviving copy."""
     reassign_primary: List[Tuple[int, int, int]]  # (brick, old, new)
     copies: List[Tuple[int, int, int]]            # (brick, src, dst)
     lost_bricks: List[int]
 
 
 class ElasticManager:
+    """Applies node join/leave to the catalogue + brick store and emits
+    the :class:`MigrationPlan` a control plane would execute."""
+
     def __init__(self, catalog: MetadataCatalog, store: BrickStore):
         self.catalog = catalog
         self.store = store
 
     def node_leave(self, node: int) -> MigrationPlan:
+        """Fail ``node``'s bricks over to replicas; plan re-replication."""
         self.catalog.mark_dead(node)
         dead = self.catalog.dead_nodes()
         reassign, lost = [], []

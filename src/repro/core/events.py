@@ -25,25 +25,33 @@ TRACK_VARS = ("pt", "eta", "phi", "d0", "z0", "charge", "chi2")
 
 @dataclasses.dataclass
 class EventSchema:
+    """Shape contract of an EventBatch: scalar-column count, track
+    padding width, and per-track variable count (the query compiler
+    resolves variable names against this)."""
     n_scalars: int
     max_tracks: int
     track_vars: int
 
     @classmethod
     def from_config(cls, cfg) -> "EventSchema":
+        """Build from a geps_events config object."""
         return cls(cfg.n_scalars, cfg.max_tracks, cfg.track_vars)
 
     def scalar_index(self, name: str) -> int:
+        """Column of scalar variable ``name`` (ValueError on unknown)."""
         return SCALAR_VARS.index(name)  # raises ValueError on unknown
 
     def track_index(self, name: str) -> int:
+        """Column of track variable ``name`` (ValueError on unknown)."""
         return TRACK_VARS.index(name)
 
     def event_bytes(self) -> int:
+        """Approximate serialized bytes per event (f32 columns + ids)."""
         return 4 * (self.n_scalars + self.max_tracks * self.track_vars + 2)
 
 
 def make_batch(scalars, tracks, n_tracks, event_id) -> Dict[str, jax.Array]:
+    """Assemble the canonical EventBatch pytree from its four columns."""
     return {
         "scalars": scalars,      # (N, n_scalars) f32
         "tracks": tracks,        # (N, max_tracks, track_vars) f32
@@ -81,6 +89,7 @@ def abstract_events(schema: EventSchema, n: int):
 
 
 def concat_batches(batches):
+    """Concatenate EventBatches along the event axis."""
     return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *batches)
 
 

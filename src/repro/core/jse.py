@@ -53,8 +53,36 @@ class TimeModel:
     # Only the result files and the JSE merge scale with K.
 
 
+@dataclasses.dataclass(frozen=True)
+class PacketPartial:
+    """One packet's partial results, announced the moment the virtual node
+    finishes computing them — the unit of streaming result delivery.
+
+    ``partials`` holds one :class:`~repro.core.merge.QueryResult` per plan
+    target (per-query roots first, then materialized shared fragments),
+    exactly the row the batch path appends to its merge input.  ``seq`` is
+    the packet's position in merge order: feeding partials to a
+    :class:`~repro.core.merge.MergeAccumulator` in ``seq`` order makes
+    every prefix snapshot bit-identical to the final ``tree_merge``.
+    ``t_virtual`` is the packet's compute-completion time on the simulated
+    grid clock (the same clock as ``JobStats.makespan_s``), and
+    ``failures`` the cumulative node deaths observed so far (coverage
+    holes; see ``docs/streaming.md``)."""
+    seq: int
+    brick_id: int
+    start: int
+    size: int
+    node: int
+    t_virtual: float
+    failures: int
+    partials: List[merge_lib.QueryResult]
+
+
 @dataclasses.dataclass
 class JobStats:
+    """Execution telemetry for one (batched) simulated grid job: virtual
+    makespan, per-node busy time, packet/failure counts, events swept, and
+    the planner's fragment accounting."""
     makespan_s: float = 0.0
     per_node_busy: Dict[int, float] = dataclasses.field(default_factory=dict)
     packets: int = 0
@@ -72,6 +100,12 @@ class JobStats:
 
 
 class JobSubmissionEngine:
+    """The paper's JSE broker: submits jobs to the catalogue, fans each one
+    out as per-brick packets to the owning nodes, merges the partials, and
+    writes the result back.  ``run_job_batch_simulated`` is the shared-scan
+    execution engine the service drives; pass ``on_partial`` to stream
+    per-packet partial merges out while the job runs."""
+
     def __init__(self, catalog: MetadataCatalog, store: BrickStore,
                  time_model: Optional[TimeModel] = None,
                  node_speed: Optional[Dict[int, float]] = None,
@@ -84,6 +118,7 @@ class JobSubmissionEngine:
 
     # ------------------------------------------------------------------ #
     def submit(self, expr: str, calib_iters: int = 0) -> int:
+        """Register a job over every brick in the store; returns a job id."""
         bricks = tuple(sorted(self.store.bricks))
         return self.catalog.submit(expr, calib_iters, bricks)
 
@@ -114,19 +149,23 @@ class JobSubmissionEngine:
         return [merge_lib.from_mask(np.asarray(m), var, ids) for m in masks]
 
     def run_job_simulated(self, job_id: int, *,
-                          failure_script: Optional[Dict[float, int]] = None
+                          failure_script: Optional[Dict[float, int]] = None,
+                          on_partial: Optional[
+                              Callable[[PacketPartial], None]] = None
                           ) -> Tuple[merge_lib.QueryResult, JobStats]:
         """Event-driven simulation: nodes pull packets, compute (really),
         and finish after a virtual duration; failures re-queue work on the
         surviving replicas (PROOF-style)."""
         merged, stats = self.run_job_batch_simulated(
-            [job_id], failure_script=failure_script)
+            [job_id], failure_script=failure_script, on_partial=on_partial)
         return merged[0], stats
 
     def run_job_batch_simulated(self, job_ids: List[int], *,
                                 failure_script: Optional[Dict[float, int]]
                                 = None,
-                                plan: Optional[query_lib.FragmentPlan] = None
+                                plan: Optional[query_lib.FragmentPlan] = None,
+                                on_partial: Optional[
+                                    Callable[[PacketPartial], None]] = None
                                 ) -> Tuple[List[merge_lib.QueryResult],
                                            JobStats]:
         """Shared-scan execution of K coalesced jobs: ONE sweep over the
@@ -141,7 +180,14 @@ class JobSubmissionEngine:
 
         Returns ``(merged, stats)`` where ``merged[k]`` is job *k*'s result;
         merged results for any materialized shared fragments are in
-        ``stats.fragment_results``."""
+        ``stats.fragment_results``.
+
+        ``on_partial``, when given, is invoked once per evaluated packet
+        with a :class:`PacketPartial`, in the exact order the batch merge
+        consumes partials — the streaming delivery hook.  The callback runs
+        synchronously inside the scan loop and must not raise; a truncated
+        (FAILED) scan still emits the partials computed before the abort,
+        but no DONE result ever follows them."""
         recs = [self.catalog.jobs[j] for j in job_ids]
         if not recs:
             raise ValueError("empty job batch")
@@ -230,6 +276,12 @@ class JobSubmissionEngine:
             if node not in staged:
                 dur += self.tm.stage_overhead_s
                 staged.add(node)
+            if on_partial is not None:
+                on_partial(PacketPartial(
+                    seq=len(results) - 1, brick_id=pkt.brick_id,
+                    start=pkt.start, size=pkt.size, node=node,
+                    t_virtual=now + dur, failures=stats.failures,
+                    partials=res))
             # throughput telemetry sees compute only — staging/dispatch in
             # the EMA would shrink every node's packets (GRIS reports CPU
             # rate, not control-plane latency)

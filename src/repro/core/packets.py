@@ -25,6 +25,8 @@ from repro.core.catalog import MetadataCatalog
 
 @dataclasses.dataclass
 class Packet:
+    """A leased unit of work: a contiguous event range of one brick,
+    currently assigned to (at most) one node."""
     packet_id: int
     brick_id: int
     start: int         # offset within the brick
@@ -34,6 +36,10 @@ class Packet:
 
 
 class AdaptivePacketScheduler:
+    """Central work queue with PROOF-rule packet sizing: slower nodes get
+    smaller packets, packets shrink as the queue drains, and failed or
+    dead-node packets re-queue at the front for recovery-first service."""
+
     def __init__(self, catalog: MetadataCatalog, *, base_packet: int = 64,
                  min_packet: int = 8, max_packet: int = 1024,
                  max_attempts: int = 5):
@@ -49,6 +55,7 @@ class AdaptivePacketScheduler:
 
     # ------------------------------------------------------------------ #
     def add_work(self, brick_id: int, n_events: int):
+        """Enqueue one brick's events as packetizable work."""
         self.queue.append([brick_id, 0, n_events])
 
     def packet_size_for(self, node: int) -> int:
@@ -85,6 +92,7 @@ class AdaptivePacketScheduler:
         return pkt
 
     def complete(self, packet_id: int, events: int, seconds: float):
+        """Acknowledge a finished packet and feed the node's rate EMA."""
         pkt = self.inflight.pop(packet_id)
         self.catalog.node(pkt.lease).observe(events, seconds)
         self.done.append(pkt)
@@ -110,4 +118,5 @@ class AdaptivePacketScheduler:
 
     @property
     def exhausted(self) -> bool:
+        """True when no work is queued or in flight (the job swept)."""
         return not self.queue and not self.inflight

@@ -42,10 +42,11 @@ AGGS = ("sum", "max", "min", "count", "mean")
 
 
 class QueryError(ValueError):
-    pass
+    """Malformed or schema-invalid filter expression."""
 
 
 def tokenize(src: str) -> List[str]:
+    """Split an expression into number/identifier/operator tokens."""
     out, pos = [], 0
     while pos < len(src):
         m = _TOKEN_RE.match(src, pos)
@@ -61,28 +62,34 @@ def tokenize(src: str) -> List[str]:
 # ---------------------------- AST ---------------------------------------- #
 @dataclasses.dataclass
 class Num:
+    """AST leaf: a numeric literal."""
     value: float
 
 
 @dataclasses.dataclass
 class Var:
+    """AST leaf: a scalar/track variable reference (resolved at eval)."""
     name: str
 
 
 @dataclasses.dataclass
 class Agg:
+    """AST node: a track aggregation (sum/max/min/count/mean) over the
+    valid tracks of each event."""
     fn: str
     arg: "Node"
 
 
 @dataclasses.dataclass
 class Unary:
+    """AST node: unary negation (``-``) or logical not (``!``)."""
     op: str
     arg: "Node"
 
 
 @dataclasses.dataclass
 class Bin:
+    """AST node: binary arithmetic / comparison / logic operator."""
     op: str
     lhs: "Node"
     rhs: "Node"
@@ -169,6 +176,7 @@ class _Parser:
 
 
 def parse(src: str) -> Node:
+    """Parse a filter expression into its AST (QueryError on bad input)."""
     return _Parser(tokenize(src)).parse()
 
 
@@ -340,6 +348,8 @@ class Interner:
         self._table: dict = {}
 
     def intern(self, node: Node) -> Node:
+        """Return the canonical shared instance of ``node``'s structure
+        (recursively interning children first)."""
         if isinstance(node, Num):
             key = ("num", node.value)
         elif isinstance(node, Var):
@@ -423,12 +433,16 @@ class FragmentPlan:
 
     @property
     def evals_per_batch(self) -> int:
+        """Fragment evaluations this plan performs on one resident batch."""
         return self.unique_fragments if self.shared else self.unshared_evals
 
     def targets(self) -> List[Node]:
+        """Everything the executor surfaces: roots, then materialized
+        shared fragments."""
         return list(self.roots) + list(self.materialize)
 
     def materialize_keys(self) -> List[str]:
+        """Canonical cache keys of the materialized shared fragments."""
         return [node_key(m) for m in self.materialize]
 
     def evaluate(self, batch, schema: ev.EventSchema) -> List:

@@ -11,6 +11,10 @@ partials (core/brick_attention.py).
 ``python -m repro.launch.serve --mode query --tenants 4 --queries 64``.
 Stands up a brick store + QueryService, replays a multi-tenant workload
 with repeats, and reports shared-scan amortization and cache hit rates.
+Add ``--stream`` for progressive delivery: every ticket gets a
+ResultStream fed per-packet prefix merges mid-scan, and the report adds
+time-to-first-partial vs time-to-final plus a live coverage trace for one
+sample ticket.
 """
 from __future__ import annotations
 
@@ -62,7 +66,9 @@ def serve_queries(args):
     ``--arrival-rate`` q/s and lets the EWMA WindowController size each
     dispatch window against measured (virtual) scan latency, instead of
     stepping every fixed ``--window`` submissions.  ``--cost-budget``
-    enables per-tenant cost-budgeted admission (planner cost units)."""
+    enables per-tenant cost-budgeted admission (planner cost units).
+    ``--stream`` turns every submission into a streamed ticket and reports
+    progressive-delivery metrics (time-to-first-partial vs final)."""
     from repro.configs.geps_events import reduced as geps_reduced
     from repro.core import events as ev
     from repro.core.brick import create_store
@@ -92,6 +98,8 @@ def serve_queries(args):
     hot = ["e_total > 40 && count(pt > 15) >= 2",
            "e_t_miss > 30", "pt_lead > 60 || n_tracks >= 8"]
     t0 = time.time()
+    sample_tid = None
+    first_partial = {}  # ticket -> t_virtual of its FIRST published snapshot
     for i in range(args.queries):
         tenant = f"tenant{i % args.tenants}"
         if i % 3 != 2:
@@ -99,7 +107,14 @@ def serve_queries(args):
         else:
             expr = (f"e_total > {20 + (i % 7) * 10} && "
                     f"count(pt > 15) >= {1 + i % 4}")
-        svc.submit(expr, tenant=tenant)
+        tid = svc.submit(expr, tenant=tenant, stream=args.stream)
+        if args.stream:
+            # record at publish time: the buffer conflates under
+            # backpressure, so reading it later would miss early snapshots
+            svc.stream(tid).subscribe(
+                lambda s, t=tid: first_partial.setdefault(t, s.t_virtual))
+        if sample_tid is None:
+            sample_tid = tid
         if args.adaptive_window:
             vnow[0] += 1.0 / args.arrival_rate
             if svc.scheduler.n_pending >= wc.window():
@@ -125,6 +140,25 @@ def serve_queries(args):
               f"fragment_cache_puts={svc.cache.stats.fragment_puts}")
     if svc.window_history and args.adaptive_window:
         print(f"  adaptive windows: {svc.window_history}")
+    if args.stream:
+        ratios = []
+        for tid, stream in svc.streams.items():
+            if not stream.done or stream.published < 2:
+                continue  # cache hits stream a single final snapshot
+            ratios.append(first_partial[tid] / stream.latest().t_virtual)
+        if ratios:
+            print(f"  streaming: {len(svc.streams)} streams, "
+                  f"first-partial/final virtual-time ratio "
+                  f"{sum(ratios) / len(ratios):.2f} "
+                  f"(mean over {len(ratios)} scanned tickets)")
+        sample = svc.streams.get(sample_tid)
+        if sample is not None and sample.latest() is not None:
+            snap = sample.latest()
+            cov = snap.coverage
+            print(f"  sample ticket {sample_tid}: {sample.published} "
+                  f"snapshots ({sample.dropped} conflated), final coverage "
+                  f"{cov.events_scanned}/{cov.events_total} events over "
+                  f"{len(cov.bricks_seen)}/{cov.bricks_total} bricks")
 
 
 def main(argv=None):
@@ -150,6 +184,9 @@ def main(argv=None):
                     help="virtual arrivals/sec for --adaptive-window")
     ap.add_argument("--cost-budget", type=float, default=None,
                     help="per-tenant pending cost budget (planner units)")
+    ap.add_argument("--stream", action="store_true",
+                    help="progressive delivery: per-ticket ResultStreams "
+                         "fed per-packet prefix merges mid-scan")
     args = ap.parse_args(argv)
 
     if args.mode == "query":

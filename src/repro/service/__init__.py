@@ -1,7 +1,8 @@
 """Multi-tenant query service over the GEPS grid-brick substrate:
 shared-aggregate query planner (fragment factoring + cost model),
-shared-scan batched execution, result cache, and a concurrent job queue
-with cost-budgeted admission and adaptive dispatch windows."""
+shared-scan batched execution, result cache, a concurrent job queue
+with cost-budgeted admission and adaptive dispatch windows, and
+streaming partial-merge result delivery (progressive histograms)."""
 from repro.service.cache import CacheStats, ResultCache
 from repro.service.frontend import (QUEUED, REJECTED, SERVED, QueryService,
                                     ServiceStats, Ticket, WindowController)
@@ -10,11 +11,14 @@ from repro.service.planner import (count_aggregates, estimate_cost,
                                    window_cost)
 from repro.service.scheduler import (AdmissionError, QueryScheduler,
                                      Submission, make_submission)
+from repro.service.streaming import (ResultStream, StreamSnapshot,
+                                     WindowStreamPublisher)
 
 __all__ = [
     "AdmissionError", "CacheStats", "QueryScheduler", "QueryService",
-    "QUEUED", "REJECTED", "ResultCache", "SERVED", "ServiceStats",
-    "Submission", "Ticket", "WindowController", "count_aggregates",
+    "QUEUED", "REJECTED", "ResultCache", "ResultStream", "SERVED",
+    "ServiceStats", "StreamSnapshot", "Submission", "Ticket",
+    "WindowController", "WindowStreamPublisher", "count_aggregates",
     "estimate_cost", "make_submission", "plan_window",
     "shared_boolean_fragments", "window_cost",
 ]

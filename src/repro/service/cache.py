@@ -31,6 +31,8 @@ from repro.core import query as query_lib
 
 @dataclasses.dataclass
 class CacheStats:
+    """Monotonic cache counters (hits/misses/evictions/invalidations and
+    planner-installed fragment entries)."""
     hits: int = 0
     misses: int = 0
     evictions: int = 0
@@ -39,6 +41,10 @@ class CacheStats:
 
 
 class ResultCache:
+    """LRU result cache keyed on (canonical expr, calib_iters, dataset
+    epoch), holding whole-query and fragment-level entries in one
+    keyspace; a catalogue dataset bump purges stale epochs eagerly."""
+
     def __init__(self, capacity: int = 256, catalog=None):
         if capacity <= 0:
             raise ValueError("capacity must be positive")
@@ -60,6 +66,7 @@ class ResultCache:
     @staticmethod
     def key(expr: str, calib_iters: int, epoch: int,
             canonical: Optional[str] = None) -> Tuple:
+        """Cache key for a query under one dataset epoch."""
         # pass `canonical` when the caller already canonicalized (the
         # service does at admission) to avoid re-parsing the expression
         if canonical is None:
@@ -69,6 +76,7 @@ class ResultCache:
     def get(self, expr: str, calib_iters: int, epoch: int, *,
             canonical: Optional[str] = None
             ) -> Optional[merge_lib.QueryResult]:
+        """Probe the cache (None on miss); hits refresh LRU recency."""
         k = self.key(expr, calib_iters, epoch, canonical)
         hit = self._entries.get(k)
         if hit is None:
@@ -106,6 +114,7 @@ class ResultCache:
         self.stats.invalidated += len(stale)
 
     def clear(self):
+        """Drop every entry (counted as invalidations)."""
         self.stats.invalidated += len(self._entries)
         self._entries.clear()
 

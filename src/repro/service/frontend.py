@@ -16,6 +16,10 @@ The flow per dispatch window::
             catalog; WindowController observes scan latency and retunes
             scheduler.max_batch for the next window
 
+    streamed tickets additionally get per-packet prefix merges published
+    into their ResultStream DURING the scan (service/streaming.py), with
+    a final snapshot bit-identical to the batch result.
+
 Everything lands in the existing ``MetadataCatalog`` job records (tenant +
 batch id included), so failover, stragglers and persistence keep working
 unchanged underneath the service.
@@ -32,6 +36,7 @@ from repro.core.brick import BrickStore
 from repro.core.catalog import DONE, FAILED, MetadataCatalog
 from repro.core.jse import JobSubmissionEngine, TimeModel
 from repro.service import planner as planner_lib
+from repro.service import streaming as streaming_lib
 from repro.service.cache import ResultCache
 from repro.service.scheduler import (AdmissionError, QueryScheduler,
                                      Submission, make_submission)
@@ -55,6 +60,7 @@ class Ticket:
     from_cache: bool = False
     result: Optional[merge_lib.QueryResult] = None
     note: str = ""
+    streamed: bool = False  # progressive delivery via QueryService.stream()
 
 
 @dataclasses.dataclass
@@ -153,7 +159,8 @@ class QueryService:
 
     Public API: :meth:`submit` (admission + cache probe), :meth:`step`
     (one dispatch window), :meth:`drain` (windows until idle),
-    :meth:`result` (ticket lookup).
+    :meth:`result` (ticket lookup), :meth:`stream` (progressive
+    partial-merge delivery for tickets submitted with ``stream=True``).
 
     Parameters
     ----------
@@ -174,6 +181,10 @@ class QueryService:
     planner_materialize:
         Cache shared boolean fragments of each window as first-class
         results (fragment-level cache entries).
+    stream_capacity:
+        Buffer depth of each per-ticket
+        :class:`~repro.service.streaming.ResultStream` (see
+        ``submit(stream=True)`` / :meth:`stream`).
     """
 
     def __init__(self, store: BrickStore,
@@ -185,7 +196,8 @@ class QueryService:
                  use_cache: bool = True,
                  window_controller: Optional[WindowController] = None,
                  clock: Callable[[], float] = time.monotonic,
-                 planner_materialize: bool = True):
+                 planner_materialize: bool = True,
+                 stream_capacity: int = 32):
         self.store = store
         self.catalog = catalog or MetadataCatalog(store.n_nodes)
         self.jse = JobSubmissionEngine(self.catalog, store,
@@ -197,7 +209,9 @@ class QueryService:
         self.window_controller = window_controller
         self.clock = clock
         self.planner_materialize = planner_materialize
+        self.stream_capacity = stream_capacity
         self.tickets: Dict[int, Ticket] = {}
+        self.streams: Dict[int, streaming_lib.ResultStream] = {}
         self.stats = ServiceStats()
         self.window_history: List[int] = []  # max_batch used per window
         self._next_ticket = 0
@@ -205,7 +219,7 @@ class QueryService:
 
     # ------------------------------------------------------------------ #
     def submit(self, expr: str, *, tenant: str = "default",
-               calib_iters: int = 0) -> int:
+               calib_iters: int = 0, stream: bool = False) -> int:
         """Accept (or reject) one query; returns a ticket id.
 
         Admission: the expression is validated and costed
@@ -214,20 +228,35 @@ class QueryService:
         are answered immediately — the catalog still gets a job record
         (marked DONE, zero events processed) so the tenant's history is
         complete.  Rejections surface as ticket status REJECTED with the
-        reason in ``note``; nothing raises."""
+        reason in ``note``; nothing raises.
+
+        With ``stream=True`` the ticket additionally gets a
+        :class:`~repro.service.streaming.ResultStream` (read it via
+        :meth:`stream`): the dispatch window publishes an exact prefix
+        merge + coverage after every packet, and the final snapshot is
+        bit-identical to the batch result.  A cache hit streams a single
+        final snapshot; a rejection aborts the stream with the reason."""
         tid = self._next_ticket
         self._next_ticket += 1
-        ticket = Ticket(tid, tenant, expr, calib_iters)
+        ticket = Ticket(tid, tenant, expr, calib_iters, streamed=stream)
         self.tickets[tid] = ticket
         self.stats.submitted += 1
+        rs = None
+        if stream:
+            rs = streaming_lib.ResultStream(tid,
+                                            capacity=self.stream_capacity)
+            self.streams[tid] = rs
         try:
             sub = make_submission(tid, tenant, expr, calib_iters,
                                   self.store.schema,
-                                  n_events=self.store.n_events)
+                                  n_events=self.store.n_events,
+                                  stream=stream)
         except AdmissionError as e:
             ticket.status = REJECTED
             ticket.note = str(e)
             self.stats.rejected += 1
+            if rs is not None:
+                rs.abort(str(e))
             return tid
 
         if self.use_cache:
@@ -248,6 +277,14 @@ class QueryService:
                 ticket.result = hit
                 self.stats.served += 1
                 self.stats.cache_hits += 1
+                if rs is not None:
+                    # zero-I/O answer: one final snapshot, complete coverage
+                    rs.finish(streaming_lib.StreamSnapshot(
+                        seq=0, result=hit,
+                        coverage=merge_lib.Coverage(
+                            events_scanned=hit.n_processed,
+                            events_total=hit.n_processed),
+                        t_virtual=0.0, final=True))
                 return tid
 
         try:
@@ -261,6 +298,8 @@ class QueryService:
             ticket.status = REJECTED
             ticket.note = str(e)
             self.stats.rejected += 1
+            if rs is not None:
+                rs.abort(str(e))
         return tid
 
     # ------------------------------------------------------------------ #
@@ -273,7 +312,16 @@ class QueryService:
         the planner (each unique subexpression evaluated once per resident
         packet), and executed as ONE shared scan; shared boolean fragments
         the planner materialized are installed in the result cache
-        alongside the per-query results."""
+        alongside the per-query results.
+
+        Tickets submitted with ``stream=True`` receive progressive
+        snapshots *during* the scan: a
+        :class:`~repro.service.streaming.WindowStreamPublisher` rides the
+        JSE's per-packet hook, folds each column's partial into a prefix
+        merge, and publishes exact intermediate results into every
+        subscribed stream.  A DONE window closes the streams with a final
+        snapshot bit-identical to the ticket result; a FAILED window
+        aborts them without one."""
         if self.window_controller is not None:
             self.scheduler.max_batch = self.window_controller.window()
         window = self.scheduler.next_batch()
@@ -303,8 +351,23 @@ class QueryService:
                 rep.expr, rep.calib_iters, bricks, tenant=rep.tenant,
                 batch_id=batch_id)
             job_ids.append(jid)
+        # streaming: per-column prefix-merge publisher over the subscribed
+        # tickets of this window (dedup fan-out included); columns with no
+        # subscriber cost nothing
+        publisher = None
+        col_streams = [[self.streams[s.ticket] for s in subs
+                        if s.ticket in self.streams]
+                       for subs in groups.values()]
+        if any(col_streams):
+            publisher = streaming_lib.WindowStreamPublisher(
+                col_streams,
+                events_total=sum(self.store.specs[b].n_events
+                                 for b in bricks),
+                bricks_total=len(bricks))
         merged, stats = self.jse.run_job_batch_simulated(
-            job_ids, failure_script=failure_script, plan=plan)
+            job_ids, failure_script=failure_script, plan=plan,
+            on_partial=publisher.on_partial if publisher is not None
+            else None)
         self.stats.jobs_run += len(job_ids)
         self.stats.events_scanned += stats.events_scanned
         self.stats.fragment_evals += stats.fragment_evals
@@ -315,6 +378,13 @@ class QueryService:
         calib = window[0].calib_iters
         served = []
         batch_ok = all(self.catalog.jobs[j].status == DONE for j in job_ids)
+        if publisher is not None:
+            if batch_ok:
+                # final snapshot IS the batch-merged result object (the
+                # prefix property guarantees the accumulator agrees)
+                publisher.finish(merged, stats.makespan_s)
+            else:
+                publisher.abort(self.catalog.jobs[job_ids[0]].note)
         for (canonical, subs), jid, res in zip(groups.items(), job_ids,
                                                merged):
             ok = self.catalog.jobs[jid].status == DONE
@@ -354,3 +424,17 @@ class QueryService:
         """Look up the :class:`Ticket` for a submission (KeyError if the
         id was never issued)."""
         return self.tickets[ticket_id]
+
+    def stream(self, ticket_id: int) -> streaming_lib.ResultStream:
+        """Look up the :class:`~repro.service.streaming.ResultStream` of a
+        ticket submitted with ``stream=True`` (KeyError otherwise)."""
+        return self.streams[ticket_id]
+
+    def release_stream(self, ticket_id: int) -> None:
+        """Drop a finished consumer's stream (and its buffered snapshots)
+        from the service.  Streams — like tickets — live for the service
+        lifetime by default so late readers can still drain them; a
+        long-running tenant loop should release each stream once read.
+        No-op if the ticket has no stream; the ticket itself (and its
+        final ``result``) is unaffected."""
+        self.streams.pop(ticket_id, None)

@@ -41,6 +41,10 @@ class Submission:
     ``canonical`` is the normalized expression (dedup/cache key) and
     ``cost`` the planner's estimate of the work this query represents if
     executed unshared (0.0 when the submitter opted out of costing).
+    ``stream`` marks submissions whose tenant asked for progressive
+    delivery: the front-end attaches a
+    :class:`~repro.service.streaming.ResultStream` and the dispatch window
+    publishes per-packet prefix merges into it mid-scan.
     """
     ticket: int
     tenant: str
@@ -48,6 +52,7 @@ class Submission:
     canonical: str
     calib_iters: int
     cost: float = 0.0
+    stream: bool = False
 
 
 class QueryScheduler:
@@ -184,14 +189,16 @@ class QueryScheduler:
 
 
 def make_submission(ticket: int, tenant: str, expr: str, calib_iters: int,
-                    schema, *, n_events: int = 0) -> Submission:
+                    schema, *, n_events: int = 0,
+                    stream: bool = False) -> Submission:
     """Validate at the door, canonicalize for dedup/caching, and estimate
     cost for budgeted admission.
 
     ``n_events`` is the store size the query would sweep (0 disables
-    costing — the submission carries cost 0.0 and only count caps apply).
-    Raises :class:`AdmissionError` on an invalid expression: a bad query
-    must be rejected at submit, not on a grid node."""
+    costing — the submission carries cost 0.0 and only count caps apply);
+    ``stream`` requests progressive partial-merge delivery.  Raises
+    :class:`AdmissionError` on an invalid expression: a bad query must be
+    rejected at submit, not on a grid node."""
     try:
         ast = query_lib.validate_expr(expr, schema)
         canonical = query_lib.canonical_expr(expr)
@@ -200,4 +207,5 @@ def make_submission(ticket: int, tenant: str, expr: str, calib_iters: int,
     cost = (planner_lib.estimate_cost(ast, n_events=n_events,
                                       calib_iters=calib_iters)
             if n_events > 0 else 0.0)
-    return Submission(ticket, tenant, expr, canonical, calib_iters, cost)
+    return Submission(ticket, tenant, expr, canonical, calib_iters, cost,
+                      stream=stream)

@@ -7,6 +7,7 @@ import pytest
 
 from repro.configs.geps_events import reduced
 from repro.core import events as ev
+from repro.core import merge as merge_lib
 from repro.core import query as query_lib
 from repro.core.catalog import DONE, MetadataCatalog
 from repro.core.jse import JobSubmissionEngine
@@ -32,11 +33,7 @@ def near_duplicates(k):
 
 
 def assert_results_identical(got, want):
-    assert got.n_selected == want.n_selected
-    assert got.n_processed == want.n_processed
-    assert got.sum_var == want.sum_var  # bit-identical float merge
-    np.testing.assert_array_equal(got.hist, want.hist)
-    np.testing.assert_array_equal(got.selected_ids, want.selected_ids)
+    assert merge_lib.results_identical(got, want)
 
 
 # ------------------- fragment factoring --------------------------------- #

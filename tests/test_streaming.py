@@ -1,0 +1,292 @@
+"""Streaming partial-merge delivery: prefix snapshots bit-identical to
+``tree_merge`` (incl. failure scripts + fragment plans), stream lifecycle,
+backpressure, and coverage metadata."""
+import numpy as np
+import pytest
+
+from repro.configs.geps_events import reduced
+from repro.core import events as ev
+from repro.core import merge as merge_lib
+from repro.core import query as query_lib
+from repro.core.brick import gather_store, create_store
+from repro.core.catalog import MetadataCatalog
+from repro.core.jse import JobSubmissionEngine
+from repro.service import QueryService, ResultStream, StreamSnapshot
+from repro.service import plan_window
+
+CFG = reduced()
+SCHEMA = ev.EventSchema.from_config(CFG)
+
+
+def make_store(n_events=256, n_nodes=4, replication=2, seed=7):
+    return create_store(SCHEMA, n_events=n_events, n_nodes=n_nodes,
+                        events_per_brick=CFG.events_per_brick,
+                        replication=replication, seed=seed)
+
+
+def assert_results_identical(got, want):
+    assert merge_lib.results_identical(got, want)
+
+
+def random_partial(rng):
+    n = int(rng.integers(1, 40))
+    mask = rng.integers(0, 2, n)
+    var = rng.uniform(0, 500, n).astype(np.float32)
+    ids = rng.integers(0, 10**6, n)
+    return merge_lib.from_mask(mask, var, ids)
+
+
+# ------------- accumulator: the prefix-merge equivalence ---------------- #
+def test_accumulator_prefix_bit_identical_to_tree_merge():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(0, 999), n=st.integers(0, 70))
+    def check(seed, n):
+        rng = np.random.default_rng(seed)
+        parts = [random_partial(rng) for _ in range(n)]
+        acc = merge_lib.MergeAccumulator()
+        assert_results_identical(acc.snapshot(), merge_lib.QueryResult())
+        for k, p in enumerate(parts, 1):
+            acc.add(p)
+            assert_results_identical(acc.snapshot(),
+                                     merge_lib.tree_merge(parts[:k]))
+        assert acc.n_partials == n
+
+    check()
+
+
+def test_accumulator_prefix_identity_deterministic_sweep():
+    """Hypothesis-free twin of the property above (the container may lack
+    hypothesis): every prefix length 0..40 across several seeds."""
+    for seed in range(6):
+        rng = np.random.default_rng(seed)
+        parts = [random_partial(rng) for _ in range(40)]
+        acc = merge_lib.MergeAccumulator()
+        for k, p in enumerate(parts, 1):
+            acc.add(p)
+            assert_results_identical(acc.snapshot(),
+                                     merge_lib.tree_merge(parts[:k]))
+
+
+def test_accumulator_snapshot_does_not_mutate():
+    rng = np.random.default_rng(0)
+    parts = [random_partial(rng) for _ in range(11)]
+    acc = merge_lib.MergeAccumulator()
+    for p in parts:
+        acc.add(p)
+        first = acc.snapshot()
+        again = acc.snapshot()  # snapshots are pure reads
+        assert_results_identical(first, again)
+    assert_results_identical(acc.snapshot(), merge_lib.tree_merge(parts))
+
+
+def test_accumulator_coverage_metadata():
+    acc = merge_lib.MergeAccumulator(events_total=100, bricks_total=3)
+    cov = acc.coverage()
+    assert cov.fraction == 0.0 and not cov.complete and cov.packets == 0
+    rng = np.random.default_rng(1)
+    seen = 0
+    for i in range(4):
+        p = random_partial(rng)
+        seen += p.n_processed
+        acc.add(p, brick_id=i % 3)
+    acc.note_failure()
+    cov = acc.coverage()
+    assert cov.events_scanned == seen
+    assert cov.bricks_seen == (0, 1, 2) and cov.bricks_total == 3
+    assert cov.packets == 4 and cov.failures == 1
+    assert cov.complete == (seen >= 100)
+    # unknown totals -> fraction is None, never "complete"
+    assert merge_lib.MergeAccumulator().coverage().fraction is None
+    assert not merge_lib.MergeAccumulator().coverage().complete
+
+
+# ------------- JSE hook: prefix snapshots under plans + failures -------- #
+@pytest.mark.parametrize("failure_script", [None, {0.5: 1}])
+def test_streamed_prefixes_merge_to_tree_merge_with_fragment_plan(
+        failure_script):
+    """The acceptance property: every streamed prefix snapshot equals
+    ``tree_merge`` of the partials so far, and the last one equals the
+    batch result — with a materializing FragmentPlan and node failures."""
+    store = make_store(n_events=256)
+    exprs = ["e_total > 40 && count(pt > 15) >= 2",
+             "e_total > 30 && count(pt > 15) >= 2",
+             "e_t_miss > 25 && sum(pt) < 400"]
+    cat = MetadataCatalog(store.n_nodes)
+    jse = JobSubmissionEngine(cat, store)
+    jids = [jse.submit(e) for e in exprs]
+    plan = plan_window(exprs, materialize=True)
+    n_targets = len(plan.targets())
+    assert n_targets > len(exprs)  # shared fragments really materialized
+
+    accs = [merge_lib.MergeAccumulator(events_total=store.n_events)
+            for _ in range(n_targets)]
+    columns = [[] for _ in range(n_targets)]
+    seqs = []
+
+    def on_partial(pp):
+        seqs.append(pp.seq)
+        assert len(pp.partials) == n_targets
+        for col in range(n_targets):
+            columns[col].append(pp.partials[col])
+            accs[col].add(pp.partials[col], brick_id=pp.brick_id)
+            assert_results_identical(
+                accs[col].snapshot(),
+                merge_lib.tree_merge(columns[col]))
+
+    merged, stats = jse.run_job_batch_simulated(
+        jids, plan=plan, failure_script=failure_script,
+        on_partial=on_partial)
+    assert seqs == list(range(len(seqs)))  # emitted in merge order
+    # final prefix == batch merge for every root column...
+    for col in range(len(exprs)):
+        assert_results_identical(accs[col].snapshot(), merged[col])
+        assert accs[col].coverage().complete
+    # ...and for every materialized shared-fragment column
+    for off, key in enumerate(plan.materialize_keys()):
+        assert_results_identical(accs[len(exprs) + off].snapshot(),
+                                 stats.fragment_results[key])
+
+
+# ------------- service end-to-end -------------------------------------- #
+@pytest.mark.parametrize("failure_script", [None, {0.5: 1}])
+def test_service_streamed_final_bit_identical_to_singles(failure_script):
+    store = make_store(n_events=256)
+    exprs = ["e_total > 40 && count(pt > 15) >= 2",
+             "e_total > 30 && count(pt > 15) >= 2",
+             "e_t_miss > 25"]
+    svc = QueryService(store, use_cache=False)
+    tids = [svc.submit(e, tenant=f"t{i}", stream=True)
+            for i, e in enumerate(exprs)]
+    svc.step(failure_script=failure_script)
+    for e, tid in zip(exprs, tids):
+        stream = svc.stream(tid)
+        assert stream.done and svc.result(tid).streamed
+        snaps = list(stream)
+        assert snaps[-1].final and snaps[-1].result is svc.result(tid).result
+        # coverage is monotone and times are ordered
+        scanned = [s.coverage.events_scanned for s in snaps]
+        assert scanned == sorted(scanned)
+        times = [s.t_virtual for s in snaps]
+        assert times == sorted(times)
+        assert times[0] < times[-1]  # first partial strictly before final
+        cat = MetadataCatalog(store.n_nodes)
+        jse = JobSubmissionEngine(cat, store)
+        want, _ = jse.run_job_simulated(jse.submit(e),
+                                        failure_script=failure_script)
+        assert_results_identical(snaps[-1].result, want)
+
+
+def test_service_dedup_fans_stream_out_to_all_tickets():
+    store = make_store(n_events=192)
+    svc = QueryService(store, use_cache=False)
+    a = svc.submit("e_total > 40", tenant="a", stream=True)
+    b = svc.submit(" e_total>40.0 ", tenant="b", stream=True)  # same canonical
+    c = svc.submit("e_total > 40", tenant="c")  # unstreamed rider
+    svc.step()
+    sa, sb = svc.stream(a), svc.stream(b)
+    assert sa.done and sb.done
+    assert sa.latest().result is sb.latest().result
+    assert sa.published == sb.published > 1
+    with pytest.raises(KeyError):
+        svc.stream(c)  # only stream=True tickets have streams
+
+
+def test_stream_aborts_when_scan_truncates_and_publishes_no_final():
+    store = make_store(n_events=256)
+    svc = QueryService(store)
+    tid = svc.submit("e_total > 40", tenant="a", stream=True)
+    svc.step(failure_script={0.01: 0, 0.02: 1, 0.03: 2, 0.04: 3})
+    stream = svc.stream(tid)
+    assert stream.state == "ABORTED" and "aborted" in stream.note
+    assert not stream.done
+    # whatever partial prefixes got out are readable but none is final
+    for snap in stream:
+        assert not snap.final and not snap.coverage.complete
+
+
+def test_cache_hit_streams_single_final_snapshot():
+    store = make_store(n_events=192)
+    svc = QueryService(store)
+    t1 = svc.submit("e_total > 40", tenant="a")
+    svc.drain()
+    t2 = svc.submit("e_total > 40", tenant="b", stream=True)
+    stream = svc.stream(t2)
+    assert svc.result(t2).from_cache and stream.done
+    assert stream.published == 1
+    snap = stream.latest()
+    assert snap.final and snap.coverage.complete
+    assert_results_identical(snap.result, svc.result(t1).result)
+
+
+def test_rejected_submission_aborts_stream():
+    svc = QueryService(make_store())
+    tid = svc.submit("definitely_not_a_var > 3", tenant="a", stream=True)
+    stream = svc.stream(tid)
+    assert stream.state == "ABORTED" and "bad expression" in stream.note
+    assert stream.latest() is None
+
+
+def test_release_stream_drops_buffers_but_keeps_ticket():
+    store = make_store(n_events=192)
+    svc = QueryService(store, use_cache=False)
+    tid = svc.submit("e_total > 40", tenant="a", stream=True)
+    svc.step()
+    want = svc.stream(tid).latest().result
+    svc.release_stream(tid)
+    with pytest.raises(KeyError):
+        svc.stream(tid)
+    svc.release_stream(tid)  # idempotent
+    assert svc.result(tid).result is want  # ticket result survives
+
+
+# ------------- stream mechanics ----------------------------------------- #
+def _snap(seq, final=False):
+    return StreamSnapshot(seq=seq, result=merge_lib.QueryResult(),
+                          coverage=merge_lib.Coverage(), t_virtual=float(seq),
+                          final=final)
+
+
+def test_stream_backpressure_conflates_oldest():
+    rs = ResultStream(0, capacity=3)
+    for i in range(7):
+        rs.publish(_snap(i))
+    assert len(rs) == 3 and rs.dropped == 4 and rs.published == 7
+    assert [s.seq for s in rs] == [4, 5, 6]  # oldest conflated away
+    rs.finish(_snap(7, final=True))
+    assert rs.done and rs.latest().final
+    assert rs.poll().seq == 7  # final survives in the (empty) buffer
+    assert rs.poll() is None
+    # publishing after close is a no-op
+    rs.publish(_snap(8))
+    assert rs.published == 8 and len(rs) == 0
+
+
+def test_stream_subscribe_pushes_every_publish():
+    rs = ResultStream(0, capacity=2)  # tighter than the publish count
+    seen = []
+    rs.subscribe(lambda s: seen.append(s.seq))
+    for i in range(5):
+        rs.publish(_snap(i))
+    assert seen == [0, 1, 2, 3, 4]  # push sees all, buffer conflates
+    assert len(rs) == 2
+
+
+def test_stream_capacity_validation():
+    with pytest.raises(ValueError):
+        ResultStream(0, capacity=0)
+
+
+# ------------- non-streamed path unchanged ------------------------------ #
+def test_unstreamed_service_has_no_streams_and_identical_results():
+    store = make_store(n_events=192)
+    svc = QueryService(store, use_cache=False)
+    tid = svc.submit("e_total > 40", tenant="a")
+    svc.step()
+    assert svc.streams == {}
+    batch = gather_store(store)
+    assert svc.result(tid).result.n_selected == int(
+        (batch["scalars"][:, 0] > 40).sum())
+    assert not svc.result(tid).streamed
