@@ -59,14 +59,19 @@ def run(n_nodes: int = 2, sizes=(250, 500, 1000, 2000, 4000, 8000)):
 
 
 def main():
-    rows, crossover = run()
+    import os
+    smoke = os.environ.get("BENCH_SMOKE") == "1"
+    # smoke: fewer sizes (still spanning the watershed), no bound assert
+    rows, crossover = run(sizes=(250, 1000, 2000, 4000)) if smoke else run()
     print("n_events,geps_parallel_s,single_node_s,speedup,selected")
     for r in rows:
         print(f"{r['n_events']},{r['geps_parallel_s']:.3f},"
               f"{r['single_node_s']:.3f},{r['speedup']:.3f},{r['selected']}")
-    print(f"# crossover (watershed) ~ {crossover:.0f} events "
-          f"(paper section 6: ~2000)")
-    assert crossover is not None and 500 < crossover < 4000, crossover
+    if crossover is not None:
+        print(f"# crossover (watershed) ~ {crossover:.0f} events "
+              f"(paper section 6: ~2000)")
+    if not smoke:
+        assert crossover is not None and 500 < crossover < 4000, crossover
     return rows
 
 

@@ -40,8 +40,11 @@ def run(replication: int, kill_at=0.5, n_events=2048, n_nodes=4):
 
 
 def main():
-    baseline = run(replication=2, kill_at=1e9)  # no failure
-    r2 = run(replication=2)
+    import os
+    smoke = os.environ.get("BENCH_SMOKE") == "1"
+    n_ev = 512 if smoke else 2048
+    baseline = run(replication=2, kill_at=1e9, n_events=n_ev)  # no failure
+    r2 = run(replication=2, n_events=n_ev)
     print("scenario,status,selected,expected,makespan_s")
     print(f"no_failure_r2,{baseline['status']},{baseline['selected']},"
           f"{baseline['expected']},{baseline['makespan_s']:.3f}")
@@ -50,7 +53,7 @@ def main():
     assert r2["selected"] == r2["expected"], "r=2 must lose no events"
     # r=1 with a dead node that exclusively owns bricks: job fails
     schema = ev.EventSchema.from_config(reduced())
-    store = create_store(schema, n_events=2048, n_nodes=4,
+    store = create_store(schema, n_events=n_ev, n_nodes=4,
                          events_per_brick=128, replication=1, seed=4)
     cat = MetadataCatalog(4)
     cat.mark_dead(1)

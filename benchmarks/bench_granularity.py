@@ -35,12 +35,16 @@ def run_one(packet: int, adaptive: bool, n_events=4096, n_nodes=4):
 
 
 def main():
+    import os
+    smoke = os.environ.get("BENCH_SMOKE") == "1"
+    n_ev = 1024 if smoke else 4096
+    sizes = (8, 128, 512) if smoke else (8, 32, 128, 512, 2048)
     print("packet_size,adaptive,makespan_s")
     results = {}
-    for packet in (8, 32, 128, 512, 2048):
+    for packet in sizes:
         cfgE = reduced()
         schema = ev.EventSchema.from_config(cfgE)
-        store = create_store(schema, n_events=4096, n_nodes=4,
+        store = create_store(schema, n_events=n_ev, n_nodes=4,
                              events_per_brick=256, replication=2, seed=2)
         cat = MetadataCatalog(4)
         for n, s in SPEEDS.items():
@@ -70,7 +74,7 @@ def main():
 
     # adaptive run
     store = create_store(
-        ev.EventSchema.from_config(reduced()), n_events=4096, n_nodes=4,
+        ev.EventSchema.from_config(reduced()), n_events=n_ev, n_nodes=4,
         events_per_brick=256, replication=2, seed=2)
     cat = MetadataCatalog(4)
     for n, s in SPEEDS.items():

@@ -15,6 +15,7 @@ Run: ``PYTHONPATH=src python benchmarks/bench_planner.py``
 """
 from __future__ import annotations
 
+import os
 import time
 
 import numpy as np
@@ -65,10 +66,14 @@ def run_singles(store, exprs, *, failure_script=None):
 
 
 def main():
+    # CI smoke mode: tiny workload, bit-rot detection only (the factoring
+    # ratio is scale-dependent, so the >=2x assert is skipped)
+    smoke = os.environ.get("BENCH_SMOKE") == "1"
+    k, n_events = (12, 512) if smoke else (K, N_EVENTS)
     schema = ev.EventSchema.from_config(reduced())
-    store = create_store(schema, n_events=N_EVENTS, n_nodes=N_NODES,
+    store = create_store(schema, n_events=n_events, n_nodes=N_NODES,
                          events_per_brick=128, replication=2, seed=11)
-    exprs = near_duplicate_workload(K)
+    exprs = near_duplicate_workload(k)
 
     base_merged, base_st, base_wall = run_batch(store, exprs, shared=False)
     plan_merged, plan_st, plan_wall = run_batch(store, exprs, shared=True)
@@ -78,8 +83,8 @@ def main():
     plan_per_brick = plan_st.fragment_evals / n_bricks
     ratio = base_st.fragment_evals / max(1, plan_st.fragment_evals)
 
-    print(f"workload: K={K} near-duplicate queries, "
-          f"{N_EVENTS} events / {n_bricks} bricks / {N_NODES} nodes")
+    print(f"workload: K={k} near-duplicate queries, "
+          f"{n_events} events / {n_bricks} bricks / {N_NODES} nodes")
     print("mode,fragment_evals,per_brick,events_scanned,wall_s")
     print(f"pr1_coalescing,{base_st.fragment_evals},"
           f"{base_per_brick:.0f},{base_st.events_scanned},{base_wall:.2f}")
@@ -89,8 +94,9 @@ def main():
           f"({len(plan_st.fragment_results)} shared fragments materialized "
           f"into the cache for free)")
 
-    assert ratio >= 2.0, \
-        f"planner must factor >= 2x fragment evals, got {ratio:.2f}x"
+    if not smoke:
+        assert ratio >= 2.0, \
+            f"planner must factor >= 2x fragment evals, got {ratio:.2f}x"
 
     # bit-identity: factored per-query results == independent execution,
     # clean run and under a node-failure script

@@ -30,8 +30,10 @@ def run(adaptive: bool, straggler_speed=0.2, n_events=4096, n_nodes=4):
 
 
 def main():
-    fixed, sel_f = run(adaptive=False)
-    adap, sel_a = run(adaptive=True)
+    import os
+    n_ev = 1024 if os.environ.get("BENCH_SMOKE") == "1" else 4096
+    fixed, sel_f = run(adaptive=False, n_events=n_ev)
+    adap, sel_a = run(adaptive=True, n_events=n_ev)
     assert sel_f == sel_a, "mitigation must not change results"
     print("mode,makespan_s")
     print(f"fixed,{fixed:.3f}")

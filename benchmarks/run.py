@@ -8,13 +8,22 @@ table.  Prints ``name,value,derived`` CSV blocks.
   multiquery   - K-query shared scan vs one-job-at-a-time + cache hits
   planner      - common-subexpression factoring on near-duplicate queries
   streaming    - time-to-first-partial vs time-to-final (progressive
-                 delivery; writes the BENCH_streaming.json snapshot)
+                 delivery incl. the stream-aware packet ramp; writes the
+                 BENCH_streaming.json snapshot)
+  fabric       - fleet shared-L2 hit rate, cross-frontend first-result
+                 latency, registry pre-warming (BENCH_fabric.json)
   query_spmd   - SPMD grid-brick query step micro-benchmark (real compute)
   roofline     - per-(arch x shape) terms from the dry-run artifacts
                  (skipped unless artifacts exist; see launch/dryrun.py)
+
+``--smoke`` runs every bench in a tiny configuration with perf asserts
+and snapshot writes disabled — the CI job that keeps benchmarks from
+bit-rotting between measurement sessions.
 """
 from __future__ import annotations
 
+import argparse
+import os
 import time
 
 
@@ -22,7 +31,15 @@ def _section(name):
     print(f"\n## {name}")
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes, no perf asserts, no snapshot writes "
+                         "(CI bit-rot gate)")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        os.environ["BENCH_SMOKE"] = "1"
+
     _section("crossover (paper Fig 7)")
     from benchmarks import bench_crossover
     bench_crossover.main()
@@ -51,6 +68,10 @@ def main() -> None:
     from benchmarks import bench_streaming
     bench_streaming.main()
 
+    _section("coherence fabric (fleet cache tier + registry)")
+    from benchmarks import bench_fabric
+    bench_fabric.main()
+
     _section("spmd query step (grid-brick job, wall time on this host)")
     import jax
     import jax.numpy as jnp
@@ -60,8 +81,9 @@ def main() -> None:
     from repro.core.jse import spmd_query_step
 
     schema = ev.EventSchema.from_config(reduced())
-    store = create_store(schema, n_events=4096, n_nodes=4,
-                         events_per_brick=256, replication=2, seed=5)
+    store = create_store(schema, n_events=1024 if args.smoke else 4096,
+                         n_nodes=4, events_per_brick=256, replication=2,
+                         seed=5)
     batch = {k: jnp.asarray(v) for k, v in gather_store(store).items()}
     for use_pallas in (False, True):
         step = jax.jit(spmd_query_step(

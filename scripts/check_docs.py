@@ -8,8 +8,9 @@
 - Relative markdown links must resolve to files in the repo.
 - No ``*.pyc`` / ``__pycache__`` files may be tracked by git.
 - Public-API doc coverage: every public module / class / function /
-  method in ``src/repro/core`` and ``src/repro/service`` must carry a
-  docstring (the packages tenants program against stay documented).
+  method in ``src/repro/core``, ``src/repro/service`` and
+  ``src/repro/fabric`` must carry a docstring (the packages tenants
+  program against stay documented).
 
 Exits non-zero with a per-finding report on any violation.
 """
@@ -25,7 +26,7 @@ import sys
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 FENCE_RE = re.compile(r"^```(\w*)\s*$")
 LINK_RE = re.compile(r"\[[^\]]+\]\(([^)#]+)(?:#[^)]*)?\)")
-API_PACKAGES = ("src/repro/core", "src/repro/service")
+API_PACKAGES = ("src/repro/core", "src/repro/service", "src/repro/fabric")
 
 
 def doc_files():

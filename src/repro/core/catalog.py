@@ -108,6 +108,19 @@ class MetadataCatalog:
             hook(self.dataset_epoch)
         return self.dataset_epoch
 
+    def set_dataset_epoch(self, epoch: int) -> int:
+        """Adopt an externally reconciled dataset epoch (the fabric's
+        gossip layer merges version vectors and pushes the result here).
+        Epochs only move forward — a stale digest can never roll the
+        catalogue back — and an actual advance fires the same bump hooks
+        as a local ``bump_dataset_version`` so caches invalidate
+        identically either way.  Returns the (possibly unchanged) epoch."""
+        if epoch > self.dataset_epoch:
+            self.dataset_epoch = epoch
+            for hook in self._epoch_hooks:
+                hook(self.dataset_epoch)
+        return self.dataset_epoch
+
     def next_pending(self) -> Optional[JobRecord]:
         """Oldest PENDING job, or None (what the polling broker picks up)."""
         for jid in sorted(self.jobs):

@@ -78,6 +78,25 @@ class PacketPartial:
     partials: List[merge_lib.QueryResult]
 
 
+@dataclasses.dataclass(frozen=True)
+class PacketTelemetry:
+    """Measured compute for one evaluated packet: events in the slice,
+    calibration iterations applied, distinct track aggregates the
+    fragment-factored pass swept, the number of plan targets the packet
+    evaluated (the whole window rides one measurement — the fitter
+    normalizes per target so window width is not an omitted variable),
+    and the REAL (wall-clock) evaluation time.  This is the per-packet
+    observable the planner's cost-model calibration
+    (``planner.fit_cost_weights``) regresses on — virtual time charges a
+    flat per-event rate, but the actual numpy/JAX compute scales with
+    calibration and aggregate depth."""
+    size: int
+    calib_iters: int
+    n_aggregates: int
+    wall_s: float
+    n_targets: int = 1
+
+
 @dataclasses.dataclass
 class JobStats:
     """Execution telemetry for one (batched) simulated grid job: virtual
@@ -97,6 +116,9 @@ class JobStats:
     # canonical (query_lib.node_key) — fed to the fragment-level cache
     fragment_results: Dict[str, merge_lib.QueryResult] = \
         dataclasses.field(default_factory=dict)
+    # per-packet compute observations for cost-model calibration
+    packet_telemetry: List[PacketTelemetry] = \
+        dataclasses.field(default_factory=list)
 
 
 class JobSubmissionEngine:
@@ -109,12 +131,18 @@ class JobSubmissionEngine:
     def __init__(self, catalog: MetadataCatalog, store: BrickStore,
                  time_model: Optional[TimeModel] = None,
                  node_speed: Optional[Dict[int, float]] = None,
-                 adaptive_packets: bool = True):
+                 adaptive_packets: bool = True,
+                 packet_ramp: Optional[int] = None,
+                 ramp_factor: float = 2.0):
         self.catalog = catalog
         self.store = store
         self.tm = time_model or TimeModel()
         self.node_speed = node_speed or {}
         self.adaptive_packets = adaptive_packets
+        # stream-aware sizing: cap early packets at `packet_ramp` events,
+        # growing by `ramp_factor` per completed packet (None disables)
+        self.packet_ramp = packet_ramp
+        self.ramp_factor = ramp_factor
 
     # ------------------------------------------------------------------ #
     def submit(self, expr: str, calib_iters: int = 0) -> int:
@@ -165,7 +193,8 @@ class JobSubmissionEngine:
                                 = None,
                                 plan: Optional[query_lib.FragmentPlan] = None,
                                 on_partial: Optional[
-                                    Callable[[PacketPartial], None]] = None
+                                    Callable[[PacketPartial], None]] = None,
+                                packet_ramp: Optional[int] = None
                                 ) -> Tuple[List[merge_lib.QueryResult],
                                            JobStats]:
         """Shared-scan execution of K coalesced jobs: ONE sweep over the
@@ -187,7 +216,11 @@ class JobSubmissionEngine:
         consumes partials — the streaming delivery hook.  The callback runs
         synchronously inside the scan loop and must not raise; a truncated
         (FAILED) scan still emits the partials computed before the abort,
-        but no DONE result ever follows them."""
+        but no DONE result ever follows them.
+
+        ``packet_ramp`` overrides the engine-level stream-aware ramp for
+        THIS run only (the service enables it per window when someone is
+        streaming); None inherits the engine setting."""
         recs = [self.catalog.jobs[j] for j in job_ids]
         if not recs:
             raise ValueError("empty job batch")
@@ -206,7 +239,9 @@ class JobSubmissionEngine:
                 f"plan has {len(plan.roots)} roots for {len(recs)} jobs")
         failure_script = dict(failure_script or {})
 
-        sched = AdaptivePacketScheduler(self.catalog)
+        ramp = packet_ramp if packet_ramp is not None else self.packet_ramp
+        sched = AdaptivePacketScheduler(self.catalog, ramp_start=ramp,
+                                        ramp_factor=self.ramp_factor)
         if not self.adaptive_packets:
             sched.min = sched.max = sched.base
         dead = self.catalog.dead_nodes()
@@ -234,6 +269,7 @@ class JobSubmissionEngine:
                     JobStats(n_queries=len(job_ids)))
 
         stats = JobStats(n_queries=len(job_ids))
+        plan_aggs = query_lib.unique_aggregates(plan.targets())
         results: List[List[merge_lib.QueryResult]] = []
         # virtual clock: heap of (t_free, node); staging charged on first use
         now = 0.0
@@ -264,9 +300,15 @@ class JobSubmissionEngine:
                 if sched.inflight:
                     heapq.heappush(heap, (now + 0.01, node))
                 continue
+            t_wall = time.perf_counter()
             res = self._eval_packet_batch(plan, pkt.brick_id,
                                           pkt.start, pkt.size,
                                           rec.calib_iters)
+            stats.packet_telemetry.append(PacketTelemetry(
+                size=pkt.size, calib_iters=rec.calib_iters,
+                n_aggregates=plan_aggs,
+                wall_s=time.perf_counter() - t_wall,
+                n_targets=len(plan.targets())))
             results.append(res)
             stats.events_scanned += pkt.size
             stats.fragment_evals += plan.evals_per_batch

@@ -38,16 +38,32 @@ class Packet:
 class AdaptivePacketScheduler:
     """Central work queue with PROOF-rule packet sizing: slower nodes get
     smaller packets, packets shrink as the queue drains, and failed or
-    dead-node packets re-queue at the front for recovery-first service."""
+    dead-node packets re-queue at the front for recovery-first service.
+
+    ``ramp_start`` enables the *stream-aware* sizing mode: the first
+    packets are capped at ``ramp_start`` events and the cap grows by
+    ``ramp_factor`` per completed packet until the PROOF size takes over.
+    Streaming delivery wants the first exact prefix on the wire as early
+    as possible, which is exactly what PROOF's up-front ~queue/(4·nodes)
+    packets pessimize; the ramp keeps time-to-first-partial small while
+    converging to adaptive sizing for the bulk of the scan (so the
+    makespan cost of streaming stays negligible)."""
 
     def __init__(self, catalog: MetadataCatalog, *, base_packet: int = 64,
                  min_packet: int = 8, max_packet: int = 1024,
-                 max_attempts: int = 5):
+                 max_attempts: int = 5, ramp_start: Optional[int] = None,
+                 ramp_factor: float = 2.0):
+        if ramp_start is not None and ramp_start <= 0:
+            raise ValueError("ramp_start must be positive")
+        if ramp_factor <= 1.0:
+            raise ValueError("ramp_factor must be > 1")
         self.catalog = catalog
         self.base = base_packet
         self.min = min_packet
         self.max = max_packet
         self.max_attempts = max_attempts
+        self.ramp_start = ramp_start
+        self.ramp_factor = ramp_factor
         self.queue: deque = deque()   # (brick_id, start, remaining)
         self.inflight: Dict[int, Packet] = {}
         self.done: List[Packet] = []
@@ -70,7 +86,17 @@ class AdaptivePacketScheduler:
         size = int(self.base * (mine / mean if mean > 0 else 1.0))
         remaining = sum(w[2] for w in self.queue)
         drain_cap = max(self.min, remaining // max(1, len(alive)))
-        return max(self.min, min(self.max, size, drain_cap))
+        size = max(self.min, min(self.max, size, drain_cap))
+        if self.ramp_start is not None:
+            # stream-aware ramp: small early packets, growing geometrically
+            # with scan progress until PROOF sizing dominates.  The
+            # exponent is bounded so ramp_factor**n stays finite on long
+            # scans, and int() runs only on a value known to be < size.
+            done = min(len(self.done), 64)
+            cap = self.ramp_start * self.ramp_factor ** done
+            if cap < size:
+                size = max(1, int(cap))
+        return size
 
     def next_packet(self, node: int) -> Optional[Packet]:
         """Lease the next packet to ``node`` (None when queue drained)."""

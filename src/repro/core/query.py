@@ -455,13 +455,45 @@ class FragmentPlan:
                 for tgt in self.targets()]
 
 
-def build_fragment_plan(exprs: Sequence[str], *,
-                        shared: bool = True) -> FragmentPlan:
+def unique_aggregates(roots: Sequence[Node]) -> int:
+    """Number of distinct interned :class:`Agg` nodes reachable from
+    ``roots`` — the track sweeps one fragment-factored pass performs per
+    resident batch (the cost-model calibration's per-packet feature)."""
+    return sum(1 for _, node in _id_nodes(roots) if isinstance(node, Agg))
+
+
+def _id_nodes(roots: Sequence[Node]):
+    """Unique (id, node) pairs reachable from ``roots`` (helper for
+    counting by node type)."""
+    out: dict = {}
+
+    def walk(node):
+        if id(node) in out:
+            return
+        out[id(node)] = node
+        if isinstance(node, (Agg, Unary)):
+            walk(node.arg)
+        elif isinstance(node, Bin):
+            walk(node.lhs)
+            walk(node.rhs)
+
+    for r in roots:
+        walk(r)
+    return out.items()
+
+
+def build_fragment_plan(exprs: Sequence[str], *, shared: bool = True,
+                        interner: Optional[Interner] = None) -> FragmentPlan:
     """Canonicalize + hash-cons every subexpression of each query into a
     deduplicated fragment plan (the planner's common-subexpression
     factoring).  Near-duplicate queries (same aggregates under different
-    outer filters) end up sharing fragment objects, hence compute."""
-    interner = Interner()
+    outer filters) end up sharing fragment objects, hence compute.
+
+    Pass a pre-seeded ``interner`` (the fabric's fragment registry seeds
+    one with cross-window hot fragments) so fragments already interned
+    share node identity with this window's queries; seeding never changes
+    the plan's results, only what the planner can recognize by ``id()``."""
+    interner = interner if interner is not None else Interner()
     roots = [interner.intern(parse(e)) for e in exprs]
     seen: set = set()
     for r in roots:

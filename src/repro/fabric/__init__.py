@@ -1,0 +1,22 @@
+"""Coherence fabric: the layer that turns N single-process query
+front-ends into one coherent fleet — a deterministic inter-front-end
+message bus, epoch + liveness gossip with a bounded propagation delay,
+a fleet-shared L2 result/fragment cache tier under every front-end's L1,
+a persistent cross-window fragment registry, and cross-front-end
+progressive-stream fan-out.  ``docs/fabric.md`` documents the coherence
+and staleness model."""
+from repro.fabric.bus import BusStats, Envelope, MessageBus
+from repro.fabric.fanout import FanoutStats, StreamFanout
+from repro.fabric.fleet import Fleet, Frontend
+from repro.fabric.gossip import (GossipNode, GossipStats, effective_epoch,
+                                 merge_vv, rounds_bound)
+from repro.fabric.registry import FragmentRecord, FragmentRegistry
+from repro.fabric.shared_cache import (SharedCacheStats, SharedCacheTier,
+                                       TieredResultCache)
+
+__all__ = [
+    "BusStats", "Envelope", "FanoutStats", "Fleet", "FragmentRecord",
+    "FragmentRegistry", "Frontend", "GossipNode", "GossipStats",
+    "MessageBus", "SharedCacheStats", "SharedCacheTier", "StreamFanout",
+    "TieredResultCache", "effective_epoch", "merge_vv", "rounds_bound",
+]

@@ -1,0 +1,297 @@
+"""Fleet: N query front-ends joined into one coherent service by the
+fabric.
+
+The paper's scalability story ("freely adding ... any grid computing and
+storage node") only holds if the *service* tier scales out too.  A
+:class:`Fleet` stands up N :class:`~repro.service.frontend.QueryService`
+front-ends over ONE shared brick store, each with its own catalogue view,
+and wires them through the fabric's four mechanisms:
+
+- a deterministic :class:`~repro.fabric.bus.MessageBus` simulating the
+  inter-front-end network;
+- :class:`~repro.fabric.gossip.GossipNode` epoch + liveness gossip, so a
+  dataset bump or node death observed anywhere reaches every catalogue
+  within :func:`~repro.fabric.gossip.rounds_bound` rounds;
+- a :class:`~repro.fabric.shared_cache.SharedCacheTier` L2 under every
+  front-end's L1, so whole-query and fragment results computed once are
+  zero-I/O hits fleet-wide;
+- a fleet-shared :class:`~repro.fabric.registry.FragmentRegistry`
+  seeding every window's planner with cross-window hot fragments;
+- :class:`~repro.fabric.fanout.StreamFanout` ticket routing, so a tenant
+  can read any ticket's progressive stream from any front-end.
+
+Tickets are fleet-global: :meth:`Fleet.submit` returns an id valid at
+every front-end (``result``/``stream`` route to the owner), which is the
+"any door" property interactive grids need from a load-balanced service
+tier.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.brick import BrickStore
+from repro.core.catalog import MetadataCatalog
+from repro.core.elastic import ElasticManager, MigrationPlan
+from repro.fabric.bus import MessageBus
+from repro.fabric.fanout import STREAM_TOPIC, StreamFanout
+from repro.fabric.gossip import GOSSIP_TOPIC, GossipNode, rounds_bound
+from repro.fabric.registry import FragmentRegistry
+from repro.fabric.shared_cache import SharedCacheTier, TieredResultCache
+from repro.service import streaming as streaming_lib
+from repro.service.frontend import QueryService, Ticket
+from repro.service.scheduler import QueryScheduler
+
+
+@dataclasses.dataclass
+class Frontend:
+    """One fleet member: the service plus its fabric endpoints (own
+    catalogue view, gossip node, stream fan-out)."""
+    index: int
+    node_id: str
+    service: QueryService
+    catalog: MetadataCatalog
+    gossip: GossipNode
+    fanout: StreamFanout
+
+
+class Fleet:
+    """N coherent query front-ends over one brick store (see module doc).
+
+    Parameters
+    ----------
+    store:
+        The shared brick-sharded event store (the grid's storage fabric).
+    n_frontends:
+        Fleet width.
+    bus:
+        Injectable :class:`~repro.fabric.bus.MessageBus` (pass one with
+        delay/drop/partition configured for fault experiments).
+    shared_cache:
+        ``True`` installs one :class:`SharedCacheTier` L2 under every
+        front-end; ``False`` gives each front-end an independent L1 only
+        (the A/B baseline the fabric benchmark measures against).
+    registry:
+        Fleet-shared :class:`FragmentRegistry`, or ``None`` for
+        per-window planning only.
+    gossip_fanout:
+        Digest push targets per round; the propagation bound is
+        ``rounds_bound(n_frontends, gossip_fanout)``.
+    scheduler_factory:
+        Per-front-end :class:`QueryScheduler` constructor (schedulers
+        hold queues and cannot be shared).
+    service_kwargs:
+        Extra keyword arguments applied to every ``QueryService`` (e.g.
+        ``stream_ramp``, ``refit_cost_every``, ``use_cache``).
+    """
+
+    def __init__(self, store: BrickStore, n_frontends: int = 2, *,
+                 bus: Optional[MessageBus] = None,
+                 shared_cache: bool = True,
+                 l1_capacity: int = 256,
+                 l2_capacity: int = 4096,
+                 registry: Optional[FragmentRegistry] = None,
+                 gossip_fanout: int = 1,
+                 scheduler_factory: Optional[
+                     Callable[[], QueryScheduler]] = None,
+                 service_kwargs: Optional[dict] = None):
+        if n_frontends < 1:
+            raise ValueError("need at least one front-end")
+        self.store = store
+        self.bus = bus or MessageBus()
+        self.l2 = SharedCacheTier(l2_capacity) if shared_cache else None
+        self.registry = registry
+        self.gossip_fanout = gossip_fanout
+        self.frontends: List[Frontend] = []
+        self._tickets: Dict[int, Tuple[int, int]] = {}  # gtid -> (fe, tid)
+        self._by_local: Dict[Tuple[int, int], int] = {}  # (fe, tid) -> gtid
+        self._next_gtid = 0
+        self._rr = 0
+        kwargs = dict(service_kwargs or {})
+        for i in range(n_frontends):
+            node_id = f"fe{i}"
+            catalog = MetadataCatalog(store.n_nodes)
+            # gossip BEFORE the cache: both register catalogue bump hooks,
+            # and on a local bump the gossip hook must credit the version
+            # vector first so the cache's hook forwards the already-updated
+            # vector to the shared tier
+            gossip = GossipNode(node_id, catalog, self.bus,
+                                fanout=gossip_fanout)
+            cache = TieredResultCache(l1_capacity, catalog=catalog,
+                                      l2=self.l2,
+                                      vv_source=lambda g=gossip: g.vv)
+            svc = QueryService(
+                store, catalog, cache=cache,
+                scheduler=scheduler_factory() if scheduler_factory else None,
+                registry=registry, frontend_id=node_id, **kwargs)
+            fanout = StreamFanout(
+                node_id, self.bus,
+                lambda key, idx=i: self._resolve_stream(key, idx))
+            self.frontends.append(Frontend(i, node_id, svc, catalog,
+                                           gossip, fanout))
+
+    # ------------------------------------------------------------------ #
+    @property
+    def n_frontends(self) -> int:
+        """Fleet width."""
+        return len(self.frontends)
+
+    @property
+    def rounds_bound(self) -> int:
+        """Documented gossip propagation bound for this fleet's shape."""
+        return rounds_bound(self.n_frontends, self.gossip_fanout)
+
+    def _resolve_stream(self, key: int,
+                        fe_index: int
+                        ) -> Optional[streaming_lib.ResultStream]:
+        owner = self._tickets.get(key)
+        if owner is None or owner[0] != fe_index:
+            return None
+        return self.frontends[fe_index].service.streams.get(owner[1])
+
+    def _owner(self, gtid: int) -> Tuple[Frontend, int]:
+        fe_idx, tid = self._tickets[gtid]
+        return self.frontends[fe_idx], tid
+
+    def owner_of(self, gtid: int) -> int:
+        """Index of the front-end that owns a global ticket (KeyError if
+        the id was never issued)."""
+        return self._tickets[gtid][0]
+
+    # ------------------------------------------------------------------ #
+    def submit(self, expr: str, *, tenant: str = "default",
+               calib_iters: int = 0, stream: bool = False,
+               frontend: Optional[int] = None) -> int:
+        """Submit to one front-end (round-robin when ``frontend`` is None);
+        returns a fleet-global ticket id usable at any front-end."""
+        if frontend is None:
+            frontend = self._rr % self.n_frontends
+            self._rr += 1
+        fe = self.frontends[frontend]
+        tid = fe.service.submit(expr, tenant=tenant,
+                                calib_iters=calib_iters, stream=stream)
+        gtid = self._next_gtid
+        self._next_gtid += 1
+        self._tickets[gtid] = (frontend, tid)
+        self._by_local[(frontend, tid)] = gtid
+        return gtid
+
+    def result(self, gtid: int) -> Ticket:
+        """Ticket lookup routed to the owning front-end (the control
+        plane is catalogue-backed, hence visible from any door)."""
+        fe, tid = self._owner(gtid)
+        return fe.service.result(tid)
+
+    def stream(self, gtid: int, *,
+               frontend: Optional[int] = None
+               ) -> streaming_lib.ResultStream:
+        """The ticket's progressive stream, read from ``frontend`` (the
+        owner by default).  A non-owner front-end returns a proxy stream
+        fed over the bus — call :meth:`pump` (or :meth:`step`) to move
+        snapshots; the proxy honours every local-streaming guarantee (see
+        ``fabric/fanout.py``)."""
+        fe, tid = self._owner(gtid)
+        if frontend is None or frontend == fe.index:
+            return fe.service.stream(tid)
+        return self.frontends[frontend].fanout.proxy(gtid, fe.node_id)
+
+    # ------------------------------------------------------------------ #
+    def pump(self, rounds: int = 1) -> None:
+        """Advance the fabric ``rounds`` network rounds: every gossip node
+        pushes its digest, the bus ticks, and delivered messages are
+        dispatched to their topic handlers."""
+        for _ in range(rounds):
+            for fe in self.frontends:
+                fe.gossip.emit()
+            self.bus.tick()
+            for fe in self.frontends:
+                for env in self.bus.recv(fe.node_id):
+                    if env.topic == GOSSIP_TOPIC:
+                        fe.gossip.on_message(env.payload)
+                    elif env.topic == STREAM_TOPIC:
+                        fe.fanout.on_message(env.payload)
+
+    def step(self, frontend: Optional[int] = None, *,
+             failure_script=None, pump_rounds: int = 1) -> List[int]:
+        """Run one dispatch window on one (or every) front-end, then pump
+        the fabric; returns the GLOBAL ids of tickets served."""
+        targets = ([self.frontends[frontend]] if frontend is not None
+                   else self.frontends)
+        served = []
+        for fe in targets:
+            for tid in fe.service.step(failure_script=failure_script):
+                served.append(self._by_local[(fe.index, tid)])
+        self.pump(pump_rounds)
+        return served
+
+    def drain(self, *, max_windows: int = 10_000) -> None:
+        """Dispatch windows on every front-end until no work is pending,
+        pump until the stream fan-out traffic quiesces (all snapshots
+        landed), then run one full anti-entropy cycle (``rounds_bound``
+        pumps) so every epoch/liveness fact observed before the drain is
+        fleet-wide.  Quiescence is judged on the stream topic only: every
+        pump emits fresh gossip digests, so waiting for a fully idle bus
+        would spin forever on a delayed bus."""
+        for _ in range(max_windows):
+            if all(fe.service.scheduler.n_pending == 0
+                   for fe in self.frontends):
+                break
+            self.step()
+        guard = 0
+        while self.bus.in_flight(STREAM_TOPIC) and guard < 1000:
+            self.pump()
+            guard += 1
+        self.pump(self.rounds_bound)
+
+    # ------------------------------------------------------------------ #
+    def bump_dataset_version(self, frontend: int = 0) -> int:
+        """Record a dataset change as observed by one front-end; gossip
+        carries it to every peer within :attr:`rounds_bound` pumps."""
+        return self.frontends[frontend].catalog.bump_dataset_version()
+
+    def node_leave(self, grid_node: int, *,
+                   observed_by: int = 0) -> MigrationPlan:
+        """Grid node death observed by one front-end: local failover via
+        the ElasticManager, liveness gossip to every peer."""
+        fe = self.frontends[observed_by]
+        plan = ElasticManager(fe.catalog, self.store).node_leave(grid_node)
+        fe.gossip.observe_liveness(grid_node, False)
+        return plan
+
+    def node_join(self, grid_node: int, *,
+                  observed_by: int = 0) -> MigrationPlan:
+        """Grid node (re)join observed by one front-end: local rebalance
+        via the ElasticManager, liveness gossip to every peer."""
+        fe = self.frontends[observed_by]
+        plan = ElasticManager(fe.catalog, self.store).node_join(grid_node)
+        fe.gossip.observe_liveness(grid_node, True)
+        return plan
+
+    # ------------------------------------------------------------------ #
+    def fleet_stats(self) -> dict:
+        """Aggregated service/cache counters across the fleet (plus the
+        shared tier's own counters when enabled)."""
+        agg = {"submitted": 0, "served": 0, "rejected": 0, "cache_hits": 0,
+               "l2_hits": 0, "events_scanned": 0, "fragment_evals": 0}
+        for fe in self.frontends:
+            s = fe.service.stats
+            agg["submitted"] += s.submitted
+            agg["served"] += s.served
+            agg["rejected"] += s.rejected
+            agg["cache_hits"] += s.cache_hits
+            agg["events_scanned"] += s.events_scanned
+            agg["fragment_evals"] += s.fragment_evals
+            agg["l2_hits"] += fe.service.cache.stats.l2_hits
+        agg["hit_rate"] = agg["cache_hits"] / max(1, agg["submitted"])
+        if self.l2 is not None:
+            agg["l2_entries"] = len(self.l2)
+            agg["l2_fragment_puts"] = self.l2.stats.fragment_puts
+        return agg
+
+    def close(self) -> None:
+        """Shut the fleet down: every front-end's service closes (cache
+        hooks detached) and every gossip node detaches from its
+        catalogue — a long-lived catalogue accumulates no dead hooks."""
+        for fe in self.frontends:
+            fe.service.close()
+            fe.gossip.detach()

@@ -1,0 +1,194 @@
+"""Epoch gossip + anti-entropy: fleet-wide cache invalidation with a
+bounded propagation delay.
+
+The single-process service invalidates its cache through the catalogue's
+``bump_dataset_version()`` hook.  In a fleet, each front-end has its own
+catalogue *view*, so a bump observed on one front-end must reach every
+peer — otherwise a sibling keeps serving results computed over the old
+dataset forever.  This module closes that loop with the classic
+interactive-grid recipe (DIAL's shared metadata tier, Grid-enabled
+database lessons): a small, periodic, idempotent digest exchange.
+
+**Version vectors.**  Each front-end keeps a vector ``{origin: bumps}``
+counting how many dataset bumps each fleet member has *originated*.  The
+effective dataset epoch is the SUM of the vector's entries.  Summing (not
+max-ing) is what makes reconciliation after a partition correct: if both
+sides of a split bump once, the healed vector merges to both entries and
+the effective epoch exceeds *each* side's partition-era epoch, so every
+entry cached during the split is invalidated on every member.
+
+**Propagation bound.**  Every gossip round, the node at index ``i`` of
+the sorted peer list pushes its full digest to peers ``i+1 .. i+fanout``
+(mod n).  Information therefore advances at least ``fanout`` ring
+positions per round, giving the documented bound
+:func:`rounds_bound` ``= ceil((n-1)/fanout)`` rounds from any bump to
+fleet-wide visibility (loss-free bus; message drops only delay
+convergence because digests are cumulative and idempotent).
+
+**Anti-entropy.**  Digests always carry the full vector and the full
+liveness map, never deltas.  A front-end that was partitioned needs no
+special recovery path: the first digest it receives after healing carries
+everything it missed, and :func:`rounds_bound` applies again from the
+heal.
+
+The same digest piggybacks grid-node liveness (a per-node monotonic
+``(version, origin)`` stamp — highest wins, origin id breaking ties
+between concurrent observations), so a ``node_leave`` observed by one
+front-end reaches every peer's catalogue and redirects their packet
+scheduling to surviving replicas within the same bound.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+from repro.core.catalog import MetadataCatalog
+from repro.fabric.bus import MessageBus
+
+GOSSIP_TOPIC = "gossip"
+
+VersionVector = Dict[str, int]
+
+
+def effective_epoch(vv: VersionVector) -> int:
+    """Dataset epoch implied by a version vector: the sum of per-origin
+    bump counts (see module docstring for why sum, not max)."""
+    return sum(vv.values())
+
+
+def merge_vv(mine: VersionVector, theirs: VersionVector) -> bool:
+    """Element-wise max merge of ``theirs`` into ``mine`` (in place);
+    returns True when ``mine`` changed."""
+    changed = False
+    for origin, n in theirs.items():
+        if n > mine.get(origin, 0):
+            mine[origin] = n
+            changed = True
+    return changed
+
+
+def rounds_bound(n_frontends: int, fanout: int = 1) -> int:
+    """Worst-case gossip rounds from a bump on any member to fleet-wide
+    visibility on a loss-free bus: ``ceil((n-1)/fanout)``."""
+    if n_frontends <= 1:
+        return 0
+    return math.ceil((n_frontends - 1) / max(1, fanout))
+
+
+@dataclasses.dataclass
+class GossipStats:
+    """Monotonic gossip counters: digests sent/received, digests that
+    changed local state, and epoch/liveness updates applied."""
+    digests_sent: int = 0
+    digests_received: int = 0
+    digests_stale: int = 0       # received digests that taught us nothing
+    epoch_updates: int = 0       # catalog epochs advanced by gossip
+    liveness_updates: int = 0    # node alive/dead flips applied by gossip
+
+
+class GossipNode:
+    """One front-end's membership in the epoch-gossip protocol.
+
+    Attaches to the front-end's catalogue: a local
+    ``bump_dataset_version()`` (from any code path) is credited to this
+    node's entry of the version vector via the catalogue's bump hook, and
+    remote digests that advance the vector are applied back to the
+    catalogue with ``set_dataset_epoch`` — which fires the same hook
+    chain, so the front-end's result cache invalidates exactly as it
+    would for a local bump.
+
+    Call :meth:`emit` once per gossip round (the Fleet does this inside
+    ``pump``), and :meth:`on_message` for every received digest.
+    """
+
+    def __init__(self, node_id: str, catalog: MetadataCatalog,
+                 bus: MessageBus, *, fanout: int = 1):
+        self.node_id = node_id
+        self.catalog = catalog
+        self.bus = bus
+        self.fanout = max(1, fanout)
+        self.vv: VersionVector = {}
+        # grid node liveness: node -> (version, origin, alive).  Highest
+        # (version, origin) wins — the origin id breaks ties between
+        # concurrent equal-version observations on different front-ends,
+        # so conflicting join/leave reports still converge fleet-wide
+        # instead of each observer keeping its own view forever.
+        self.liveness: Dict[int, Tuple[int, str, bool]] = {}
+        self.stats = GossipStats()
+        bus.register(node_id)
+        catalog.on_dataset_bump(self._on_local_bump)
+
+    # ------------------------------------------------------------------ #
+    def _on_local_bump(self, epoch: int) -> None:
+        """Catalogue bump hook: credit locally originated bumps to our own
+        version-vector entry.  When the epoch change came from gossip
+        itself (``set_dataset_epoch`` after a merge) the vector already
+        accounts for it and the delta is zero."""
+        known = effective_epoch(self.vv)
+        if epoch > known:
+            self.vv[self.node_id] = \
+                self.vv.get(self.node_id, 0) + (epoch - known)
+
+    def observe_liveness(self, grid_node: int, alive: bool) -> None:
+        """Record a locally observed grid-node join/leave and stamp it
+        with a fresh (version, origin) so gossip propagates it to every
+        peer and concurrent observations resolve deterministically.  The
+        caller is responsible for the local catalogue mark (the
+        ElasticManager already did it)."""
+        ver = self.liveness.get(grid_node, (0, "", True))[0]
+        self.liveness[grid_node] = (ver + 1, self.node_id, alive)
+
+    # ------------------------------------------------------------------ #
+    def digest(self) -> dict:
+        """The full anti-entropy digest this node pushes every round."""
+        return {
+            "vv": dict(self.vv),
+            "live": {n: list(v) for n, v in self.liveness.items()},
+        }
+
+    def targets(self) -> List[str]:
+        """This round's push targets: the next ``fanout`` peers after us
+        on the sorted ring of registered fabric nodes."""
+        ring = self.bus.nodes
+        if len(ring) <= 1:
+            return []
+        i = ring.index(self.node_id)
+        return [ring[(i + 1 + k) % len(ring)]
+                for k in range(min(self.fanout, len(ring) - 1))]
+
+    def emit(self) -> None:
+        """Push the digest to this round's ring targets."""
+        payload = self.digest()
+        for dst in self.targets():
+            self.bus.send(self.node_id, dst, GOSSIP_TOPIC, payload)
+            self.stats.digests_sent += 1
+
+    def on_message(self, payload: dict) -> None:
+        """Merge one received digest into local state, applying epoch and
+        liveness changes to the catalogue (which fans out to the caches
+        through the ordinary bump-hook chain)."""
+        self.stats.digests_received += 1
+        changed = merge_vv(self.vv, payload.get("vv", {}))
+        if changed:
+            self.catalog.set_dataset_epoch(effective_epoch(self.vv))
+            self.stats.epoch_updates += 1
+        live_changed = False
+        for node, (ver, origin, alive) in payload.get("live", {}).items():
+            node = int(node)
+            cur = self.liveness.get(node, (0, "", True))
+            if (ver, origin) > (cur[0], cur[1]):
+                self.liveness[node] = (ver, origin, alive)
+                if alive:
+                    self.catalog.mark_alive(node)
+                else:
+                    self.catalog.mark_dead(node)
+                self.stats.liveness_updates += 1
+                live_changed = True
+        if not changed and not live_changed:
+            self.stats.digests_stale += 1
+
+    def detach(self) -> None:
+        """Unhook from the catalogue (shutdown path — a long-lived
+        catalogue must not accumulate dead gossip hooks)."""
+        self.catalog.off_dataset_bump(self._on_local_bump)

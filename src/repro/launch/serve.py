@@ -15,6 +15,14 @@ Add ``--stream`` for progressive delivery: every ticket gets a
 ResultStream fed per-packet prefix merges mid-scan, and the report adds
 time-to-first-partial vs time-to-final plus a live coverage trace for one
 sample ticket.
+
+``--fleet N`` (query mode) replaces the single QueryService with a
+coherence-fabric :class:`~repro.fabric.fleet.Fleet` of N front-ends over
+one brick store: submissions round-robin across the fleet, a shared L2
+cache tier + persistent fragment registry turn repeats into zero-I/O
+hits on ANY front-end, a mid-run dataset bump demonstrates the gossip
+invalidation bound, and with ``--stream`` one sample ticket is read
+cross-frontend through the bus fan-out.
 """
 from __future__ import annotations
 
@@ -57,6 +65,74 @@ def generate(cfg, model, params, shd, prompt, max_new_tokens=16,
                                 :cfg.vocab_size], axis=-1)
         tok = tok.reshape(b, 1)
     return jnp.concatenate(out, axis=1)
+
+
+def serve_fleet(args):
+    """Fleet serving mode: the multi-tenant workload of ``serve_queries``
+    replayed round-robin over ``--fleet N`` coherence-fabric front-ends.
+    Reports fleet-aggregate hit rates (incl. the shared-L2 contribution),
+    the gossip propagation bound, registry pre-warming, and — with
+    ``--stream`` — a cross-frontend proxy read of one sample ticket."""
+    from repro.configs.geps_events import reduced as geps_reduced
+    from repro.core import events as ev
+    from repro.core.brick import create_store
+    from repro.fabric import Fleet, FragmentRegistry
+
+    cfg = geps_reduced()
+    schema = ev.EventSchema.from_config(cfg)
+    store = create_store(schema, n_events=args.n_events,
+                         n_nodes=args.n_nodes,
+                         events_per_brick=cfg.events_per_brick,
+                         replication=cfg.replication_factor, seed=0)
+    fleet = Fleet(store, args.fleet, registry=FragmentRegistry())
+    hot = ["e_total > 40 && count(pt > 15) >= 2",
+           "e_t_miss > 30", "pt_lead > 60 || n_tracks >= 8"]
+    t0 = time.time()
+    sample = None
+    for i in range(args.queries):
+        tenant = f"tenant{i % args.tenants}"
+        if i % 3 != 2:
+            expr = hot[i % len(hot)]
+        else:
+            expr = (f"e_total > {20 + (i % 7) * 10} && "
+                    f"count(pt > 15) >= {1 + i % 4}")
+        gtid = fleet.submit(expr, tenant=tenant, stream=args.stream)
+        if sample is None:
+            sample = gtid
+        if (i + 1) % args.window == 0:
+            fleet.step()
+        if args.queries > 2 and i == args.queries // 2:
+            # mid-run dataset bump on one member: gossip invalidates the
+            # whole fleet within the documented bound
+            fleet.bump_dataset_version(0)
+    fleet.drain()
+    dt = time.time() - t0
+    s = fleet.fleet_stats()
+    print(f"fleet: {args.fleet} front-ends, {s['served']}/{s['submitted']} "
+          f"served in {dt:.2f}s ({s['served'] / max(dt, 1e-9):.1f} q/s)")
+    print(f"  hit_rate={s['hit_rate']:.3f} (cache_hits={s['cache_hits']}, "
+          f"of which l2_hits={s['l2_hits']}), "
+          f"events_scanned={s['events_scanned']}")
+    print(f"  gossip: bound={fleet.rounds_bound} rounds "
+          f"(fanout={fleet.gossip_fanout}), epochs="
+          f"{[fe.catalog.dataset_epoch for fe in fleet.frontends]}")
+    if fleet.l2 is not None:
+        print(f"  shared L2: {len(fleet.l2)} entries, "
+              f"{fleet.l2.stats.hits} hits, "
+              f"{fleet.l2.stats.fragment_puts} fragment installs")
+    if fleet.registry is not None:
+        print(f"  registry: {len(fleet.registry)} fragments tracked, "
+              f"hot={fleet.registry.hot(4)}")
+    if args.stream and sample is not None:
+        owner_idx = fleet.owner_of(sample)
+        reader = (owner_idx + 1) % args.fleet
+        proxy = fleet.stream(sample, frontend=reader)
+        fleet.drain()
+        state = proxy.state
+        print(f"  cross-frontend stream: ticket {sample} (owner fe"
+              f"{owner_idx}) read from fe{reader}: {proxy.published} "
+              f"snapshots, state={state}")
+    fleet.close()
 
 
 def serve_queries(args):
@@ -187,10 +263,16 @@ def main(argv=None):
     ap.add_argument("--stream", action="store_true",
                     help="progressive delivery: per-ticket ResultStreams "
                          "fed per-packet prefix merges mid-scan")
+    ap.add_argument("--fleet", type=int, default=1,
+                    help="query mode: number of coherence-fabric "
+                         "front-ends (1 = single QueryService)")
     args = ap.parse_args(argv)
 
     if args.mode == "query":
-        serve_queries(args)
+        if args.fleet > 1:
+            serve_fleet(args)
+        else:
+            serve_queries(args)
         return
     if args.arch is None:
         ap.error("--arch is required for --mode lm")

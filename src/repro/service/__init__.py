@@ -6,19 +6,21 @@ streaming partial-merge result delivery (progressive histograms)."""
 from repro.service.cache import CacheStats, ResultCache
 from repro.service.frontend import (QUEUED, REJECTED, SERVED, QueryService,
                                     ServiceStats, Ticket, WindowController)
-from repro.service.planner import (count_aggregates, estimate_cost,
-                                   plan_window, shared_boolean_fragments,
-                                   window_cost)
+from repro.service.planner import (CostWeights, boolean_fragment_refs,
+                                   count_aggregates, estimate_cost,
+                                   fit_cost_weights, plan_window,
+                                   shared_boolean_fragments, window_cost)
 from repro.service.scheduler import (AdmissionError, QueryScheduler,
                                      Submission, make_submission)
 from repro.service.streaming import (ResultStream, StreamSnapshot,
                                      WindowStreamPublisher)
 
 __all__ = [
-    "AdmissionError", "CacheStats", "QueryScheduler", "QueryService",
-    "QUEUED", "REJECTED", "ResultCache", "ResultStream", "SERVED",
-    "ServiceStats", "StreamSnapshot", "Submission", "Ticket",
-    "WindowController", "WindowStreamPublisher", "count_aggregates",
-    "estimate_cost", "make_submission", "plan_window",
-    "shared_boolean_fragments", "window_cost",
+    "AdmissionError", "CacheStats", "CostWeights", "QueryScheduler",
+    "QueryService", "QUEUED", "REJECTED", "ResultCache", "ResultStream",
+    "SERVED", "ServiceStats", "StreamSnapshot", "Submission", "Ticket",
+    "WindowController", "WindowStreamPublisher", "boolean_fragment_refs",
+    "count_aggregates", "estimate_cost", "fit_cost_weights",
+    "make_submission", "plan_window", "shared_boolean_fragments",
+    "window_cost",
 ]

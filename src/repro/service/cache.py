@@ -38,6 +38,9 @@ class CacheStats:
     evictions: int = 0
     invalidated: int = 0
     fragment_puts: int = 0  # fragment-level entries installed by the planner
+    # hits satisfied by the fleet's shared L2 tier (always 0 for a plain
+    # per-process cache; see repro.fabric.shared_cache.TieredResultCache)
+    l2_hits: int = 0
 
 
 class ResultCache:

@@ -185,7 +185,30 @@ class QueryService:
         Buffer depth of each per-ticket
         :class:`~repro.service.streaming.ResultStream` (see
         ``submit(stream=True)`` / :meth:`stream`).
+    registry:
+        Optional :class:`~repro.fabric.registry.FragmentRegistry`: every
+        window's plan is observed into it and seeds the next window's
+        interner with cross-window hot fragments (fabric pre-warming).
+    refit_cost_every:
+        Every K dispatch windows, refit the admission cost model from
+        accumulated per-packet compute telemetry
+        (:func:`~repro.service.planner.fit_cost_weights`); ``None``
+        keeps the static cold-start weights forever.
+    stream_ramp:
+        When a window has stream subscribers, cap its first packets at
+        this many events (growing geometrically — see
+        :class:`~repro.core.packets.AdaptivePacketScheduler`), so
+        time-to-first-partial stays small WITHOUT disabling
+        PROOF-adaptive sizing for the rest of the scan.  ``None``
+        disables the ramp.
+    frontend_id:
+        Stable identity of this front-end inside a fleet (fabric gossip
+        and stream fan-out address it by this id).
     """
+
+    #: sliding-window size of retained per-packet telemetry observations
+    #: (cost refits only need recent history)
+    TELEMETRY_WINDOW = 4096
 
     def __init__(self, store: BrickStore,
                  catalog: Optional[MetadataCatalog] = None, *,
@@ -197,25 +220,40 @@ class QueryService:
                  window_controller: Optional[WindowController] = None,
                  clock: Callable[[], float] = time.monotonic,
                  planner_materialize: bool = True,
-                 stream_capacity: int = 32):
+                 stream_capacity: int = 32,
+                 registry=None,
+                 refit_cost_every: Optional[int] = None,
+                 stream_ramp: Optional[int] = None,
+                 frontend_id: str = "fe0"):
         self.store = store
         self.catalog = catalog or MetadataCatalog(store.n_nodes)
         self.jse = JobSubmissionEngine(self.catalog, store,
                                        time_model=time_model,
                                        node_speed=node_speed)
-        self.cache = cache or ResultCache(catalog=self.catalog)
-        self.scheduler = scheduler or QueryScheduler()
+        # `is not None`, NOT truthiness: an empty injected cache is falsy
+        # (it has __len__) and must not be silently replaced
+        self.cache = (cache if cache is not None
+                      else ResultCache(catalog=self.catalog))
+        self.scheduler = (scheduler if scheduler is not None
+                          else QueryScheduler())
         self.use_cache = use_cache
         self.window_controller = window_controller
         self.clock = clock
         self.planner_materialize = planner_materialize
         self.stream_capacity = stream_capacity
+        self.registry = registry
+        self.refit_cost_every = refit_cost_every
+        self.stream_ramp = stream_ramp
+        self.frontend_id = frontend_id
+        self.cost_weights: Optional[planner_lib.CostWeights] = None
         self.tickets: Dict[int, Ticket] = {}
         self.streams: Dict[int, streaming_lib.ResultStream] = {}
         self.stats = ServiceStats()
         self.window_history: List[int] = []  # max_batch used per window
+        self._telemetry: List = []  # per-packet compute, for cost refits
         self._next_ticket = 0
         self._next_batch = 0
+        self._closed = False
 
     # ------------------------------------------------------------------ #
     def submit(self, expr: str, *, tenant: str = "default",
@@ -250,7 +288,8 @@ class QueryService:
             sub = make_submission(tid, tenant, expr, calib_iters,
                                   self.store.schema,
                                   n_events=self.store.n_events,
-                                  stream=stream)
+                                  stream=stream,
+                                  weights=self.cost_weights)
         except AdmissionError as e:
             ticket.status = REJECTED
             ticket.note = str(e)
@@ -337,10 +376,14 @@ class QueryService:
         for sub in window:
             groups.setdefault(sub.canonical, []).append(sub)
 
-        # fragment factoring across the window's unique queries
+        # fragment factoring across the window's unique queries; the
+        # fabric registry (when present) seeds the interner with
+        # cross-window hot fragments and pre-warms their materialization
         plan = planner_lib.plan_window(
             list(groups), materialize=self.planner_materialize
-            and self.use_cache)
+            and self.use_cache, registry=self.registry)
+        if self.registry is not None:
+            self.registry.observe_plan(plan)
 
         bricks = tuple(sorted(self.store.bricks))
         epoch = self.catalog.dataset_epoch
@@ -364,9 +407,14 @@ class QueryService:
                 events_total=sum(self.store.specs[b].n_events
                                  for b in bricks),
                 bricks_total=len(bricks))
+        # stream-aware packet sizing: a window someone is streaming gets
+        # the small-early/growing-later ramp (fast first partial) while
+        # keeping PROOF-adaptive sizing for the bulk of the scan
         merged, stats = self.jse.run_job_batch_simulated(
             job_ids, failure_script=failure_script, plan=plan,
             on_partial=publisher.on_partial if publisher is not None
+            else None,
+            packet_ramp=self.stream_ramp if publisher is not None
             else None)
         self.stats.jobs_run += len(job_ids)
         self.stats.events_scanned += stats.events_scanned
@@ -374,6 +422,17 @@ class QueryService:
         self.stats.fragment_evals_unshared += stats.fragment_evals_unshared
         if self.window_controller is not None:
             self.window_controller.observe_scan(stats.makespan_s)
+        if self.refit_cost_every:
+            # accumulate per-packet compute and periodically refit the
+            # admission cost model (static weights stay the cold prior).
+            # Keep a bounded sliding window: the fit only needs recent
+            # telemetry, and a long-lived service must not grow (or
+            # re-fit) an unbounded history.
+            self._telemetry.extend(stats.packet_telemetry)
+            del self._telemetry[:-self.TELEMETRY_WINDOW]
+            if self.stats.batches % self.refit_cost_every == 0:
+                self.cost_weights = planner_lib.fit_cost_weights(
+                    self._telemetry, prior=self.cost_weights)
 
         calib = window[0].calib_iters
         served = []
@@ -429,6 +488,19 @@ class QueryService:
         """Look up the :class:`~repro.service.streaming.ResultStream` of a
         ticket submitted with ``stream=True`` (KeyError otherwise)."""
         return self.streams[ticket_id]
+
+    def close(self) -> None:
+        """Shut the service down: detach the result cache's invalidation
+        hook from the catalogue (a long-lived catalogue must not keep
+        every cache ever attached alive through its hook list) and abort
+        any still-open streams so no tenant waits on a final that will
+        never come.  Idempotent; the service must not be used after."""
+        if self._closed:
+            return
+        self._closed = True
+        self.cache.detach()
+        for rs in self.streams.values():
+            rs.abort("service closed")
 
     def release_stream(self, ticket_id: int) -> None:
         """Drop a finished consumer's stream (and its buffered snapshots)

@@ -189,14 +189,17 @@ class QueryScheduler:
 
 
 def make_submission(ticket: int, tenant: str, expr: str, calib_iters: int,
-                    schema, *, n_events: int = 0,
-                    stream: bool = False) -> Submission:
+                    schema, *, n_events: int = 0, stream: bool = False,
+                    weights=None) -> Submission:
     """Validate at the door, canonicalize for dedup/caching, and estimate
     cost for budgeted admission.
 
     ``n_events`` is the store size the query would sweep (0 disables
     costing — the submission carries cost 0.0 and only count caps apply);
-    ``stream`` requests progressive partial-merge delivery.  Raises
+    ``stream`` requests progressive partial-merge delivery; ``weights``
+    (a :class:`~repro.service.planner.CostWeights`) selects the cost
+    model's coefficients — the service passes its telemetry-fitted
+    weights, None means the static cold-start prior.  Raises
     :class:`AdmissionError` on an invalid expression: a bad query must be
     rejected at submit, not on a grid node."""
     try:
@@ -205,7 +208,8 @@ def make_submission(ticket: int, tenant: str, expr: str, calib_iters: int,
     except query_lib.QueryError as e:
         raise AdmissionError(f"bad expression: {e}") from e
     cost = (planner_lib.estimate_cost(ast, n_events=n_events,
-                                      calib_iters=calib_iters)
+                                      calib_iters=calib_iters,
+                                      weights=weights)
             if n_events > 0 else 0.0)
     return Submission(ticket, tenant, expr, canonical, calib_iters, cost,
                       stream=stream)

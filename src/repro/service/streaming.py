@@ -93,6 +93,7 @@ class ResultStream:
         self._buf: Deque[StreamSnapshot] = deque()
         self._latest: Optional[StreamSnapshot] = None
         self._listeners: List[Callable[[StreamSnapshot], None]] = []
+        self._close_listeners: List[Callable[["ResultStream"], None]] = []
 
     # ---------------------------- producer ---------------------------- #
     def publish(self, snap: StreamSnapshot) -> None:
@@ -116,6 +117,8 @@ class ResultStream:
             return
         self.publish(snap)
         self.state = DONE
+        for fn in self._close_listeners:
+            fn(self)
 
     def abort(self, note: str) -> None:
         """Close the stream without a final snapshot (the reason lands in
@@ -123,6 +126,8 @@ class ResultStream:
         if self.state == OPEN:
             self.state = ABORTED
             self.note = note
+            for fn in self._close_listeners:
+                fn(self)
 
     # ---------------------------- consumer ---------------------------- #
     @property
@@ -149,6 +154,22 @@ class ResultStream:
         """Register a push callback invoked on every future publish (runs
         synchronously inside the scan loop — keep it cheap)."""
         self._listeners.append(fn)
+
+    def on_close(self, fn: Callable[["ResultStream"], None]) -> None:
+        """Register a callback invoked once when the stream closes (both
+        DONE and ABORTED) — the fabric's fan-out layer forwards closure
+        to remote readers through this hook.  If the stream is already
+        closed the callback fires immediately."""
+        if self.closed:
+            fn(self)
+            return
+        self._close_listeners.append(fn)
+
+    def buffered(self) -> List[StreamSnapshot]:
+        """The currently buffered snapshots, oldest first, WITHOUT
+        consuming them — what a late reader attaching now would drain
+        (the fan-out layer replays this prefix to remote subscribers)."""
+        return list(self._buf)
 
     def __len__(self) -> int:
         """Snapshots currently buffered (≤ ``capacity``)."""

@@ -1,0 +1,506 @@
+"""Coherence fabric acceptance tests: deterministic bus, epoch gossip
+bound (incl. partition heal), shared-L2 zero-I/O hits (whole-query and
+fragment), cross-frontend stream fan-out bit-identity + never-final-
+partial, registry-seeded planning equivalence + pre-warming, cost-model
+calibration, stream-aware packet ramp, and hook-lifecycle hygiene."""
+import numpy as np
+import pytest
+
+from repro.configs.geps_events import reduced
+from repro.core import events as ev
+from repro.core import merge as merge_lib
+from repro.core.brick import create_store, gather_store
+from repro.core.catalog import MetadataCatalog
+from repro.core.jse import JobSubmissionEngine, PacketTelemetry
+from repro.fabric import (Fleet, FragmentRegistry, MessageBus,
+                          SharedCacheTier, TieredResultCache, rounds_bound)
+from repro.service import QueryService, fit_cost_weights, plan_window
+
+CFG = reduced()
+SCHEMA = ev.EventSchema.from_config(CFG)
+
+
+def make_store(n_events=192, n_nodes=4, replication=2, seed=7):
+    return create_store(SCHEMA, n_events=n_events, n_nodes=n_nodes,
+                        events_per_brick=CFG.events_per_brick,
+                        replication=replication, seed=seed)
+
+
+def make_fleet(store, n=4, **kw):
+    kw.setdefault("registry", FragmentRegistry())
+    return Fleet(store, n, **kw)
+
+
+def snapshots_identical(a, b):
+    return (a.seq == b.seq and a.final == b.final
+            and a.t_virtual == b.t_virtual and a.coverage == b.coverage
+            and merge_lib.results_identical(a.result, b.result))
+
+
+# --------------------------- message bus ------------------------------- #
+def test_bus_round_delivery_order_and_delay():
+    bus = MessageBus(delay=1)
+    bus.register("a"), bus.register("b")
+    bus.send("a", "b", "t", 1)
+    bus.send("a", "b", "t", 2)
+    bus.tick()  # delay=1: not yet deliverable
+    assert bus.recv("b") == []
+    bus.tick()
+    got = [e.payload for e in bus.recv("b")]
+    assert got == [1, 2]  # global send order preserved
+    assert bus.idle
+
+
+def test_bus_partition_blocks_and_heals():
+    bus = MessageBus()
+    for n in ("a", "b"):
+        bus.register(n)
+    bus.partition(["a"], ["b"])
+    assert not bus.send("a", "b", "t", "lost")
+    assert bus.stats.partitioned == 1
+    bus.heal()
+    assert bus.send("a", "b", "t", "ok")
+    bus.tick()
+    assert [e.payload for e in bus.recv("b")] == ["ok"]
+
+
+def test_bus_deterministic_drops():
+    def run():
+        bus = MessageBus(drop_rate=0.5, seed=42)
+        bus.register("a"), bus.register("b")
+        outcomes = [bus.send("a", "b", "t", i) for i in range(20)]
+        return outcomes
+    first, second = run(), run()
+    assert first == second            # seeded loss replays identically
+    assert not all(first) and any(first)
+
+
+# --------------------------- epoch gossip (acceptance a) ---------------- #
+def test_epoch_bump_invalidates_all_peers_within_bound():
+    store = make_store()
+    fleet = make_fleet(store, 4, gossip_fanout=1)
+    assert fleet.rounds_bound == rounds_bound(4, 1) == 3
+    # one scan on fe0 seeds L2; every other front-end then holds an L1
+    # entry promoted from the shared tier
+    for i in range(4):
+        fleet.submit("e_total > 40", tenant=f"t{i}", frontend=i)
+        fleet.step(i)
+    assert all(len(fe.service.cache) == 1 for fe in fleet.frontends)
+
+    fleet.bump_dataset_version(2)  # observed by ONE member only
+    assert len(fleet.frontends[2].service.cache) == 0  # local: immediate
+    fleet.pump(fleet.rounds_bound)
+    # within the documented bound every peer converged and purged
+    assert [fe.catalog.dataset_epoch for fe in fleet.frontends] == [1] * 4
+    assert all(len(fe.service.cache) == 0 for fe in fleet.frontends)
+    assert len(fleet.l2) == 0
+    # a stale entry can never be served now: resubmit rescans
+    t = fleet.submit("e_total > 40", tenant="x", frontend=1)
+    fleet.drain()
+    assert not fleet.result(t).from_cache
+
+
+def test_partition_heal_reconciles_divergent_bumps():
+    store = make_store()
+    fleet = make_fleet(store, 4)
+    for i in range(4):
+        fleet.submit("e_total > 40", tenant=f"t{i}", frontend=i)
+        fleet.step(i)
+    fleet.bus.partition(["fe0", "fe1"], ["fe2", "fe3"])
+    # divergent bumps on both sides of the split
+    fleet.bump_dataset_version(0)
+    fleet.bump_dataset_version(2)
+    fleet.pump(fleet.rounds_bound)
+    # each side converged to ITS epoch view (sum of known bumps = 1)
+    assert [fe.catalog.dataset_epoch for fe in fleet.frontends] == [1] * 4
+    # caches were purged everywhere; entries cached during the split are
+    # keyed to partition-era epochs
+    a = fleet.submit("e_total > 40", tenant="a", frontend=0)
+    b = fleet.submit("e_total > 40", tenant="b", frontend=2)
+    fleet.drain()
+    assert not fleet.result(a).from_cache and not fleet.result(b).from_cache
+
+    fleet.bus.heal()
+    fleet.pump(fleet.rounds_bound)
+    # version vectors merged: effective epoch = both bumps = 2 everywhere,
+    # so EVERYTHING cached during the partition is stale on every member
+    assert [fe.catalog.dataset_epoch for fe in fleet.frontends] == [2] * 4
+    assert all(len(fe.service.cache) == 0 for fe in fleet.frontends)
+    assert len(fleet.l2) == 0
+
+
+# --------------------------- shared L2 (acceptance b) ------------------- #
+def test_whole_query_answered_on_a_is_l2_hit_on_b():
+    store = make_store()
+    fleet = make_fleet(store, 2)
+    a = fleet.submit("e_total > 40", tenant="a", frontend=0)
+    fleet.drain()
+    assert fleet.result(a).status == "SERVED"
+    svc_b = fleet.frontends[1].service
+    assert svc_b.stats.events_scanned == 0
+    b = fleet.submit(" e_total>40.0 ", tenant="b", frontend=1)  # near-dup
+    tk = fleet.result(b)
+    assert tk.status == "SERVED" and tk.from_cache
+    # zero brick I/O on B, asserted via the JobStats aggregation
+    assert svc_b.stats.events_scanned == 0
+    assert svc_b.cache.stats.l2_hits == 1
+    assert merge_lib.results_identical(tk.result, fleet.result(a).result)
+
+
+def test_fragment_byproduct_on_a_is_l2_hit_on_b():
+    store = make_store()
+    fleet = make_fleet(store, 2)
+    # two queries sharing a conjunct -> the planner materializes it as a
+    # scan by-product on fe0
+    fleet.submit("e_total > 30 && count(pt > 15) >= 2", tenant="a",
+                 frontend=0)
+    fleet.submit("e_t_miss > 20 && count(pt > 15) >= 2", tenant="b",
+                 frontend=0)
+    fleet.drain()
+    assert fleet.l2.stats.fragment_puts >= 1
+    svc_b = fleet.frontends[1].service
+    f = fleet.submit("count(pt > 15) >= 2", tenant="c", frontend=1)
+    tk = fleet.result(f)
+    assert tk.status == "SERVED" and tk.from_cache
+    assert svc_b.stats.events_scanned == 0  # zero brick I/O via JobStats
+    # the fragment answer equals an actual scan of that expression
+    batch = gather_store(store)
+    t = np.arange(batch["tracks"].shape[1])
+    valid = t[None, :] < batch["n_tracks"][:, None]
+    cnt = ((batch["tracks"][..., 0] > 15) & valid).sum(axis=1)
+    assert tk.result.n_selected == int((cnt >= 2).sum())
+
+
+def test_concurrent_independent_bumps_never_alias_in_l2():
+    # fe0 bumps and scans; fe1 independently bumps for a DIFFERENT data
+    # change before gossip converges.  Both sides sit at effective epoch
+    # 1, but the epochs denote different dataset states — fe1 must NOT
+    # get fe0's pre-(fe1-bump) result from the shared tier.
+    store = make_store()
+    fleet = make_fleet(store, 2)
+    fleet.bump_dataset_version(0)
+    a = fleet.submit("e_total > 40", tenant="a", frontend=0)
+    fleet.step(0, pump_rounds=0)  # no gossip: fe1 has not heard fe0's bump
+    assert fleet.result(a).status == "SERVED"
+    fleet.frontends[1].catalog.bump_dataset_version()  # fe1's own change
+    assert fleet.frontends[1].catalog.dataset_epoch == 1  # same scalar!
+    b = fleet.submit("e_total > 40", tenant="b", frontend=1)
+    tk = fleet.result(b)
+    assert not tk.from_cache  # vector keyspace keeps the states apart
+    assert fleet.l2.stats.stale_refused >= 1
+    # once gossip reconciles (vector {fe0:1, fe1:1}, epoch 2), the tier
+    # serves normally again
+    fleet.pump(fleet.rounds_bound)
+    fleet.drain()
+    c = fleet.submit("e_total > 40", tenant="c", frontend=0)
+    fleet.drain()
+    assert fleet.result(c).status == "SERVED"
+    d = fleet.submit("e_total > 40", tenant="d", frontend=1)
+    assert fleet.result(d).from_cache
+
+
+def test_l2_refuses_stale_epochs():
+    l2 = SharedCacheTier()
+    r = merge_lib.QueryResult(n_selected=1)
+    l2.put("(a > 1.0)", 0, 0, r)
+    assert l2.get("(a > 1.0)", 0, 0) is not None
+    l2.observe_epoch(1)  # any member mentions a newer epoch
+    assert len(l2) == 0
+    l2.put("(a > 1.0)", 0, 0, r)  # late writer from a stale front-end
+    assert len(l2) == 0 and l2.stats.stale_refused >= 1
+    assert l2.get("(a > 1.0)", 0, 0) is None
+
+
+# ----------------------- stream fan-out (acceptance c) ------------------ #
+def test_cross_frontend_stream_bit_identical_to_local():
+    store = make_store(n_events=256)
+    fleet = Fleet(store, 2, service_kwargs={"use_cache": False,
+                                            "stream_capacity": 512})
+    g = fleet.submit("e_total > 40", tenant="a", frontend=0, stream=True)
+    local, remote = [], []
+    fleet.stream(g).subscribe(local.append)
+    proxy = fleet.stream(g, frontend=1)
+    proxy.subscribe(remote.append)
+    fleet.pump()       # deliver the subscription to the owner
+    fleet.step(0)      # scan runs on fe0; snapshots forward over the bus
+    fleet.drain()
+    assert proxy.done and len(remote) == len(local) > 1
+    for a, b in zip(local, remote):
+        assert snapshots_identical(a, b)
+    # a partial is never surfaced as final
+    assert [s.final for s in remote].count(True) == 1
+    assert remote[-1].final
+    assert merge_lib.results_identical(remote[-1].result,
+                                       fleet.result(g).result)
+
+
+def test_cross_frontend_stream_late_attach_sees_buffered_prefix():
+    store = make_store(n_events=256)
+    fleet = Fleet(store, 2, service_kwargs={"use_cache": False,
+                                            "stream_capacity": 512})
+    g = fleet.submit("e_total > 40", tenant="a", frontend=0, stream=True)
+    fleet.step(0)  # scan completes BEFORE anyone attaches remotely
+    local_buffered = fleet.stream(g).buffered()
+    proxy = fleet.stream(g, frontend=1)
+    fleet.drain()
+    # remote late reader drains exactly what a local late reader would
+    got = list(proxy)
+    assert len(got) == len(local_buffered)
+    for a, b in zip(local_buffered, got):
+        assert snapshots_identical(a, b)
+    assert proxy.done
+
+
+def test_cross_frontend_stream_abort_never_final():
+    store = make_store(n_events=256)
+    fleet = Fleet(store, 2, service_kwargs={"use_cache": False})
+    g = fleet.submit("e_total > 40", tenant="a", frontend=0, stream=True)
+    proxy = fleet.stream(g, frontend=1)
+    fleet.pump()
+    fleet.step(0, failure_script={0.01: 0, 0.02: 1, 0.03: 2, 0.04: 3})
+    fleet.drain()
+    assert proxy.state == "ABORTED" and not proxy.done
+    assert "aborted" in proxy.note
+    assert all(not s.final for s in proxy.buffered())
+
+
+# ----------------------- registry (acceptance d) ------------------------ #
+def test_registry_seeded_plans_bit_identical_to_unseeded():
+    store = make_store(n_events=256)
+    reg = FragmentRegistry(hot_min_windows=1)
+    warm = ["e_total > 30 && count(pt > 15) >= 2",
+            "sum(pt) < 300 && count(pt > 15) >= 2"]
+    reg.observe_plan(plan_window(warm))
+    assert reg.hot()  # the shared conjunct is hot now
+    exprs = ["e_total > 35 && count(pt > 15) >= 2",
+             "e_t_miss > 20", "pt_lead > 60 || n_tracks >= 8"]
+
+    def run(plan):
+        cat = MetadataCatalog(store.n_nodes)
+        jse = JobSubmissionEngine(cat, store)
+        jids = [jse.submit(e) for e in exprs]
+        return jse.run_job_batch_simulated(jids, plan=plan)
+
+    base, _ = run(plan_window(exprs))
+    seeded_plan = plan_window(exprs, registry=reg)
+    # the hot fragment is materialized despite a single reference
+    assert any("count" in k for k in seeded_plan.materialize_keys())
+    seeded, st = run(seeded_plan)
+    for got, want in zip(seeded, base):
+        assert merge_lib.results_identical(got, want)
+    # and the pre-warmed fragment's merged mask is a scan by-product
+    assert any("count" in k for k in st.fragment_results)
+
+
+def test_registry_prewarms_fragment_cache_across_windows():
+    store = make_store()
+    reg = FragmentRegistry(hot_min_windows=2)
+    svc = QueryService(store, registry=reg)
+    # the conjunct appears ONCE per window -> the >=2-refs per-window rule
+    # alone would never materialize it
+    for w in range(3):
+        svc.submit(f"e_total > {30 + w} && count(pt > 15) >= 2", tenant="a")
+        svc.step()
+    assert svc.cache.stats.fragment_puts >= 1
+    scanned = svc.stats.events_scanned
+    t = svc.submit("count(pt > 15) >= 2", tenant="b")
+    assert svc.result(t).from_cache
+    assert svc.stats.events_scanned == scanned  # zero-I/O pre-warmed hit
+    svc.close()
+
+
+def test_registry_persistence_roundtrip(tmp_path):
+    reg = FragmentRegistry(hot_min_windows=1, max_hot=4)
+    reg.observe_plan(plan_window(["e_total > 30 && count(pt > 15) >= 2",
+                                  "e_t_miss > 20 && count(pt > 15) >= 2"]))
+    path = tmp_path / "registry.json"
+    reg.save(path)
+    loaded = FragmentRegistry.load(path)
+    assert loaded.hot() == reg.hot()
+    assert loaded.windows_observed == reg.windows_observed
+    assert {r.key for r in loaded.records.values()} == set(reg.records)
+
+
+# ----------------------- cost-model calibration ------------------------- #
+def test_fit_cost_weights_recovers_synthetic_model():
+    rng = np.random.default_rng(0)
+    k, a_true, c_true = 2e-6, 3.0, 0.8
+    tel = []
+    for _ in range(300):
+        size = int(rng.integers(16, 256))
+        calib = int(rng.integers(0, 5))
+        aggs = int(rng.integers(0, 4))
+        wall = (k * size * (1 + c_true * calib) * (1 + a_true * aggs)
+                * (1 + rng.normal(0, 0.02)))
+        tel.append(PacketTelemetry(size, calib, aggs, wall))
+    w = fit_cost_weights(tel)
+    assert w.fitted
+    assert abs(w.agg_weight - a_true) < 0.5
+    assert abs(w.calib_weight - c_true) < 0.2
+
+
+def test_fit_cost_weights_degenerate_falls_back_to_prior():
+    # no variation in calib or aggs: nothing to identify the weights from
+    tel = [PacketTelemetry(64, 2, 1, 1e-4) for _ in range(10)]
+    w = fit_cost_weights(tel)
+    from repro.service.planner import AGG_WEIGHT, CALIB_WEIGHT
+    assert w.agg_weight == AGG_WEIGHT and w.calib_weight == CALIB_WEIGHT
+    assert fit_cost_weights([]).fitted is False
+
+
+def test_service_refits_weights_every_k_windows():
+    store = make_store()
+    svc = QueryService(store, refit_cost_every=2)
+    assert svc.cost_weights is None  # cold-start prior in effect
+    for i in range(4):
+        svc.submit(f"e_total > {30 + i} && count(pt > 10) >= 1",
+                   calib_iters=1)
+        svc.step()
+    assert svc.cost_weights is not None
+    assert svc.cost_weights.scale > 0
+    svc.close()
+
+
+# ----------------------- stream-aware packet ramp ----------------------- #
+def test_packet_ramp_small_early_packets_same_answer():
+    store = make_store(n_events=512)
+    cat = MetadataCatalog(store.n_nodes)
+    jse = JobSubmissionEngine(cat, store, packet_ramp=8)
+    merged, st = jse.run_job_simulated(jse.submit("e_total > 40"))
+    sizes = [t.size for t in st.packet_telemetry]
+    assert sizes[0] <= 8          # first packet capped by the ramp
+    assert max(sizes) > 8         # later packets grow past the cap
+    cat2 = MetadataCatalog(store.n_nodes)
+    jse2 = JobSubmissionEngine(cat2, store)
+    merged2, _ = jse2.run_job_simulated(jse2.submit("e_total > 40"))
+    # different packet partition, same physics
+    assert merged.n_selected == merged2.n_selected
+    assert merged.n_processed == merged2.n_processed
+    np.testing.assert_array_equal(merged.hist, merged2.hist)
+
+
+def test_service_stream_ramp_first_partial_earlier():
+    def first_partial(**kw):
+        store = make_store(n_events=1024, seed=13)
+        svc = QueryService(store, use_cache=False, **kw)
+        seen = []
+        t = svc.submit("e_total > 40", stream=True)
+        svc.stream(t).subscribe(lambda s: seen.append(s))
+        svc.step()
+        final = svc.stream(t).latest()
+        assert final is not None and final.final
+        assert merge_lib.results_identical(final.result,
+                                           svc.result(t).result)
+        return seen[0].t_virtual, final.t_virtual
+
+    t_ramp, final_ramp = first_partial(stream_ramp=8)
+    t_plain, final_plain = first_partial()
+    assert t_ramp < t_plain       # ramp lands the first exact prefix earlier
+    # and the makespan cost of streaming-friendly sizing stays small
+    assert final_ramp <= final_plain * 1.5
+
+
+# ----------------------- lifecycle hygiene (satellite) ------------------ #
+def test_service_close_prevents_hook_accumulation():
+    store = make_store()
+    catalog = MetadataCatalog(store.n_nodes)
+    for _ in range(10):
+        svc = QueryService(store, catalog,
+                           cache=TieredResultCache(catalog=catalog,
+                                                   l2=SharedCacheTier()))
+        t = svc.submit("e_total > 40")
+        svc.drain()
+        assert svc.result(t).status == "SERVED"
+        svc.close()
+    # a long-lived catalogue holds no dead hooks after services shut down
+    assert catalog._epoch_hooks == []
+    svc.close()  # idempotent
+
+
+def test_fleet_close_detaches_everything_and_aborts_streams():
+    store = make_store()
+    fleet = make_fleet(store, 3)
+    g = fleet.submit("e_total > 40", frontend=0, stream=True)
+    rs = fleet.stream(g)
+    fleet.close()
+    for fe in fleet.frontends:
+        assert fe.catalog._epoch_hooks == []
+    assert rs.state == "ABORTED" and "closed" in rs.note
+
+
+# ----------------------- review regressions ---------------------------- #
+def test_packet_ramp_cap_never_overflows():
+    from repro.core.packets import AdaptivePacketScheduler
+    cat = MetadataCatalog(2)
+    sched = AdaptivePacketScheduler(cat, ramp_start=16, ramp_factor=2.0)
+    sched.done = [None] * 5000  # far past any float-exponent range
+    sched.add_work(0, 10_000)
+    assert sched.packet_size_for(0) >= sched.min  # no OverflowError
+
+
+def test_conflicting_liveness_observations_converge():
+    store = make_store()
+    fleet = make_fleet(store, 3)
+    # fe0 and fe1 observe CONFLICTING equal-version facts concurrently
+    fleet.frontends[0].gossip.observe_liveness(1, False)
+    fleet.frontends[1].gossip.observe_liveness(1, True)
+    fleet.pump(2 * fleet.rounds_bound)
+    views = [1 in fe.catalog.dead_nodes() for fe in fleet.frontends]
+    assert len(set(views)) == 1  # deterministic fleet-wide agreement
+
+
+def test_proxy_release_and_reattach_gets_full_replay():
+    store = make_store(n_events=256)
+    fleet = Fleet(store, 2, service_kwargs={"use_cache": False,
+                                            "stream_capacity": 512})
+    g = fleet.submit("e_total > 40", tenant="a", frontend=0, stream=True)
+    proxy = fleet.stream(g, frontend=1)
+    fleet.pump()
+    fleet.step(0)
+    fleet.drain()
+    assert proxy.done
+    reader = fleet.frontends[1].fanout
+    reader.release(g)
+    again = fleet.stream(g, frontend=1)
+    assert again is not proxy
+    fleet.drain()
+    # the re-attached proxy still receives the buffered prefix + final
+    assert again.done and again.published > 0
+
+
+def test_drain_terminates_on_delayed_bus():
+    store = make_store()
+    fleet = Fleet(store, 3, bus=MessageBus(delay=2))
+    fleet.submit("e_total > 40", tenant="a", frontend=0, stream=True)
+    fleet.drain()
+    # gossip emits every pump, so a delayed bus is never "idle" — drain
+    # must still terminate promptly instead of burning its guard rounds
+    assert fleet.bus.round < 100
+    fleet.close()
+
+
+# ----------------------- gossip-driven failover (satellite) ------------- #
+def test_gossip_failover_propagates_to_peer_scheduling():
+    store = make_store(n_events=256)
+    fleet = make_fleet(store, 3)
+    # fe0 observes the death; peers have not heard yet
+    plan = fleet.node_leave(1, observed_by=0)
+    assert not plan.lost_bricks  # replication covered every brick
+    assert 1 in fleet.frontends[0].catalog.dead_nodes()
+    assert 1 not in fleet.frontends[2].catalog.dead_nodes()
+    fleet.pump(fleet.rounds_bound)
+    # liveness gossip reached every peer's catalogue
+    for fe in fleet.frontends:
+        assert 1 in fe.catalog.dead_nodes()
+    # a peer's scan now avoids the dead node entirely and still succeeds
+    t = fleet.submit("e_total > 40", tenant="a", frontend=2)
+    fleet.drain()
+    tk = fleet.result(t)
+    assert tk.status == "SERVED"
+    svc2 = fleet.frontends[2].service
+    assert svc2.stats.events_scanned > 0
+    # rejoin propagates the same way
+    fleet.node_join(1, observed_by=2)
+    fleet.pump(fleet.rounds_bound)
+    for fe in fleet.frontends:
+        assert 1 not in fe.catalog.dead_nodes()

@@ -1,11 +1,14 @@
 """Satellite coverage: merge algebra (associativity/commutativity incl.
-selected_ids bounding) and multi-node re-replication."""
+selected_ids bounding), multi-node re-replication, and elastic
+join/leave edge cases."""
 import numpy as np
 
 from repro.configs.geps_events import reduced
 from repro.core import events as ev
 from repro.core import merge as merge_lib
 from repro.core.brick import create_store
+from repro.core.catalog import MetadataCatalog
+from repro.core.elastic import ElasticManager
 from repro.core.replication import rereplication_plan
 
 SCHEMA = ev.EventSchema.from_config(reduced())
@@ -101,6 +104,54 @@ def test_rereplication_restores_factor_after_multi_node_failure():
     for bid, spec in store.specs.items():
         alive_owners = {n for n in store.owners(bid) if n not in dead}
         assert len(alive_owners) >= min(repl, n_nodes - len(dead))
+
+
+def test_rereplication_plan_all_replica_owners_dead():
+    # every owner (primary + replicas) of some bricks is dead: those
+    # bricks are unrecoverable and must NOT appear in the copy plan —
+    # there is no surviving source to copy from
+    n_nodes = 4
+    store = create_store(SCHEMA, n_events=128, n_nodes=n_nodes,
+                         events_per_brick=16, replication=2, seed=12)
+    doomed = next(bid for bid, spec in sorted(store.specs.items()))
+    owners = set(store.owners(doomed))
+    plan = rereplication_plan(store.specs, owners, n_nodes)
+    assert all(bid != doomed for bid, _, _ in plan)
+    for bid, src, dst in plan:
+        assert src not in owners and dst not in owners
+    # degenerate extreme: the whole grid dead -> empty plan, no crash
+    assert rereplication_plan(store.specs, set(range(n_nodes)),
+                              n_nodes) == []
+
+
+def test_elastic_node_join_rebalances_toward_target():
+    n_nodes = 4
+    store = create_store(SCHEMA, n_events=256, n_nodes=n_nodes,
+                         events_per_brick=16, replication=2, seed=13)
+    cat = MetadataCatalog(n_nodes)
+    mgr = ElasticManager(cat, store)
+    # node 3 leaves: its bricks fail over to replicas
+    leave = mgr.node_leave(3)
+    assert leave.reassign_primary and not leave.lost_bricks
+    assert all(spec.node != 3 for spec in store.specs.values())
+    mgr.apply_copies(leave)
+    # node 3 rejoins: the most-loaded donors shed bricks to it until it
+    # holds ~total/alive
+    join = mgr.node_join(3)
+    assert 3 in cat.alive_nodes()
+    assert join.reassign_primary  # bricks actually moved to the joiner
+    target = len(store.specs) // len(cat.alive_nodes())
+    have = sum(1 for spec in store.specs.values() if spec.node == 3)
+    assert have >= min(1, target)
+    for bid, donor, dst in join.reassign_primary:
+        assert dst == 3 and donor != 3
+        assert store.specs[bid].node == 3
+    # no node ends up below a fair floor because of the rebalance
+    loads = {}
+    for spec in store.specs.values():
+        loads[spec.node] = loads.get(spec.node, 0) + 1
+    assert max(loads.values()) - min(loads.get(n, 0)
+                                     for n in cat.alive_nodes()) <= target + 1
 
 
 def test_rereplication_plan_spreads_copy_load():
