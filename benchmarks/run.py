@@ -12,6 +12,9 @@ table.  Prints ``name,value,derived`` CSV blocks.
                  BENCH_streaming.json snapshot)
   fabric       - fleet shared-L2 hit rate, cross-frontend first-result
                  latency, registry pre-warming (BENCH_fabric.json)
+  backend      - unified execution backends: SPMD chunked streaming scan
+                 vs simulated grid (bit-identical results, wall-clock
+                 time-to-first-partial; BENCH_backend.json)
   query_spmd   - SPMD grid-brick query step micro-benchmark (real compute)
   roofline     - per-(arch x shape) terms from the dry-run artifacts
                  (skipped unless artifacts exist; see launch/dryrun.py)
@@ -71,6 +74,10 @@ def main(argv=None) -> None:
     _section("coherence fabric (fleet cache tier + registry)")
     from benchmarks import bench_fabric
     bench_fabric.main()
+
+    _section("execution backends (SPMD chunked streaming vs simulated)")
+    from benchmarks import bench_backend
+    bench_backend.main()
 
     _section("spmd query step (grid-brick job, wall time on this host)")
     import jax

@@ -11,6 +11,11 @@
   method in ``src/repro/core``, ``src/repro/service`` and
   ``src/repro/fabric`` must carry a docstring (the packages tenants
   program against stay documented).
+- Backend-contract coverage: every public top-level symbol of
+  ``src/repro/core/backend.py`` (the execution-backend contract the
+  whole service tier programs against) must be mentioned by name in
+  ``docs/backends.md`` — adding a backend API without documenting the
+  contract fails CI.
 
 Exits non-zero with a per-finding report on any violation.
 """
@@ -115,6 +120,35 @@ def check_api_docs():
     return errors
 
 
+def check_backend_contract_doc():
+    """Every public top-level name in core/backend.py (classes,
+    functions, and UPPERCASE constants) must appear in docs/backends.md
+    (see module docstring)."""
+    src = ROOT / "src/repro/core/backend.py"
+    doc = ROOT / "docs/backends.md"
+    if not doc.exists():
+        return [f"{src.relative_to(ROOT)}: contract doc "
+                f"docs/backends.md is missing"]
+    text = doc.read_text()
+    errors = []
+    for node in ast.parse(src.read_text()).body:
+        names = []
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            names = [node.name]
+        elif isinstance(node, ast.Assign):
+            names = [t.id for t in node.targets
+                     if isinstance(t, ast.Name) and t.id.isupper()]
+        for name in names:
+            if name.startswith("_"):
+                continue
+            if not re.search(rf"\b{re.escape(name)}\b", text):
+                errors.append(
+                    f"docs/backends.md: public backend symbol "
+                    f"{name!r} is undocumented in the contract doc")
+    return errors
+
+
 def check_no_tracked_pyc():
     out = subprocess.run(["git", "ls-files"], cwd=ROOT, check=True,
                          capture_output=True, text=True).stdout
@@ -129,6 +163,7 @@ def main() -> int:
         errors += check_file(path)
     errors += check_no_tracked_pyc()
     errors += check_api_docs()
+    errors += check_backend_contract_doc()
     if errors:
         print(f"check_docs: {len(errors)} problem(s)")
         for e in errors:

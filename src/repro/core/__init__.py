@@ -6,9 +6,15 @@
   (PgSQL role), GRIS/LDAP node info, replica placement
 - jse / merge / packets: job submission engine, hierarchical result merge,
   PROOF-style adaptive packets (straggler mitigation)
+- backend: the ExecutionBackend contract — SimulatedBackend (virtual-time
+  grid) and SpmdBackend (chunked streaming scan over brick shards) behind
+  one ``run_batch`` surface
 - elastic: node join/leave, re-mesh, migration plans
 - brick_attention: the grid-brick principle applied to decode KV caches
 """
+from repro.core.backend import (ExecutionBackend,  # noqa: F401
+                                SimulatedBackend, SpmdBackend,
+                                make_backend)
 from repro.core.brick import BrickSpec, BrickStore, create_store  # noqa: F401
 from repro.core.catalog import MetadataCatalog  # noqa: F401
 from repro.core.jse import (JobSubmissionEngine, TimeModel,  # noqa: F401

@@ -1,0 +1,348 @@
+"""Execution backends: ONE contract for "execute a dispatch window".
+
+The paper's JSE is a single contract — distribute a query over
+brick-resident data, merge partials at the submit server — but the repo
+grew two divergent realizations of it: the virtual-time simulation
+(fragment plans, streaming ``on_partial``, failure scripts, per-packet
+telemetry) and the SPMD lockstep step (none of these, merge only at step
+end).  This module collapses the divergence behind one interface so every
+service/fabric feature (streaming, cache write-through, cost-model
+calibration, window planning) works identically on both paths:
+
+- :class:`ExecutionBackend` — the protocol:
+  ``run_batch(job_ids, *, plan, on_partial, failure_script, packet_ramp)
+  -> (results, JobStats)``.  Exactly the surface
+  ``JobSubmissionEngine.run_job_batch_simulated`` already exposes, now
+  named and substitutable.
+- :class:`SimulatedBackend` — thin wrapper over the event-driven
+  virtual-time grid simulation (``core/jse.py``).  Time is virtual, the
+  per-packet compute is real.
+- :class:`SpmdBackend` — the mesh-shard realization as a **chunked
+  streaming scan**: each brick (= shard that never moves) is swept in
+  chunks, every chunk evaluated through the same
+  :func:`~repro.core.jse.eval_plan_slice` primitive as the simulation,
+  and a :class:`~repro.core.jse.PacketPartial` emitted per chunk in
+  deterministic merge order (brick id ascending, offset ascending) — so
+  prefix snapshots fed to a :class:`~repro.core.merge.MergeAccumulator`
+  are bit-identical to ``tree_merge`` of the same prefix, and a window
+  executed with the same chunk boundaries on either backend produces
+  bit-identical partial streams and final results.  Time here is
+  WALL-CLOCK (``t_virtual`` carries elapsed seconds; ``JobStats``
+  telemetry feeds ``planner.fit_cost_weights`` exactly as on the
+  simulated path).  With ``use_pallas=True`` the fused ``event_filter``
+  kernel evaluates the plan's boolean targets — including materialized
+  shared fragments — in its epilogue (``interpret=True``), falling back
+  to the jnp fragment-plan walk whenever any target is outside the
+  kernel's conjunctive family.
+- :func:`make_backend` — string-keyed factory (``"sim"`` / ``"spmd"``)
+  the service layer and ``launch/serve.py --backend`` use.
+
+See ``docs/backends.md`` for the full contract (merge-order determinism,
+clock semantics, failure semantics, Pallas fragment fusion).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional, Protocol, Tuple, \
+    runtime_checkable
+
+import numpy as np
+
+from repro.core import merge as merge_lib
+from repro.core import query as query_lib
+from repro.core.brick import BrickStore
+from repro.core.catalog import DONE, MetadataCatalog
+from repro.core.jse import (JobStats, JobSubmissionEngine, PacketPartial,
+                            PacketTelemetry, TimeModel, eval_plan_slice,
+                            prepare_window)
+from repro.core.packets import ramp_cap
+
+
+@runtime_checkable
+class ExecutionBackend(Protocol):
+    """The one contract the service layer executes dispatch windows
+    against.  Implementations own a catalogue + brick store pair and
+    TWO mutable attributes the service relies on: ``cost_weights`` (the
+    service installs fitted :class:`~repro.service.planner.CostWeights`
+    there so the scheduler can bound windows by calibrated cost) and
+    ``supports_failure_injection`` (checked BEFORE a window is dequeued;
+    a backend that omits it is treated as not supporting failure
+    scripts — the safe direction, since an error raised mid-dispatch
+    would strand the window's tickets and streams)."""
+
+    catalog: MetadataCatalog
+    store: BrickStore
+    cost_weights: Optional[object]
+    supports_failure_injection: bool
+
+    def run_batch(self, job_ids: List[int], *,
+                  plan: Optional[query_lib.FragmentPlan] = None,
+                  on_partial: Optional[
+                      Callable[[PacketPartial], None]] = None,
+                  failure_script: Optional[Dict[float, int]] = None,
+                  packet_ramp: Optional[int] = None
+                  ) -> Tuple[List[merge_lib.QueryResult], JobStats]:
+        """Execute one shared-scan window of catalogued jobs.
+
+        Contract (both backends): jobs must share bricks/calib_iters;
+        ``plan`` (a fragment plan whose roots align with ``job_ids``) is
+        built when absent; ``on_partial`` is invoked once per evaluated
+        packet/chunk, in the exact merge order, with partials whose
+        prefix merges are bit-identical to ``tree_merge`` of that
+        prefix; ``packet_ramp`` caps early packet sizes for streaming;
+        job statuses move RUNNING -> DONE (or FAILED) in the catalogue;
+        returns ``(merged, stats)`` with materialized-fragment results
+        in ``stats.fragment_results`` and per-packet compute telemetry
+        in ``stats.packet_telemetry``."""
+        ...
+
+
+class SimulatedBackend:
+    """The event-driven virtual-time grid simulation behind the
+    :class:`ExecutionBackend` contract.
+
+    A thin wrapper over :class:`~repro.core.jse.JobSubmissionEngine`
+    (exposed as :attr:`engine` for callers tuning simulation knobs such
+    as ``adaptive_packets`` or node speeds): scheduling, straggler
+    mitigation, failure injection and virtual makespans are all the
+    engine's — this class only pins the contract surface."""
+
+    def __init__(self, catalog: MetadataCatalog, store: BrickStore, *,
+                 time_model: Optional[TimeModel] = None,
+                 node_speed: Optional[Dict[int, float]] = None,
+                 adaptive_packets: bool = True,
+                 packet_ramp: Optional[int] = None,
+                 ramp_factor: float = 2.0):
+        self.engine = JobSubmissionEngine(
+            catalog, store, time_model=time_model, node_speed=node_speed,
+            adaptive_packets=adaptive_packets, packet_ramp=packet_ramp,
+            ramp_factor=ramp_factor)
+        self.catalog = catalog
+        self.store = store
+        # fitted cost weights the service installs after telemetry refits
+        # (consumed by QueryScheduler window-cost bounding)
+        self.cost_weights = None
+        #: the virtual grid can kill nodes mid-scan; the service checks
+        #: this BEFORE dequeuing a window so an unsupported failure
+        #: script fails fast with no state mutated
+        self.supports_failure_injection = True
+
+    def submit(self, expr: str, calib_iters: int = 0) -> int:
+        """Register a job over every brick in the store (engine passthrough)."""
+        return self.engine.submit(expr, calib_iters)
+
+    def run_batch(self, job_ids: List[int], *,
+                  plan: Optional[query_lib.FragmentPlan] = None,
+                  on_partial: Optional[
+                      Callable[[PacketPartial], None]] = None,
+                  failure_script: Optional[Dict[float, int]] = None,
+                  packet_ramp: Optional[int] = None
+                  ) -> Tuple[List[merge_lib.QueryResult], JobStats]:
+        """Execute the window on the simulated grid (see
+        :meth:`ExecutionBackend.run_batch` for the contract)."""
+        return self.engine.run_job_batch_simulated(
+            job_ids, plan=plan, on_partial=on_partial,
+            failure_script=failure_script, packet_ramp=packet_ramp)
+
+
+class SpmdBackend:
+    """The SPMD realization of the contract: a chunked streaming scan
+    over the brick shards.
+
+    Bricks play the role of mesh shards (data that never moves); the
+    scan visits them in brick-id order and sweeps each in chunks of
+    ``chunk_events``.  Every chunk runs the SAME fragment-factored
+    evaluation primitive as the simulation
+    (:func:`~repro.core.jse.eval_plan_slice`), so unique fragments are
+    evaluated once per chunk and a chunk's partials are bit-identical to
+    the simulated backend's partials for the same slice.  Per-chunk
+    :class:`~repro.core.jse.PacketPartial`\\ s stream out through
+    ``on_partial`` in deterministic merge order, which is what makes
+    prefix snapshots (via :class:`~repro.core.merge.MergeAccumulator`)
+    bit-identical to ``tree_merge`` of the same prefix — the streaming
+    guarantee the simulated path already had, now on the SPMD path.
+
+    Differences from the simulation, by design:
+
+    - **Clock**: ``t_virtual`` on emitted partials and
+      ``JobStats.makespan_s`` are wall-clock seconds since the window
+      started (there is no virtual grid here), so the front-end's
+      ``WindowController`` observes real latencies.
+    - **Failures**: shards are resident compute state, not remote disks;
+      ``failure_script`` is a simulated-grid concept and a non-empty one
+      raises ``ValueError`` rather than being silently ignored.
+    - **Pallas fusion** (``use_pallas=True``): when every plan target —
+      per-query roots AND materialized boolean fragments — matches the
+      fused ``event_filter`` kernel's conjunctive family, the kernel
+      evaluates all of them in its epilogue in one track-streaming pass
+      per chunk (``interpret=True`` off-TPU); otherwise the chunk falls
+      back to the jnp fragment-plan walk.  Either way the per-chunk
+      telemetry (``PacketTelemetry``) is recorded, so
+      ``planner.fit_cost_weights`` calibrates from SPMD runs too.
+    """
+
+    def __init__(self, catalog: MetadataCatalog, store: BrickStore, *,
+                 chunk_events: int = 64, packet_ramp: Optional[int] = None,
+                 ramp_factor: float = 2.0, use_pallas: bool = False,
+                 interpret: bool = True):
+        if chunk_events <= 0:
+            raise ValueError("chunk_events must be positive")
+        if packet_ramp is not None and packet_ramp <= 0:
+            raise ValueError("packet_ramp must be positive")
+        if ramp_factor <= 1.0:
+            raise ValueError("ramp_factor must be > 1")
+        self.catalog = catalog
+        self.store = store
+        self.chunk_events = chunk_events
+        self.packet_ramp = packet_ramp
+        self.ramp_factor = ramp_factor
+        self.use_pallas = use_pallas
+        self.interpret = interpret
+        self.cost_weights = None  # installed by the service after refits
+        #: shards are resident compute state, not killable virtual nodes
+        self.supports_failure_injection = False
+
+    # ------------------------------------------------------------------ #
+    def _chunk_size(self, seq: int, remaining: int,
+                    ramp: Optional[int]) -> int:
+        """Size of chunk ``seq``: the configured chunk, capped early by
+        the shared geometric stream ramp (``core/packets.py``), clipped
+        to the shard remainder."""
+        size = self.chunk_events
+        if ramp is not None:
+            cap = ramp_cap(seq, ramp, self.ramp_factor)
+            if cap < size:
+                size = max(1, int(cap))
+        return min(size, remaining)
+
+    def _fuse_plan(self, plan: query_lib.FragmentPlan):
+        """Kernel-epilogue fusion: map EVERY plan target into the fused
+        ``event_filter`` kernel's threshold encoding, or None when any
+        target is outside the conjunctive family (chunks then take the
+        jnp fragment-plan walk)."""
+        if not self.use_pallas:
+            return None
+        from repro.kernels.event_filter import ops as ef_ops
+        params = [ef_ops.match_epilogue(t, self.store.schema)
+                  for t in plan.targets()]
+        if any(p is None for p in params):
+            return None
+        return ef_ops.batch_kernel_params(params)
+
+    def _eval_chunk(self, plan: query_lib.FragmentPlan, fused,
+                    brick_id: int, start: int, size: int,
+                    calib_iters: int) -> List[merge_lib.QueryResult]:
+        """One chunk -> one partial per plan target (kernel epilogue when
+        fused, shared jnp primitive otherwise)."""
+        if fused is None:
+            return eval_plan_slice(self.store, plan, brick_id, start, size,
+                                   calib_iters)
+        import jax.numpy as jnp
+        from repro.kernels.event_filter import ops as ef_ops
+        thresholds, var_idx = fused
+        batch = self.store.bricks[brick_id]
+        sl = {k: v[start:start + size] for k, v in batch.items()}
+        mask, var = ef_ops.event_filter_batch(
+            jnp.asarray(sl["scalars"]), jnp.asarray(sl["tracks"]),
+            jnp.asarray(sl["n_tracks"]), thresholds, var_idx=var_idx,
+            calib_iters=calib_iters, interpret=self.interpret)
+        mask = np.asarray(mask)            # (N, K) — one column per target
+        var = np.asarray(var)
+        ids = np.asarray(sl["event_id"])
+        return [merge_lib.from_mask(mask[:, k], var, ids)
+                for k in range(mask.shape[1])]
+
+    # ------------------------------------------------------------------ #
+    def run_batch(self, job_ids: List[int], *,
+                  plan: Optional[query_lib.FragmentPlan] = None,
+                  on_partial: Optional[
+                      Callable[[PacketPartial], None]] = None,
+                  failure_script: Optional[Dict[float, int]] = None,
+                  packet_ramp: Optional[int] = None
+                  ) -> Tuple[List[merge_lib.QueryResult], JobStats]:
+        """Execute the window as a chunked streaming scan over the brick
+        shards (see the class docstring and
+        :meth:`ExecutionBackend.run_batch` for the contract)."""
+        if failure_script:
+            raise ValueError(
+                "failure_script is a simulated-grid concept; the SPMD "
+                "backend has no virtual nodes to kill (use "
+                "SimulatedBackend for failure experiments)")
+        rec, plan = prepare_window(self.catalog, job_ids, plan)
+
+        stats = JobStats(n_queries=len(job_ids))
+        plan_aggs = query_lib.unique_aggregates(plan.targets())
+        fused = self._fuse_plan(plan)
+        ramp = packet_ramp if packet_ramp is not None else self.packet_ramp
+        results: List[List[merge_lib.QueryResult]] = []
+        t_start = time.perf_counter()
+        seq = 0
+        for bid in sorted(rec.bricks):
+            n = self.store.specs[bid].n_events
+            owner = self.store.specs[bid].node
+            start = 0
+            while start < n:
+                size = self._chunk_size(seq, n - start, ramp)
+                t0 = time.perf_counter()
+                res = self._eval_chunk(plan, fused, bid, start, size,
+                                       rec.calib_iters)
+                wall = time.perf_counter() - t0
+                stats.packet_telemetry.append(PacketTelemetry(
+                    size=size, calib_iters=rec.calib_iters,
+                    n_aggregates=plan_aggs, wall_s=wall,
+                    n_targets=len(plan.targets())))
+                results.append(res)
+                stats.events_scanned += size
+                stats.fragment_evals += plan.evals_per_batch
+                stats.fragment_evals_unshared += plan.unshared_evals
+                stats.packets += 1
+                stats.per_node_busy[owner] = \
+                    stats.per_node_busy.get(owner, 0.0) + wall
+                if on_partial is not None:
+                    on_partial(PacketPartial(
+                        seq=seq, brick_id=bid, start=start, size=size,
+                        node=owner,
+                        t_virtual=time.perf_counter() - t_start,
+                        failures=0, partials=res))
+                seq += 1
+                start += size
+
+        k = len(job_ids)
+        merged = (merge_lib.merge_batch(results) if results
+                  else [merge_lib.QueryResult()
+                        for _ in range(len(plan.targets()))])
+        stats.fragment_results = dict(
+            zip(plan.materialize_keys(), merged[k:]))
+        merged = merged[:k]
+        stats.makespan_s = time.perf_counter() - t_start
+
+        end = time.time()
+        for jid, m in zip(job_ids, merged):
+            self.catalog.update(
+                jid, status=DONE, end_time=end,
+                events_processed=m.n_processed, failures=0,
+                result={
+                    "n_selected": m.n_selected,
+                    "n_processed": m.n_processed,
+                    "sum_var": m.sum_var,
+                    "makespan_s": stats.makespan_s,
+                })
+        return merged, stats
+
+
+BACKENDS = ("sim", "spmd")
+
+
+def make_backend(kind: str, catalog: MetadataCatalog, store: BrickStore,
+                 **kwargs) -> ExecutionBackend:
+    """Build an execution backend by name over a catalogue/store pair.
+
+    ``kind`` is ``"sim"`` (:class:`SimulatedBackend`) or ``"spmd"``
+    (:class:`SpmdBackend`); ``kwargs`` pass through to the chosen
+    backend's constructor — unknown names raise ``ValueError`` so a
+    mistyped ``--backend`` fails at construction, not mid-window."""
+    if kind == "sim":
+        return SimulatedBackend(catalog, store, **kwargs)
+    if kind == "spmd":
+        return SpmdBackend(catalog, store, **kwargs)
+    raise ValueError(f"unknown backend {kind!r} (choose from {BACKENDS})")

@@ -4,7 +4,7 @@
   per-brick tasks dispatched to the nodes owning the data -> per-node
   results -> merged at the JSE -> catalogue updated -> user retrieves.
 
-Two execution backends:
+Two execution realizations share this module's primitives:
 
 - ``run_job_simulated``: an event-driven virtual-time grid simulation over
   the host-level BrickStore.  Compute on each packet is REAL (numpy query
@@ -15,6 +15,14 @@ Two execution backends:
 - ``spmd_query_step``: the TPU-native realization — one lockstep jit over
   the mesh-sharded event store (bricks = batch shards that never move),
   with the merge expressed as cross-shard reductions.
+
+The service layer does not call either directly anymore: it programs
+against the :class:`~repro.core.backend.ExecutionBackend` contract
+(``core/backend.py``), whose ``SimulatedBackend`` wraps the simulation
+below and whose ``SpmdBackend`` runs the fragment plan as a chunked
+streaming scan over the brick shards.  :func:`eval_plan_slice` is the
+one compute primitive both backends share, which is what keeps their
+per-packet partials bit-identical.
 """
 from __future__ import annotations
 
@@ -121,6 +129,60 @@ class JobStats:
         dataclasses.field(default_factory=list)
 
 
+def prepare_window(catalog: MetadataCatalog, job_ids: List[int],
+                   plan: Optional[query_lib.FragmentPlan] = None):
+    """Validate one shared-scan window and mark its jobs RUNNING — the
+    common preamble of every backend's ``run_batch``.
+
+    Checks shared-scan compatibility (every job must cover the same
+    bricks with the same ``calib_iters``), builds the fragment plan when
+    none was passed, and verifies a passed plan's roots align one-to-one
+    with the jobs.  Returns ``(rec, plan)`` where ``rec`` is the window's
+    representative job record.  Keeping this in ONE place is what keeps
+    the backends' preconditions from diverging."""
+    recs = [catalog.jobs[j] for j in job_ids]
+    if not recs:
+        raise ValueError("empty job batch")
+    rec = recs[0]
+    for r in recs[1:]:
+        if r.bricks != rec.bricks or r.calib_iters != rec.calib_iters:
+            raise ValueError(
+                f"job {r.job_id} incompatible with shared scan "
+                f"(bricks/calib_iters differ from job {rec.job_id})")
+    for jid in job_ids:
+        catalog.update(jid, status=RUNNING, start_time=time.time())
+    if plan is None:
+        plan = query_lib.build_fragment_plan([r.expr for r in recs])
+    elif len(plan.roots) != len(recs):
+        raise ValueError(
+            f"plan has {len(plan.roots)} roots for {len(recs)} jobs")
+    return rec, plan
+
+
+def eval_plan_slice(store: BrickStore, plan: query_lib.FragmentPlan,
+                    brick_id: int, start: int, size: int,
+                    calib_iters: int) -> List[merge_lib.QueryResult]:
+    """One slice read + one calibration + one fragment-factored pass —
+    the shared-scan inner loop every execution backend runs (the slice is
+    resident while every in-flight query consumes it).  Returns one
+    partial per plan target (per-query roots first, then materialized
+    shared fragments).
+
+    This is deliberately the ONLY place a brick slice is turned into
+    partials: the simulated and SPMD backends (``core/backend.py``) both
+    call it, so a packet covering the same ``[start, start+size)`` range
+    of the same brick yields bit-identical partials on either backend."""
+    batch = store.bricks[brick_id]
+    sl = {k: v[start:start + size] for k, v in batch.items()}
+    slj = {k: jnp.asarray(v) for k, v in sl.items()}
+    if calib_iters:
+        slj = dict(slj, tracks=query_lib.calibrate(slj, calib_iters))
+    var = np.asarray(slj["scalars"][:, 0])  # e_total summary variable
+    ids = np.asarray(sl["event_id"])
+    masks = plan.evaluate(slj, store.schema)
+    return [merge_lib.from_mask(np.asarray(m), var, ids) for m in masks]
+
+
 class JobSubmissionEngine:
     """The paper's JSE broker: submits jobs to the catalogue, fans each one
     out as per-brick packets to the owning nodes, merges the partials, and
@@ -162,19 +224,10 @@ class JobSubmissionEngine:
     def _eval_packet_batch(self, plan: query_lib.FragmentPlan, brick_id: int,
                            start: int, size: int, calib_iters: int
                            ) -> List[merge_lib.QueryResult]:
-        """One slice read + one calibration, one fragment-factored pass —
-        the shared-scan inner loop (the slice is resident while every
-        in-flight query consumes it).  Returns one partial per plan target
-        (per-query roots first, then materialized shared fragments)."""
-        batch = self.store.bricks[brick_id]
-        sl = {k: v[start:start + size] for k, v in batch.items()}
-        slj = {k: jnp.asarray(v) for k, v in sl.items()}
-        if calib_iters:
-            slj = dict(slj, tracks=query_lib.calibrate(slj, calib_iters))
-        var = np.asarray(slj["scalars"][:, 0])  # e_total summary variable
-        ids = np.asarray(sl["event_id"])
-        masks = plan.evaluate(slj, self.store.schema)
-        return [merge_lib.from_mask(np.asarray(m), var, ids) for m in masks]
+        """Delegates to :func:`eval_plan_slice` (kept as a method for the
+        simulation loop and any external caller)."""
+        return eval_plan_slice(self.store, plan, brick_id, start, size,
+                               calib_iters)
 
     def run_job_simulated(self, job_id: int, *,
                           failure_script: Optional[Dict[float, int]] = None,
@@ -221,22 +274,7 @@ class JobSubmissionEngine:
         ``packet_ramp`` overrides the engine-level stream-aware ramp for
         THIS run only (the service enables it per window when someone is
         streaming); None inherits the engine setting."""
-        recs = [self.catalog.jobs[j] for j in job_ids]
-        if not recs:
-            raise ValueError("empty job batch")
-        rec = recs[0]
-        for r in recs[1:]:
-            if r.bricks != rec.bricks or r.calib_iters != rec.calib_iters:
-                raise ValueError(
-                    f"job {r.job_id} incompatible with shared scan "
-                    f"(bricks/calib_iters differ from job {rec.job_id})")
-        for jid in job_ids:
-            self.catalog.update(jid, status=RUNNING, start_time=time.time())
-        if plan is None:
-            plan = query_lib.build_fragment_plan([r.expr for r in recs])
-        elif len(plan.roots) != len(recs):
-            raise ValueError(
-                f"plan has {len(plan.roots)} roots for {len(recs)} jobs")
+        rec, plan = prepare_window(self.catalog, job_ids, plan)
         failure_script = dict(failure_script or {})
 
         ramp = packet_ramp if packet_ramp is not None else self.packet_ramp

@@ -51,6 +51,32 @@ class QueryResult:
         if self.selected_ids is None:
             self.selected_ids = np.zeros(0, np.int64)
 
+    def to_dict(self) -> dict:
+        """JSON-serializable form of the result (``hist`` and
+        ``selected_ids`` as plain int lists) — what the fleet's L2 cache
+        tier persists across restarts.  Round-trips exactly through
+        :meth:`from_dict` (``results_identical`` holds): counts and
+        histogram bins are integers, ids are integers, and the float
+        ``sum_var`` survives JSON bit-for-bit (repr round-trip)."""
+        return {
+            "n_selected": int(self.n_selected),
+            "n_processed": int(self.n_processed),
+            "sum_var": float(self.sum_var),
+            "hist": [int(x) for x in self.hist],
+            "selected_ids": [int(x) for x in self.selected_ids],
+        }
+
+    @classmethod
+    def from_dict(cls, data: dict) -> "QueryResult":
+        """Rebuild a result from :meth:`to_dict` output."""
+        return cls(
+            n_selected=int(data["n_selected"]),
+            n_processed=int(data["n_processed"]),
+            sum_var=float(data["sum_var"]),
+            hist=np.asarray(data["hist"], np.int64),
+            selected_ids=np.asarray(data["selected_ids"], np.int64),
+        )
+
 
 def from_mask(mask: np.ndarray, var: np.ndarray,
               event_id: np.ndarray) -> QueryResult:

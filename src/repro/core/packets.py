@@ -22,6 +22,21 @@ from typing import Dict, List, Optional, Tuple
 
 from repro.core.catalog import MetadataCatalog
 
+#: bounded exponent for the geometric stream ramp, so
+#: ``ramp_factor ** n`` stays finite on arbitrarily long scans
+RAMP_EXP_CAP = 64
+
+
+def ramp_cap(n_done: int, ramp_start: int, ramp_factor: float) -> float:
+    """Stream-aware packet-size cap after ``n_done`` completed packets:
+    ``ramp_start * ramp_factor ** n_done`` with the exponent bounded by
+    :data:`RAMP_EXP_CAP`.  The ONE place the ramp rule lives — both the
+    simulated scheduler (:class:`AdaptivePacketScheduler`) and the SPMD
+    backend's chunked scan (``core/backend.py``) size their early
+    packets from it, which is what keeps their matched-packetization
+    equivalence intact when the ramp is tuned."""
+    return ramp_start * ramp_factor ** min(n_done, RAMP_EXP_CAP)
+
 
 @dataclasses.dataclass
 class Packet:
@@ -89,11 +104,10 @@ class AdaptivePacketScheduler:
         size = max(self.min, min(self.max, size, drain_cap))
         if self.ramp_start is not None:
             # stream-aware ramp: small early packets, growing geometrically
-            # with scan progress until PROOF sizing dominates.  The
-            # exponent is bounded so ramp_factor**n stays finite on long
-            # scans, and int() runs only on a value known to be < size.
-            done = min(len(self.done), 64)
-            cap = self.ramp_start * self.ramp_factor ** done
+            # with scan progress until PROOF sizing dominates (int() runs
+            # only on a value known to be < size)
+            cap = ramp_cap(len(self.done), self.ramp_start,
+                           self.ramp_factor)
             if cap < size:
                 size = max(1, int(cap))
         return size

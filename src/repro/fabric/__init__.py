@@ -8,8 +8,8 @@ and staleness model."""
 from repro.fabric.bus import BusStats, Envelope, MessageBus
 from repro.fabric.fanout import FanoutStats, StreamFanout
 from repro.fabric.fleet import Fleet, Frontend
-from repro.fabric.gossip import (GossipNode, GossipStats, effective_epoch,
-                                 merge_vv, rounds_bound)
+from repro.fabric.gossip import (GossipNode, GossipStats, adaptive_fanout,
+                                 effective_epoch, merge_vv, rounds_bound)
 from repro.fabric.registry import FragmentRecord, FragmentRegistry
 from repro.fabric.shared_cache import (SharedCacheStats, SharedCacheTier,
                                        TieredResultCache)
@@ -18,5 +18,6 @@ __all__ = [
     "BusStats", "Envelope", "FanoutStats", "Fleet", "FragmentRecord",
     "FragmentRegistry", "Frontend", "GossipNode", "GossipStats",
     "MessageBus", "SharedCacheStats", "SharedCacheTier", "StreamFanout",
-    "TieredResultCache", "effective_epoch", "merge_vv", "rounds_bound",
+    "TieredResultCache", "adaptive_fanout", "effective_epoch", "merge_vv",
+    "rounds_bound",
 ]

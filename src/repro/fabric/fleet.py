@@ -35,7 +35,8 @@ from repro.core.catalog import MetadataCatalog
 from repro.core.elastic import ElasticManager, MigrationPlan
 from repro.fabric.bus import MessageBus
 from repro.fabric.fanout import STREAM_TOPIC, StreamFanout
-from repro.fabric.gossip import GOSSIP_TOPIC, GossipNode, rounds_bound
+from repro.fabric.gossip import (GOSSIP_TOPIC, GossipNode, adaptive_fanout,
+                                 rounds_bound)
 from repro.fabric.registry import FragmentRegistry
 from repro.fabric.shared_cache import SharedCacheTier, TieredResultCache
 from repro.service import streaming as streaming_lib
@@ -74,9 +75,15 @@ class Fleet:
     registry:
         Fleet-shared :class:`FragmentRegistry`, or ``None`` for
         per-window planning only.
+    backend:
+        Execution backend every front-end dispatches on: ``"sim"``
+        (default) or ``"spmd"`` — passed by name so each front-end
+        constructs its own backend over its own catalogue view (see
+        ``core/backend.py``).
     gossip_fanout:
-        Digest push targets per round; the propagation bound is
-        ``rounds_bound(n_frontends, gossip_fanout)``.
+        Digest push targets per round; ``None`` (default) adapts to
+        fleet size (``max(1, ceil(log2(n)))``).  The propagation bound
+        is ``rounds_bound(n_frontends, gossip_fanout)``.
     scheduler_factory:
         Per-front-end :class:`QueryScheduler` constructor (schedulers
         hold queues and cannot be shared).
@@ -91,7 +98,8 @@ class Fleet:
                  l1_capacity: int = 256,
                  l2_capacity: int = 4096,
                  registry: Optional[FragmentRegistry] = None,
-                 gossip_fanout: int = 1,
+                 backend: str = "sim",
+                 gossip_fanout: Optional[int] = None,
                  scheduler_factory: Optional[
                      Callable[[], QueryScheduler]] = None,
                  service_kwargs: Optional[dict] = None):
@@ -101,13 +109,16 @@ class Fleet:
         self.bus = bus or MessageBus()
         self.l2 = SharedCacheTier(l2_capacity) if shared_cache else None
         self.registry = registry
-        self.gossip_fanout = gossip_fanout
+        self.backend = backend
+        self.gossip_fanout = (gossip_fanout if gossip_fanout is not None
+                              else adaptive_fanout(n_frontends))
         self.frontends: List[Frontend] = []
         self._tickets: Dict[int, Tuple[int, int]] = {}  # gtid -> (fe, tid)
         self._by_local: Dict[Tuple[int, int], int] = {}  # (fe, tid) -> gtid
         self._next_gtid = 0
         self._rr = 0
         kwargs = dict(service_kwargs or {})
+        kwargs.setdefault("backend", backend)
         for i in range(n_frontends):
             node_id = f"fe{i}"
             catalog = MetadataCatalog(store.n_nodes)
@@ -116,7 +127,7 @@ class Fleet:
             # vector first so the cache's hook forwards the already-updated
             # vector to the shared tier
             gossip = GossipNode(node_id, catalog, self.bus,
-                                fanout=gossip_fanout)
+                                fanout=self.gossip_fanout)
             cache = TieredResultCache(l1_capacity, catalog=catalog,
                                       l2=self.l2,
                                       vv_source=lambda g=gossip: g.vv)

@@ -23,7 +23,11 @@ the sorted peer list pushes its full digest to peers ``i+1 .. i+fanout``
 positions per round, giving the documented bound
 :func:`rounds_bound` ``= ceil((n-1)/fanout)`` rounds from any bump to
 fleet-wide visibility (loss-free bus; message drops only delay
-convergence because digests are cumulative and idempotent).
+convergence because digests are cumulative and idempotent).  The default
+fanout is **adaptive to fleet size**: :func:`adaptive_fanout` ``=
+max(1, ceil(log2(n)))``, so the bound scales as ``O(n / log n)`` rounds
+while per-round traffic stays ``O(n log n)`` messages — a fixed constant
+either floods small fleets or crawls on large ones.
 
 **Anti-entropy.**  Digests always carry the full vector and the full
 liveness map, never deltas.  A front-end that was partitioned needs no
@@ -41,7 +45,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.catalog import MetadataCatalog
 from repro.fabric.bus import MessageBus
@@ -68,11 +72,30 @@ def merge_vv(mine: VersionVector, theirs: VersionVector) -> bool:
     return changed
 
 
-def rounds_bound(n_frontends: int, fanout: int = 1) -> int:
+def adaptive_fanout(n_frontends: int) -> int:
+    """Default gossip fanout for a fleet of ``n``: ``max(1, ceil(log2(n)))``.
+
+    Scales push width with fleet size so the propagation bound stays
+    ``O(n / log n)`` rounds without flooding small fleets: n<=2 -> 1,
+    3..4 -> 2, 5..8 -> 3, 9..16 -> 4, ...  Used whenever a fanout of
+    ``None`` is passed (GossipNode, Fleet, :func:`rounds_bound`)."""
+    if n_frontends <= 2:
+        return 1
+    return max(1, math.ceil(math.log2(n_frontends)))
+
+
+def rounds_bound(n_frontends: int, fanout: Optional[int] = None) -> int:
     """Worst-case gossip rounds from a bump on any member to fleet-wide
-    visibility on a loss-free bus: ``ceil((n-1)/fanout)``."""
+    visibility on a loss-free bus: ``ceil((n-1)/fanout)``.
+
+    ``fanout=None`` means the adaptive default
+    (:func:`adaptive_fanout`), matching what a Fleet built without an
+    explicit ``gossip_fanout`` actually pushes — e.g. n=16 gossips at
+    fanout 4 and is fleet-wide within ``ceil(15/4) = 4`` rounds."""
     if n_frontends <= 1:
         return 0
+    if fanout is None:
+        fanout = adaptive_fanout(n_frontends)
     return math.ceil((n_frontends - 1) / max(1, fanout))
 
 
@@ -103,11 +126,13 @@ class GossipNode:
     """
 
     def __init__(self, node_id: str, catalog: MetadataCatalog,
-                 bus: MessageBus, *, fanout: int = 1):
+                 bus: MessageBus, *, fanout: Optional[int] = None):
         self.node_id = node_id
         self.catalog = catalog
         self.bus = bus
-        self.fanout = max(1, fanout)
+        # None = adaptive: resolved from the registered ring size at each
+        # emit, so late-joining fabric nodes widen the push automatically
+        self.fanout = max(1, fanout) if fanout is not None else None
         self.vv: VersionVector = {}
         # grid node liveness: node -> (version, origin, alive).  Highest
         # (version, origin) wins — the origin id breaks ties between
@@ -149,13 +174,16 @@ class GossipNode:
 
     def targets(self) -> List[str]:
         """This round's push targets: the next ``fanout`` peers after us
-        on the sorted ring of registered fabric nodes."""
+        on the sorted ring of registered fabric nodes (adaptive
+        ``max(1, ceil(log2(ring)))`` when no fanout was fixed)."""
         ring = self.bus.nodes
         if len(ring) <= 1:
             return []
+        fanout = (self.fanout if self.fanout is not None
+                  else adaptive_fanout(len(ring)))
         i = ring.index(self.node_id)
         return [ring[(i + 1 + k) % len(ring)]
-                for k in range(min(self.fanout, len(ring) - 1))]
+                for k in range(min(fanout, len(ring) - 1))]
 
     def emit(self) -> None:
         """Push the digest to this round's ring targets."""

@@ -19,7 +19,9 @@ Grid experience warns about.  The fabric adds a second tier:
 
 :class:`TieredResultCache` is the composition the fleet installs into
 each ``QueryService``: an L1 that fills misses from L2 and write-throughs
-puts, so the service layer above needs no fleet awareness at all.
+puts, so the service layer above needs no fleet awareness at all.  The
+tier persists to JSON (``save``/``load``), so the fleet's L2 survives
+restarts the way the fragment registry and the metadata catalogue do.
 
 **Epoch safety.**  Scalar epochs are ambiguous in a fleet: two
 *different* front-ends' first bumps both produce effective epoch 1 while
@@ -42,8 +44,10 @@ vector ``{"": epoch}`` with identical semantics to a plain watermark.
 from __future__ import annotations
 
 import dataclasses
+import json
+import pathlib
 from collections import OrderedDict
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Optional, Tuple, Union
 
 from repro.core import merge as merge_lib
 from repro.core import query as query_lib
@@ -167,6 +171,50 @@ class SharedCacheTier:
 
     def __len__(self) -> int:
         return len(self._entries)
+
+    # --------------------------- persistence -------------------------- #
+    def to_json(self) -> str:
+        """Serialize the tier (capacity, version-vector join, entries in
+        LRU order) to JSON — restart survival for the fleet's L2, like
+        the fragment registry and the metadata catalogue.  Entry keys
+        round-trip exactly (canonical string, calib_iters, vv
+        fingerprint) and results round-trip bit-identically
+        (:meth:`~repro.core.merge.QueryResult.to_dict`); stats are
+        runtime counters and start fresh on load."""
+        return json.dumps({
+            "capacity": self.capacity,
+            "join": dict(self._join),
+            "entries": [
+                {"canonical": k[0], "calib_iters": k[1],
+                 "vv": [list(p) for p in k[2]],
+                 "result": v.to_dict()}
+                for k, v in self._entries.items()],
+        })
+
+    @classmethod
+    def from_json(cls, text: str) -> "SharedCacheTier":
+        """Rebuild a tier from :meth:`to_json` output.  Entries keyed
+        under vectors older than the persisted join were already purged
+        at save time; the rebuilt tier re-applies the join so any
+        straggler is purged again on load."""
+        data = json.loads(text)
+        tier = cls(data.get("capacity", 4096))
+        for e in data.get("entries", []):
+            fp = tuple(tuple(p) for p in e["vv"])
+            tier._entries[(e["canonical"], int(e["calib_iters"]), fp)] = \
+                merge_lib.QueryResult.from_dict(e["result"])
+        tier.observe_vv({o: int(n) for o, n in
+                         data.get("join", {}).items()})
+        return tier
+
+    def save(self, path: Union[str, pathlib.Path]) -> None:
+        """Persist the tier to ``path`` (see :meth:`to_json`)."""
+        pathlib.Path(path).write_text(self.to_json())
+
+    @classmethod
+    def load(cls, path: Union[str, pathlib.Path]) -> "SharedCacheTier":
+        """Load a tier persisted by :meth:`save`."""
+        return cls.from_json(pathlib.Path(path).read_text())
 
 
 class TieredResultCache(ResultCache):

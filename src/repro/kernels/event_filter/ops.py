@@ -24,11 +24,59 @@ from repro.kernels.event_filter.ref import (event_filter_batch_ref,
 
 
 def match_canonical(expr: str, schema) -> Optional[dict]:
-    """Returns kernel params if the expression matches the hot family."""
-    try:
-        ast = q.parse(expr)
-    except q.QueryError:
+    """Returns kernel params if the expression matches the FULL hot
+    family — a strictness check over :func:`match_epilogue` (one matcher
+    encodes the kernel's term shapes): both the scalar-threshold and the
+    count terms must be present."""
+    params = match_epilogue(expr, schema)
+    if params is None or not {"scalar", "count"} <= params["terms"]:
         return None
+    return params
+
+
+def batch_kernel_params(params) -> Tuple[jnp.ndarray, Tuple[int, ...]]:
+    """Assemble the batched kernel's inputs from per-target param dicts
+    (``match_canonical`` / ``match_epilogue`` output): the ``(4, K)``
+    float32 thresholds array — rows [scalar_thresh; pt_thresh;
+    min_count; sum_cap] — and the static ``var_idx`` tuple.  The single
+    place the kernel's threshold-row layout is encoded on the host
+    side."""
+    thresholds = jnp.array(
+        [[p["scalar_thresh"] for p in params],
+         [p["pt_thresh"] for p in params],
+         [p["min_count"] for p in params],
+         [p["sum_cap"] for p in params]], jnp.float32)   # (4, K)
+    return thresholds, tuple(p["var_idx"] for p in params)
+
+
+def match_epilogue(target, schema) -> Optional[dict]:
+    """Relaxed matcher for kernel-EPILOGUE fusion of fragment-plan targets.
+
+    ``match_canonical`` requires the full hot family (scalar threshold AND
+    count term); a fragment plan's targets also include materialized
+    boolean fragments that are *subsets* of it — a bare
+    ``count(pt > 15) >= 2`` conjunct, a lone scalar cut.  This matcher
+    accepts any ``&&``-conjunction of the kernel's three term shapes with
+    each term OPTIONAL (at least one present):
+
+        <scalar> > A    |    count(pt > B) >= C    |    sum(pt) < D
+
+    and encodes missing terms as neutral thresholds the kernel epilogue
+    already treats as pass-through: no scalar term -> ``scalar_thresh =
+    -inf`` (any finite scalar passes), no count term -> ``min_count = 0``
+    (the count accumulator is always >= 0), no sum term -> ``sum_cap =
+    -1`` (the kernel's existing no-cap sentinel; a sum term with D <= 0
+    is rejected rather than aliased onto it).  ``target`` is an AST node
+    (what :meth:`FragmentPlan.targets` holds) or an expression string.
+    Returns kernel params — with ``"terms"``, the set of term kinds that
+    were present, so :func:`match_canonical` can impose its stricter
+    full-family requirement — or None when the target is outside the
+    family."""
+    if isinstance(target, str):
+        try:
+            target = q.parse(target)
+        except q.QueryError:
+            return None
 
     def is_cmp(node, op):
         return isinstance(node, q.Bin) and node.op == op
@@ -42,11 +90,11 @@ def match_canonical(expr: str, schema) -> Optional[dict]:
         else:
             terms.append(node)
 
-    flatten_and(ast)
-    out = {"sum_cap": -1.0}
+    flatten_and(target)
+    out = {"var_idx": 0, "scalar_thresh": float("-inf"),
+           "pt_thresh": 0.0, "min_count": 0.0, "sum_cap": -1.0}
     seen = set()
     for t in terms:
-        # scalar threshold: Var > Num
         if (is_cmp(t, ">") and isinstance(t.lhs, q.Var)
                 and isinstance(t.rhs, q.Num) and "scalar" not in seen):
             try:
@@ -55,7 +103,6 @@ def match_canonical(expr: str, schema) -> Optional[dict]:
                 return None
             out["scalar_thresh"] = t.rhs.value
             seen.add("scalar")
-        # count(pt > B) >= C
         elif (is_cmp(t, ">=") and isinstance(t.lhs, q.Agg)
               and t.lhs.fn == "count" and is_cmp(t.lhs.arg, ">")
               and isinstance(t.lhs.arg.lhs, q.Var)
@@ -65,15 +112,17 @@ def match_canonical(expr: str, schema) -> Optional[dict]:
             out["pt_thresh"] = t.lhs.arg.rhs.value
             out["min_count"] = t.rhs.value
             seen.add("count")
-        # sum(pt) < D
         elif (is_cmp(t, "<") and isinstance(t.lhs, q.Agg)
               and t.lhs.fn == "sum" and isinstance(t.lhs.arg, q.Var)
-              and t.lhs.arg.name == "pt" and isinstance(t.rhs, q.Num)):
+              and t.lhs.arg.name == "pt" and isinstance(t.rhs, q.Num)
+              and t.rhs.value > 0 and "sum" not in seen):
             out["sum_cap"] = t.rhs.value
+            seen.add("sum")
         else:
             return None
-    if "scalar" not in seen or "count" not in seen:
+    if not seen:
         return None
+    out["terms"] = frozenset(seen)
     return out
 
 
@@ -145,12 +194,7 @@ def filter_and_summarize_batch(exprs, schema, batch, *, calib_iters: int = 0,
         if calib_iters:
             b = dict(b, tracks=q.calibrate(b, calib_iters))
         return bpred(b), b["scalars"][:, 0]
-    thresholds = jnp.array(
-        [[p["scalar_thresh"] for p in params],
-         [p["pt_thresh"] for p in params],
-         [p["min_count"] for p in params],
-         [p["sum_cap"] for p in params]], jnp.float32)   # (4, K)
-    var_idx = tuple(p["var_idx"] for p in params)
+    thresholds, var_idx = batch_kernel_params(params)
     mask, var = event_filter_batch(
         batch["scalars"], batch["tracks"], batch["n_tracks"], thresholds,
         var_idx=var_idx, calib_iters=calib_iters, interpret=interpret)

@@ -16,6 +16,12 @@ ResultStream fed per-packet prefix merges mid-scan, and the report adds
 time-to-first-partial vs time-to-final plus a live coverage trace for one
 sample ticket.
 
+``--backend {sim,spmd}`` (query mode) picks the execution backend every
+dispatch window runs on: the virtual-time grid simulation (default) or
+the SPMD chunked streaming scan over the brick shards (wall-clock
+latencies, same streaming/caching/planning behaviour — see
+``docs/backends.md``).
+
 ``--fleet N`` (query mode) replaces the single QueryService with a
 coherence-fabric :class:`~repro.fabric.fleet.Fleet` of N front-ends over
 one brick store: submissions round-robin across the fleet, a shared L2
@@ -84,7 +90,8 @@ def serve_fleet(args):
                          n_nodes=args.n_nodes,
                          events_per_brick=cfg.events_per_brick,
                          replication=cfg.replication_factor, seed=0)
-    fleet = Fleet(store, args.fleet, registry=FragmentRegistry())
+    fleet = Fleet(store, args.fleet, registry=FragmentRegistry(),
+                  backend=args.backend)
     hot = ["e_total > 40 && count(pt > 15) >= 2",
            "e_t_miss > 30", "pt_lead > 60 || n_tracks >= 8"]
     t0 = time.time()
@@ -167,6 +174,7 @@ def serve_queries(args):
         clock = lambda: vnow[0]
         wc = WindowController(initial=args.window)
     svc = QueryService(store, scheduler=sched, window_controller=wc,
+                       backend=args.backend,
                        **({"clock": clock} if clock else {}))
     # multi-tenant workload: a few hot queries repeated across tenants
     # (the interactive-analysis regime) plus per-tenant near-duplicate
@@ -263,6 +271,12 @@ def main(argv=None):
     ap.add_argument("--stream", action="store_true",
                     help="progressive delivery: per-ticket ResultStreams "
                          "fed per-packet prefix merges mid-scan")
+    ap.add_argument("--backend", choices=("sim", "spmd"), default="sim",
+                    help="execution backend for dispatch windows: the "
+                         "virtual-time grid simulation or the SPMD "
+                         "chunked streaming shard scan (wall-clock "
+                         "latencies; --adaptive-window then observes "
+                         "real scan times)")
     ap.add_argument("--fleet", type=int, default=1,
                     help="query mode: number of coherence-fabric "
                          "front-ends (1 = single QueryService)")

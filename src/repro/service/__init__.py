@@ -7,9 +7,10 @@ from repro.service.cache import CacheStats, ResultCache
 from repro.service.frontend import (QUEUED, REJECTED, SERVED, QueryService,
                                     ServiceStats, Ticket, WindowController)
 from repro.service.planner import (CostWeights, boolean_fragment_refs,
-                                   count_aggregates, estimate_cost,
-                                   fit_cost_weights, plan_window,
-                                   shared_boolean_fragments, window_cost)
+                                   cost_from_features, count_aggregates,
+                                   estimate_cost, fit_cost_weights,
+                                   plan_window, shared_boolean_fragments,
+                                   window_cost)
 from repro.service.scheduler import (AdmissionError, QueryScheduler,
                                      Submission, make_submission)
 from repro.service.streaming import (ResultStream, StreamSnapshot,
@@ -20,7 +21,7 @@ __all__ = [
     "QueryService", "QUEUED", "REJECTED", "ResultCache", "ResultStream",
     "SERVED", "ServiceStats", "StreamSnapshot", "Submission", "Ticket",
     "WindowController", "WindowStreamPublisher", "boolean_fragment_refs",
-    "count_aggregates", "estimate_cost", "fit_cost_weights",
-    "make_submission", "plan_window", "shared_boolean_fragments",
-    "window_cost",
+    "cost_from_features", "count_aggregates", "estimate_cost",
+    "fit_cost_weights", "make_submission", "plan_window",
+    "shared_boolean_fragments", "window_cost",
 ]

@@ -5,16 +5,25 @@ The flow per dispatch window::
     submit(expr, tenant) --admission--> scheduler queues (per tenant,
                        |                count caps + cost budgets)
                        \\--cache hit--> answered with zero brick I/O
-    step(): window = scheduler.next_batch()        (fairness + coalescing)
+    step(): window = scheduler.next_batch()        (fairness + coalescing +
+                                                    window-cost bounding)
             dedup identical canonical queries      (one execution, fan-out)
             planner.plan_window(uniques)           (fragment factoring +
                                                     materialization policy)
-            jse.run_job_batch_simulated(jobs, plan=plan)  (ONE shared scan,
+            backend.run_batch(jobs, plan=plan)     (ONE shared scan —
+                                                    simulated grid OR SPMD
+                                                    chunked shard scan,
                                                     each unique fragment
                                                     evaluated once/packet)
             results -> cache (queries AND shared fragments), tickets,
             catalog; WindowController observes scan latency and retunes
             scheduler.max_batch for the next window
+
+The execution backend is pluggable (``core/backend.py``): the service
+programs only against ``ExecutionBackend.run_batch``, so streaming, cache
+write-through, cost-model calibration and window planning behave
+identically whether the window runs on the virtual-time grid simulation
+or as an SPMD chunked scan over the brick shards.
 
     streamed tickets additionally get per-packet prefix merges published
     into their ResultStream DURING the scan (service/streaming.py), with
@@ -29,12 +38,13 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import OrderedDict
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Union
 
+from repro.core import backend as backend_lib
 from repro.core import merge as merge_lib
 from repro.core.brick import BrickStore
 from repro.core.catalog import DONE, FAILED, MetadataCatalog
-from repro.core.jse import JobSubmissionEngine, TimeModel
+from repro.core.jse import TimeModel
 from repro.service import planner as planner_lib
 from repro.service import streaming as streaming_lib
 from repro.service.cache import ResultCache
@@ -167,6 +177,16 @@ class QueryService:
     store / catalog:
         The brick-sharded event store and the metadata catalogue (one is
         created when not supplied).
+    backend:
+        The execution backend dispatch windows run on: ``"sim"`` (the
+        virtual-time grid simulation, default), ``"spmd"`` (the chunked
+        streaming scan over brick shards), or a pre-built
+        :class:`~repro.core.backend.ExecutionBackend` instance — which
+        must be constructed over this service's ``store``; its catalogue
+        is adopted when ``catalog`` is not passed and must match when it
+        is.  Every service feature (streaming, caching, cost admission,
+        window planning, telemetry refits) routes through the backend
+        contract, so behaviour is backend-agnostic by construction.
     cache / scheduler:
         Injectable :class:`ResultCache` / :class:`QueryScheduler`; pass a
         scheduler with cost budgets for cost-based admission.
@@ -212,6 +232,8 @@ class QueryService:
 
     def __init__(self, store: BrickStore,
                  catalog: Optional[MetadataCatalog] = None, *,
+                 backend: Union[str, "backend_lib.ExecutionBackend",
+                                None] = None,
                  cache: Optional[ResultCache] = None,
                  scheduler: Optional[QueryScheduler] = None,
                  time_model: Optional[TimeModel] = None,
@@ -226,16 +248,46 @@ class QueryService:
                  stream_ramp: Optional[int] = None,
                  frontend_id: str = "fe0"):
         self.store = store
+        if backend is not None and not isinstance(backend, str):
+            # instance backend: it owns a catalogue/store pair already
+            if backend.store is not store:
+                raise ValueError(
+                    "backend was built over a different brick store")
+            if catalog is None:
+                catalog = backend.catalog
+            elif backend.catalog is not catalog:
+                raise ValueError(
+                    "backend and service must share one catalogue")
         self.catalog = catalog or MetadataCatalog(store.n_nodes)
-        self.jse = JobSubmissionEngine(self.catalog, store,
-                                       time_model=time_model,
-                                       node_speed=node_speed)
+        if backend is None or isinstance(backend, str):
+            kind = backend or "sim"
+            if kind != "sim" and (time_model is not None
+                                  or node_speed is not None):
+                raise ValueError(
+                    "time_model/node_speed are simulation knobs; the "
+                    f"{kind!r} backend would silently ignore them")
+            kwargs = ({"time_model": time_model, "node_speed": node_speed}
+                      if kind == "sim" else {})
+            backend = backend_lib.make_backend(kind, self.catalog, store,
+                                               **kwargs)
+        elif time_model is not None or node_speed is not None:
+            raise ValueError(
+                "pass time_model/node_speed when constructing the "
+                "backend, not alongside a pre-built instance")
+        self.backend = backend
+        # back-compat handle for simulation-tuning callers (None on
+        # non-simulated backends)
+        self.jse = getattr(backend, "engine", None)
         # `is not None`, NOT truthiness: an empty injected cache is falsy
         # (it has __len__) and must not be silently replaced
         self.cache = (cache if cache is not None
                       else ResultCache(catalog=self.catalog))
         self.scheduler = (scheduler if scheduler is not None
                           else QueryScheduler())
+        if self.scheduler.backend is None:
+            # the scheduler recosts queued submissions against the
+            # backend's calibrated cost weights when bounding windows
+            self.scheduler.backend = self.backend
         self.use_cache = use_cache
         self.window_controller = window_controller
         self.clock = clock
@@ -361,6 +413,14 @@ class QueryService:
         subscribed stream.  A DONE window closes the streams with a final
         snapshot bit-identical to the ticket result; a FAILED window
         aborts them without one."""
+        if failure_script and not getattr(
+                self.backend, "supports_failure_injection", False):
+            # fail BEFORE dequeuing: a mid-dispatch error would strand
+            # the window's tickets/streams with no way to re-run them
+            raise ValueError(
+                "this execution backend does not support failure "
+                "injection (failure scripts are a simulated-grid "
+                "concept)")
         if self.window_controller is not None:
             self.scheduler.max_batch = self.window_controller.window()
         window = self.scheduler.next_batch()
@@ -410,7 +470,7 @@ class QueryService:
         # stream-aware packet sizing: a window someone is streaming gets
         # the small-early/growing-later ramp (fast first partial) while
         # keeping PROOF-adaptive sizing for the bulk of the scan
-        merged, stats = self.jse.run_job_batch_simulated(
+        merged, stats = self.backend.run_batch(
             job_ids, failure_script=failure_script, plan=plan,
             on_partial=publisher.on_partial if publisher is not None
             else None,
@@ -433,6 +493,10 @@ class QueryService:
             if self.stats.batches % self.refit_cost_every == 0:
                 self.cost_weights = planner_lib.fit_cost_weights(
                     self._telemetry, prior=self.cost_weights)
+                # calibrated weights live on the backend too: the
+                # scheduler's window-cost bounding recosts queued work
+                # against the backend it dispatches to
+                self.backend.cost_weights = self.cost_weights
 
         calib = window[0].calib_iters
         served = []

@@ -133,13 +133,27 @@ def count_aggregates(node: query_lib.Node) -> int:
     return 0
 
 
-def estimate_cost(expr_or_ast: Union[str, query_lib.Node], *,
-                  n_events: int, calib_iters: int = 0,
-                  weights: Optional[CostWeights] = None) -> float:
-    """Estimated cost of one query: events x calib work x aggregate depth.
+def cost_from_features(n_events: int, calib_iters: int, n_aggregates: int,
+                       *, weights: Optional[CostWeights] = None) -> float:
+    """The cost model evaluated on pre-extracted features:
 
     ``cost = n_events * (1 + calib_weight*calib_iters)
                       * (1 + agg_weight*n_aggregates)``
+
+    Pure arithmetic — callers that captured a query's features at
+    admission (``Submission.n_events`` / ``n_aggregates``) can recost it
+    under newly fitted weights without re-parsing; the scheduler's
+    window-cost bounding does exactly that every dispatch."""
+    w = weights or CostWeights()
+    return (float(n_events) * (1.0 + w.calib_weight * calib_iters)
+            * (1.0 + w.agg_weight * n_aggregates))
+
+
+def estimate_cost(expr_or_ast: Union[str, query_lib.Node], *,
+                  n_events: int, calib_iters: int = 0,
+                  weights: Optional[CostWeights] = None) -> float:
+    """Estimated cost of one query: events x calib work x aggregate depth
+    (see :func:`cost_from_features` for the formula).
 
     ``weights`` defaults to the static module constants (the cold-start
     prior); the service passes its fitted :class:`CostWeights` once
@@ -148,12 +162,10 @@ def estimate_cost(expr_or_ast: Union[str, query_lib.Node], *,
     calibrated query over the full store must cost more than a scalar
     cut), not predict wall-clock.
     """
-    w = weights or CostWeights()
     ast = (query_lib.parse(expr_or_ast)
            if isinstance(expr_or_ast, str) else expr_or_ast)
-    per_event = 1.0 + w.agg_weight * count_aggregates(ast)
-    return (float(n_events) * (1.0 + w.calib_weight * calib_iters)
-            * per_event)
+    return cost_from_features(n_events, calib_iters, count_aggregates(ast),
+                              weights=weights)
 
 
 def window_cost(exprs: Sequence[str], *, n_events: int,

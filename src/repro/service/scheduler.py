@@ -18,6 +18,16 @@ rejected even if it is under its count quota.  Count caps bound queue
 *length*; cost budgets bound queued *work* — a tenant submitting three
 6-aggregate calibrated full-store scans can be over budget while a tenant
 submitting thirty scalar cuts is not.
+
+Dispatch windows themselves are cost-bounded too: with
+``window_cost_budget`` set, ``next_batch`` fills a window by accumulated
+query cost instead of query count, recosting each queued submission with
+the *fitted* :class:`~repro.service.planner.CostWeights` of the execution
+backend it dispatches to (``backend.cost_weights``, installed by the
+service's telemetry refits — the static prior before any refit).  The
+``max_batch`` count cap is retained as the fallback bound, and a window
+always takes at least one submission so an over-budget query still runs
+alone rather than starving.
 """
 from __future__ import annotations
 
@@ -53,6 +63,11 @@ class Submission:
     calib_iters: int
     cost: float = 0.0
     stream: bool = False
+    # cost-model features captured at admission, so dispatch-time
+    # recosting under refitted weights is arithmetic (no re-parse):
+    # store events the query would sweep, and aggregate occurrences
+    n_events: int = 0
+    n_aggregates: int = 0
 
 
 class QueryScheduler:
@@ -70,18 +85,34 @@ class QueryScheduler:
         Cost budgets in planner cost units; ``None`` disables.  A
         submission is rejected when the submitting tenant's queued cost
         (or the global queued cost) would exceed the budget.
+    window_cost_budget:
+        Per-dispatch-window cost bound (planner cost units); ``None``
+        fills windows by count only (the pre-refactor behaviour).  When
+        set, ``next_batch`` stops filling once the next submission would
+        push the window's total *fitted* cost over the budget — the
+        ``max_batch`` count cap stays on as the fallback bound.
+    backend:
+        The :class:`~repro.core.backend.ExecutionBackend` this scheduler
+        dispatches to (the service wires it).  Its ``cost_weights``
+        (telemetry-fitted for that backend) recost queued submissions at
+        dispatch time; ``None`` falls back to each submission's
+        admission-time cost.
     """
 
     def __init__(self, *, max_batch: int = 64,
                  max_pending_per_tenant: int = 64,
                  max_pending_total: int = 512,
                  cost_budget_per_tenant: Optional[float] = None,
-                 cost_budget_total: Optional[float] = None):
+                 cost_budget_total: Optional[float] = None,
+                 window_cost_budget: Optional[float] = None,
+                 backend=None):
         self.max_batch = max_batch
         self.max_pending_per_tenant = max_pending_per_tenant
         self.max_pending_total = max_pending_total
         self.cost_budget_per_tenant = cost_budget_per_tenant
         self.cost_budget_total = cost_budget_total
+        self.window_cost_budget = window_cost_budget
+        self.backend = backend
         # OrderedDict keeps tenant rotation stable in arrival order
         self._pending: "OrderedDict[str, Deque[Submission]]" = OrderedDict()
         self._total = 0
@@ -144,34 +175,71 @@ class QueryScheduler:
         heads = [q[0] for q in self._pending.values() if q]
         return min(heads, key=lambda s: s.ticket) if heads else None
 
+    def dispatch_cost(self, sub: Submission) -> float:
+        """Cost of one queued submission under the CURRENT cost model.
+
+        Recosts the submission's admission-time features with the
+        execution backend's telemetry-fitted weights when the scheduler
+        is wired to a backend that has them; otherwise the admission-time
+        estimate stands.  This is what makes window-cost bounding track
+        the *fitted* model rather than the weights in force when the
+        query happened to be admitted."""
+        weights = getattr(self.backend, "cost_weights", None)
+        if weights is None or sub.n_events <= 0:
+            return sub.cost
+        return planner_lib.cost_from_features(
+            sub.n_events, sub.calib_iters, sub.n_aggregates,
+            weights=weights)
+
     def next_batch(self) -> List[Submission]:
         """One dispatch window: the shared-scan group (``calib_iters``) of
         the oldest pending query, filled round-robin across tenants up to
-        ``max_batch`` wide.  Dequeued submissions release their cost."""
+        ``max_batch`` wide — and, with ``window_cost_budget`` set, up to
+        that much fitted cost (:meth:`dispatch_cost`): the fill stops at
+        the first submission that would overflow the budget (no
+        cost-based queue jumping), but always takes at least one so an
+        over-budget query runs alone instead of starving.  A submission
+        whose canonical form is already in the window being filled is
+        FREE — the front-end dedups it onto the same execution, so
+        charging it would under-fill windows on hot-query traffic.
+        Dequeued submissions release their queued (admission-time)
+        cost."""
         oldest = self._oldest()
         if oldest is None:
             return []
         group = oldest.calib_iters
+        budget = self.window_cost_budget
+        window_cost = 0.0
+        window_canonicals: set = set()
         out: List[Submission] = []
         tenants = list(self._pending)
         start = self._rr % max(1, len(tenants))
-        progressed = True
-        while len(out) < self.max_batch and progressed:
+        progressed, capped = True, False
+        while len(out) < self.max_batch and progressed and not capped:
             progressed = False
             for off in range(len(tenants)):
                 if len(out) >= self.max_batch:
                     break
                 tenant = tenants[(start + off) % len(tenants)]
                 q = self._pending[tenant]
-                taken = self._take_matching(q, group)
-                if taken is not None:
-                    out.append(taken)
-                    self._total -= 1
-                    self._cost[tenant] = max(
-                        0.0, self._cost.get(tenant, 0.0) - taken.cost)
-                    self._cost_total = max(0.0,
-                                           self._cost_total - taken.cost)
-                    progressed = True
+                i = self._peek_matching(q, group)
+                if i is None:
+                    continue
+                sub = q[i]
+                cost = (0.0 if sub.canonical in window_canonicals
+                        else self.dispatch_cost(sub))
+                if budget is not None and out and window_cost + cost > budget:
+                    capped = True
+                    break
+                del q[i]
+                out.append(sub)
+                window_cost += cost
+                window_canonicals.add(sub.canonical)
+                self._total -= 1
+                self._cost[tenant] = max(
+                    0.0, self._cost.get(tenant, 0.0) - sub.cost)
+                self._cost_total = max(0.0, self._cost_total - sub.cost)
+                progressed = True
         self._rr += 1
         for tenant in [t for t, q in self._pending.items() if not q]:
             del self._pending[tenant]
@@ -179,12 +247,10 @@ class QueryScheduler:
         return out
 
     @staticmethod
-    def _take_matching(q: Deque[Submission],
-                       group: int) -> Optional[Submission]:
+    def _peek_matching(q: Deque[Submission], group: int) -> Optional[int]:
         for i, sub in enumerate(q):
             if sub.calib_iters == group:
-                del q[i]
-                return sub
+                return i
         return None
 
 
@@ -207,9 +273,11 @@ def make_submission(ticket: int, tenant: str, expr: str, calib_iters: int,
         canonical = query_lib.canonical_expr(expr)
     except query_lib.QueryError as e:
         raise AdmissionError(f"bad expression: {e}") from e
+    n_aggregates = planner_lib.count_aggregates(ast)
     cost = (planner_lib.estimate_cost(ast, n_events=n_events,
                                       calib_iters=calib_iters,
                                       weights=weights)
             if n_events > 0 else 0.0)
     return Submission(ticket, tenant, expr, canonical, calib_iters, cost,
-                      stream=stream)
+                      stream=stream, n_events=max(0, n_events),
+                      n_aggregates=n_aggregates)

@@ -1,0 +1,445 @@
+"""Unified execution backends: contract equivalence (simulated vs SPMD
+chunked streaming scan), prefix-merge bit-identity, Pallas epilogue
+fusion of fragment-plan targets, SPMD telemetry feeding cost-model
+calibration, window-cost-bounded dispatch, L2 persistence, and adaptive
+gossip fanout."""
+import numpy as np
+import pytest
+
+from repro.configs.geps_events import reduced
+from repro.core import events as ev
+from repro.core import merge as merge_lib
+from repro.core.backend import (SimulatedBackend, SpmdBackend,
+                                make_backend)
+from repro.core.brick import create_store
+from repro.core.catalog import DONE, MetadataCatalog
+from repro.fabric import SharedCacheTier, adaptive_fanout, rounds_bound
+from repro.service import (QueryScheduler, QueryService, fit_cost_weights,
+                           plan_window)
+
+CFG = reduced()
+SCHEMA = ev.EventSchema.from_config(CFG)
+
+POOL = ["e_total > 40 && count(pt > 15) >= 2",
+        "e_total > 30 && count(pt > 15) >= 2",
+        "e_t_miss > 25 && count(pt > 15) >= 2",
+        "pt_lead > 60 || n_tracks >= 8",
+        "e_total > 55 && sum(pt) < 400",
+        "e_total + 2 * e_t_miss > 120"]
+
+
+def make_store(n_events=192, n_nodes=4, seed=7):
+    return create_store(SCHEMA, n_events=n_events, n_nodes=n_nodes,
+                        events_per_brick=CFG.events_per_brick,
+                        replication=2, seed=seed)
+
+
+def run_window(backend, store, exprs, *, calib=0, ramp=None):
+    plan = plan_window(exprs)
+    jids = [backend.catalog.submit(e, calib, tuple(sorted(store.bricks)))
+            for e in exprs]
+    partials = []
+    merged, stats = backend.run_batch(jids, plan=plan,
+                                      on_partial=partials.append,
+                                      packet_ramp=ramp)
+    return merged, stats, partials
+
+
+def matched_backends(store, chunk=16):
+    """A (sim, spmd) pair with IDENTICAL packetization: fixed sim packets
+    of ``chunk`` events, spmd chunks of ``chunk`` events."""
+    sim = SimulatedBackend(MetadataCatalog(store.n_nodes), store,
+                           adaptive_packets=False)
+    sim.engine.adaptive_packets = False
+    spmd = SpmdBackend(MetadataCatalog(store.n_nodes), store,
+                       chunk_events=chunk)
+    # the sim's fixed packet size is the scheduler base (64); pin it to
+    # the spmd chunk so decompositions line up exactly
+    return sim, spmd
+
+
+def assert_window_equivalent(sim_out, spmd_out):
+    (m1, s1, p1), (m2, s2, p2) = sim_out, spmd_out
+    assert s1.packets == s2.packets == len(p1) == len(p2)
+    for a, b in zip(m1, m2):
+        assert merge_lib.results_identical(a, b)
+    for pa, pb in zip(p1, p2):
+        assert (pa.seq, pa.brick_id, pa.start, pa.size) == \
+               (pb.seq, pb.brick_id, pb.start, pb.size)
+        assert all(merge_lib.results_identical(a, b)
+                   for a, b in zip(pa.partials, pb.partials))
+    assert set(s1.fragment_results) == set(s2.fragment_results)
+    for key, res in s1.fragment_results.items():
+        assert merge_lib.results_identical(res, s2.fragment_results[key])
+
+
+# ----------------------- contract equivalence --------------------------- #
+def test_backends_bit_identical_on_matched_packetization():
+    store = make_store()
+    sim, spmd = matched_backends(store, chunk=64)
+    out1 = run_window(sim, store, POOL, calib=2)
+    out2 = run_window(spmd, store, POOL, calib=2)
+    assert_window_equivalent(out1, out2)
+    # both catalogues converged to DONE with the same result summaries
+    for cat in (sim.catalog, spmd.catalog):
+        assert all(r.status == DONE for r in cat.jobs.values())
+
+
+def test_backend_equivalence_property():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    store = make_store(n_events=96)
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 99),
+           calib=st.sampled_from([0, 2]),
+           k=st.integers(1, 4))
+    def check(seed, calib, k):
+        rng = np.random.default_rng(seed)
+        exprs = [POOL[i] for i in rng.choice(len(POOL), size=k,
+                                             replace=False)]
+        sim, spmd = matched_backends(store, chunk=64)
+        assert_window_equivalent(
+            run_window(sim, store, exprs, calib=calib),
+            run_window(spmd, store, exprs, calib=calib))
+
+    check()
+
+
+def test_spmd_prefix_snapshots_bit_identical_to_tree_merge():
+    store = make_store()
+    spmd = SpmdBackend(MetadataCatalog(store.n_nodes), store,
+                       chunk_events=16)
+    merged, stats, partials = run_window(spmd, store, POOL[:3])
+    assert stats.packets == len(partials) > 1
+    for col in range(len(POOL[:3])):
+        acc = merge_lib.MergeAccumulator()
+        for k, pp in enumerate(partials, 1):
+            acc.add(pp.partials[col], brick_id=pp.brick_id)
+            want = merge_lib.tree_merge(
+                [p.partials[col] for p in partials[:k]])
+            assert merge_lib.results_identical(acc.snapshot(), want)
+        assert merge_lib.results_identical(acc.snapshot(), merged[col])
+    # merge order is deterministic: brick id ascending, offset ascending
+    order = [(p.brick_id, p.start) for p in partials]
+    assert order == sorted(order)
+    # wall-clock availability stamps are non-decreasing
+    times = [p.t_virtual for p in partials]
+    assert times == sorted(times)
+
+
+def test_spmd_packet_ramp_caps_early_chunks():
+    store = make_store()
+    spmd = SpmdBackend(MetadataCatalog(store.n_nodes), store,
+                       chunk_events=16)
+    _, _, partials = run_window(spmd, store, ["e_total > 40"], ramp=4)
+    assert partials[0].size == 4
+    assert partials[1].size == 8
+    assert max(p.size for p in partials) <= 16
+
+
+def test_spmd_rejects_failure_script():
+    store = make_store()
+    spmd = SpmdBackend(MetadataCatalog(store.n_nodes), store)
+    assert not spmd.supports_failure_injection
+    jid = spmd.catalog.submit("e_total > 40", 0,
+                              tuple(sorted(store.bricks)))
+    with pytest.raises(ValueError, match="simulated-grid"):
+        spmd.run_batch([jid], failure_script={0.5: 1})
+
+
+def test_service_rejects_failure_script_before_dequeue():
+    store = make_store()
+    svc = QueryService(store, backend="spmd")
+    tid = svc.submit("e_total > 40", stream=True)
+    with pytest.raises(ValueError, match="failure"):
+        svc.step(failure_script={1.0: 2})
+    # nothing was mutated: the window is still queued, the ticket
+    # pending, the stream open — the query runs fine afterwards
+    assert svc.scheduler.n_pending == 1
+    assert svc.result(tid).status == "QUEUED"
+    assert not svc.stream(tid).closed
+    svc.step()
+    assert svc.result(tid).status == "SERVED"
+    assert svc.stream(tid).done
+    svc.close()
+
+
+def test_service_rejects_simulation_knobs_on_spmd_backend():
+    from repro.core.jse import TimeModel
+    store = make_store()
+    with pytest.raises(ValueError, match="simulation knobs"):
+        QueryService(store, backend="spmd", time_model=TimeModel())
+    spmd = SpmdBackend(MetadataCatalog(store.n_nodes), store)
+    with pytest.raises(ValueError, match="pre-built instance"):
+        QueryService(store, backend=spmd, node_speed={0: 0.5})
+
+
+def test_make_backend_factory():
+    store = make_store()
+    cat = MetadataCatalog(store.n_nodes)
+    assert isinstance(make_backend("sim", cat, store), SimulatedBackend)
+    assert isinstance(make_backend("spmd", cat, store), SpmdBackend)
+    with pytest.raises(ValueError, match="unknown backend"):
+        make_backend("tpu", cat, store)
+
+
+# ----------------------- Pallas epilogue fusion ------------------------- #
+def test_match_epilogue_relaxed_family():
+    from repro.kernels.event_filter import ops as ef_ops
+    full = ef_ops.match_epilogue(
+        "e_total > 40 && count(pt > 15) >= 2 && sum(pt) < 400", SCHEMA)
+    assert full["scalar_thresh"] == 40 and full["min_count"] == 2 \
+        and full["sum_cap"] == 400
+    bare_count = ef_ops.match_epilogue("count(pt > 15) >= 2", SCHEMA)
+    assert bare_count is not None
+    assert bare_count["scalar_thresh"] == float("-inf")
+    assert bare_count["min_count"] == 2
+    lone_scalar = ef_ops.match_epilogue("e_t_miss > 25", SCHEMA)
+    assert lone_scalar is not None and lone_scalar["min_count"] == 0
+    # outside the conjunctive family
+    assert ef_ops.match_epilogue("pt_lead > 60 || n_tracks >= 8",
+                                 SCHEMA) is None
+    assert ef_ops.match_epilogue("e_total + 2 * e_t_miss > 120",
+                                 SCHEMA) is None
+    assert ef_ops.match_epilogue("sum(pt) < 0", SCHEMA) is None  # aliases
+    assert ef_ops.match_epilogue("nope > 3", SCHEMA) is None
+
+
+def test_spmd_pallas_fusion_matches_jnp_plan():
+    store = make_store(n_events=96)
+    exprs = POOL[:3]  # shared count fragment -> materialized target
+    plan = plan_window(exprs)
+    assert plan.materialize, "expected a materialized shared fragment"
+    ref = SpmdBackend(MetadataCatalog(store.n_nodes), store,
+                      chunk_events=32)
+    fused = SpmdBackend(MetadataCatalog(store.n_nodes), store,
+                        chunk_events=32, use_pallas=True)
+    # the fusion hook actually engages for this window (every target —
+    # roots AND the materialized boolean fragment — is in-family)
+    assert fused._fuse_plan(plan) is not None
+    out_ref = run_window(ref, store, exprs, calib=2)
+    out_fused = run_window(fused, store, exprs, calib=2)
+    assert_window_equivalent(out_ref, out_fused)
+
+
+def test_spmd_pallas_falls_back_on_out_of_family_target():
+    store = make_store(n_events=64)
+    fused = SpmdBackend(MetadataCatalog(store.n_nodes), store,
+                        use_pallas=True)
+    plan = plan_window(["pt_lead > 60 || n_tracks >= 8"])
+    assert fused._fuse_plan(plan) is None
+    merged, _, _ = run_window(fused, store,
+                              ["pt_lead > 60 || n_tracks >= 8"])
+    sim = SimulatedBackend(MetadataCatalog(store.n_nodes), store,
+                           adaptive_packets=False)
+    want, _, _ = run_window(sim, store, ["pt_lead > 60 || n_tracks >= 8"])
+    assert merge_lib.results_identical(merged[0], want[0])
+
+
+# ----------------------- service integration ---------------------------- #
+def test_service_backend_agnostic_end_to_end():
+    store = make_store()
+    results = {}
+    for kind in ("sim", "spmd"):
+        svc = QueryService(store, backend=kind, use_cache=True)
+        tid = svc.submit(POOL[0], stream=True)
+        tid2 = svc.submit(POOL[3])
+        svc.drain()
+        t = svc.result(tid)
+        assert t.status == "SERVED"
+        stream = svc.stream(tid)
+        assert stream.done and stream.latest().final
+        assert merge_lib.results_identical(stream.latest().result,
+                                           t.result)
+        assert stream.latest().coverage.complete
+        # repeat submission is a zero-I/O cache hit on either backend
+        tid3 = svc.submit(POOL[0])
+        assert svc.result(tid3).from_cache
+        results[kind] = (t.result, svc.result(tid2).result)
+        svc.close()
+    for a, b in zip(results["sim"], results["spmd"]):
+        assert a.n_selected == b.n_selected
+        assert a.n_processed == b.n_processed
+        assert np.array_equal(a.hist, b.hist)
+        assert np.array_equal(a.selected_ids, b.selected_ids)
+        # different default packetizations regroup the float additions;
+        # every decomposition-invariant field above is exact
+        assert np.isclose(a.sum_var, b.sum_var, rtol=1e-6)
+
+
+def test_service_adopts_instance_backend_catalog():
+    store = make_store()
+    spmd = SpmdBackend(MetadataCatalog(store.n_nodes), store)
+    svc = QueryService(store, backend=spmd)
+    assert svc.catalog is spmd.catalog and svc.backend is spmd
+    assert svc.jse is None  # no simulation engine behind this service
+    with pytest.raises(ValueError, match="share one catalogue"):
+        QueryService(store, MetadataCatalog(store.n_nodes), backend=spmd)
+    other = make_store(seed=9)
+    with pytest.raises(ValueError, match="different brick store"):
+        QueryService(other, backend=spmd)
+
+
+def test_spmd_telemetry_calibrates_cost_model():
+    store = make_store()
+    spmd = SpmdBackend(MetadataCatalog(store.n_nodes), store,
+                       chunk_events=16)
+    rows = []
+    for calib in (0, 4):
+        _, stats, _ = run_window(spmd, store, POOL[:2], calib=calib)
+        rows.extend(stats.packet_telemetry)
+    assert all(t.wall_s > 0 and t.n_targets == 3 for t in rows)
+    weights = fit_cost_weights(rows)
+    assert weights.fitted and weights.scale > 0
+    # service wiring: a refit lands on the backend for the scheduler
+    svc = QueryService(store, backend="spmd", refit_cost_every=1)
+    svc.submit(POOL[0]), svc.submit(POOL[1])
+    svc.drain()
+    assert svc.cost_weights is not None
+    assert svc.backend.cost_weights is svc.cost_weights
+    assert svc.scheduler.backend is svc.backend
+    svc.close()
+
+
+# ----------------------- window-cost bounding --------------------------- #
+def test_window_filled_by_cost_not_count():
+    store = make_store(n_events=512)
+    sched = QueryScheduler(max_batch=64, window_cost_budget=1100.0)
+    svc = QueryService(store, scheduler=sched, use_cache=False)
+    for i in range(6):
+        svc.submit(f"e_total > {40 + i}")  # cost 512 each (no aggs)
+    assert len(sched.next_batch()) == 2    # 512 + 512 <= 1100 < 1536
+    assert len(sched.next_batch()) == 2
+    svc.close()
+
+
+def test_window_cost_budget_never_starves():
+    store = make_store(n_events=512)
+    sched = QueryScheduler(window_cost_budget=10.0)
+    svc = QueryService(store, scheduler=sched, use_cache=False)
+    svc.submit("e_total > 1"), svc.submit("e_total > 2")
+    assert len(sched.next_batch()) == 1    # over-budget query runs alone
+    assert len(sched.next_batch()) == 1
+    svc.close()
+
+
+def test_window_cost_recosted_with_fitted_weights():
+    from repro.service.planner import CostWeights
+    sched = QueryScheduler(max_batch=8, window_cost_budget=1600.0)
+    svc = QueryService(make_store(n_events=512), scheduler=sched,
+                       use_cache=False)
+    for i in range(4):
+        svc.submit(f"e_total > {30 + i} && count(pt > {10 + i}) >= 2")
+    # static prior: cost = 512 * (1 + 4*1) = 2560 > budget -> one alone
+    assert len(sched.next_batch()) == 1
+    # a refit that learned aggregates are cheap: 512 * 1.5 = 768 each,
+    # so two now fit under the same budget
+    svc.backend.cost_weights = CostWeights(agg_weight=0.5, fitted=True)
+    assert len(sched.next_batch()) == 2
+    svc.close()
+
+
+def test_window_cost_duplicates_ride_free():
+    # the front-end dedups identical canonical queries onto ONE
+    # execution, so only the first occurrence charges the window budget
+    store = make_store(n_events=512)
+    sched = QueryScheduler(max_batch=64, window_cost_budget=600.0)
+    svc = QueryService(store, scheduler=sched, use_cache=False)
+    for i in range(5):
+        svc.submit("e_total > 40", tenant=f"t{i}")   # cost 512, same scan
+    svc.submit("e_total > 99", tenant="t5")          # second distinct scan
+    window = sched.next_batch()
+    assert len(window) == 5                          # dupes free; 512+512
+    assert {s.canonical for s in window} == \
+        {"(e_total > 40.0)"}                         # > 600 stops the 2nd
+    svc.close()
+
+
+def test_count_cap_still_bounds_cheap_windows():
+    sched = QueryScheduler(max_batch=3, window_cost_budget=1e12)
+    svc = QueryService(make_store(), scheduler=sched, use_cache=False)
+    for i in range(5):
+        svc.submit(f"e_total > {i}")
+    assert len(sched.next_batch()) == 3    # count cap is the fallback
+    svc.close()
+
+
+# ----------------------- L2 persistence --------------------------------- #
+def test_shared_tier_persists_and_survives_restart(tmp_path):
+    tier = SharedCacheTier(capacity=8)
+    res = merge_lib.from_mask(np.array([1, 0, 1]),
+                              np.array([10.0, 20.0, 30.5], np.float32),
+                              np.array([7, 8, 9]))
+    tier.put("(e_total > 40.0)", 2, 0, res, vv={"fe0": 1})
+    path = tmp_path / "l2.json"
+    tier.save(path)
+    loaded = SharedCacheTier.load(path)
+    hit = loaded.get("(e_total > 40.0)", 2, 0, vv={"fe0": 1})
+    assert hit is not None and merge_lib.results_identical(hit, res)
+    # the persisted join still guards hygiene after the restart: a newer
+    # vector advances the join and purges the reloaded entry...
+    assert loaded.get("(e_total > 40.0)", 2, 0, vv={"fe0": 2}) is None
+    assert loaded.stats.invalidated == 1
+    # ...after which the OLD vector is refused as stale
+    assert loaded.get("(e_total > 40.0)", 2, 0, vv={"fe0": 1}) is None
+    assert loaded.stats.stale_refused == 1
+
+
+def test_shared_tier_roundtrip_preserves_lru_order_and_join():
+    tier = SharedCacheTier(capacity=2)
+    r1 = merge_lib.QueryResult(n_selected=1, n_processed=2, sum_var=0.5)
+    r2 = merge_lib.QueryResult(n_selected=3, n_processed=4, sum_var=1.5)
+    tier.put("a", 0, 1, r1, vv={"fe0": 1})
+    tier.put("b", 0, 1, r2, vv={"fe0": 1})
+    loaded = SharedCacheTier.from_json(tier.to_json())
+    assert len(loaded) == 2
+    assert loaded._fp(loaded._join) == tier._fp(tier._join)
+    # LRU order survived: inserting one more evicts "a", not "b"
+    loaded.put("c", 0, 1, r1, vv={"fe0": 1})
+    assert loaded.get("a", 0, 1, vv={"fe0": 1}) is None
+    assert loaded.get("b", 0, 1, vv={"fe0": 1}) is not None
+
+
+def test_query_result_dict_roundtrip_bit_identical():
+    rng = np.random.default_rng(3)
+    res = merge_lib.from_mask(rng.integers(0, 2, 50),
+                              rng.uniform(0, 500, 50).astype(np.float32),
+                              rng.integers(0, 10**6, 50))
+    back = merge_lib.QueryResult.from_dict(res.to_dict())
+    assert merge_lib.results_identical(res, back)
+    import json
+    via_json = merge_lib.QueryResult.from_dict(
+        json.loads(json.dumps(res.to_dict())))
+    assert merge_lib.results_identical(res, via_json)
+
+
+# ----------------------- adaptive gossip fanout ------------------------- #
+def test_adaptive_fanout_scales_with_fleet_size():
+    assert adaptive_fanout(1) == 1
+    assert adaptive_fanout(2) == 1
+    assert adaptive_fanout(4) == 2
+    assert adaptive_fanout(8) == 3
+    assert adaptive_fanout(16) == 4
+    assert rounds_bound(16) == 4          # ceil(15/4) with adaptive fanout
+    assert rounds_bound(16, 1) == 15      # explicit fanout still honoured
+    assert rounds_bound(1) == 0
+
+
+def test_fleet_defaults_to_adaptive_fanout():
+    from repro.fabric import Fleet
+    store = make_store()
+    fleet = Fleet(store, 4)
+    try:
+        assert fleet.gossip_fanout == adaptive_fanout(4) == 2
+        assert fleet.rounds_bound == rounds_bound(4)
+        assert all(len(fe.gossip.targets()) == 2
+                   for fe in fleet.frontends)
+        # a bump still reaches every peer within the documented bound
+        fleet.bump_dataset_version(0)
+        fleet.pump(fleet.rounds_bound)
+        assert all(fe.catalog.dataset_epoch == 1
+                   for fe in fleet.frontends)
+    finally:
+        fleet.close()
