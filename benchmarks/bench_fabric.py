@@ -21,6 +21,12 @@ Three claims under test, on a fleet of 4 front-ends over one brick store:
    so later whole-query submissions of it never scan; total per-brick
    fragment evaluations drop below per-window factoring alone.
 
+Plus the observability acceptance pass: the same workload replayed with
+``Fleet(obs=True)`` must produce a schema-valid fleet trace (written as
+Perfetto-loadable ``BENCH_fabric_trace.json`` outside smoke) whose
+fleet-merged metric counters reconcile EXACTLY with the service-stats
+aggregation (L1 + L2 hit counters vs ``fleet_stats``).
+
 Run: ``PYTHONPATH=src python benchmarks/bench_fabric.py``
 (writes a ``BENCH_fabric.json`` snapshot next to this file;
 ``BENCH_SMOKE=1`` shrinks sizes and skips the snapshot + perf asserts).
@@ -35,9 +41,12 @@ from repro.configs.geps_events import reduced
 from repro.core import events as ev
 from repro.core.brick import create_store
 from repro.fabric import Fleet, FragmentRegistry
+from repro.obs import trace as trace_lib
 from repro.service import QueryService
 
 OUT = pathlib.Path(__file__).resolve().parent / "BENCH_fabric.json"
+TRACE_OUT = pathlib.Path(__file__).resolve().parent / \
+    "BENCH_fabric_trace.json"
 
 N_EVENTS = 4096
 N_NODES = 8
@@ -89,6 +98,40 @@ def run_fleet(store, *, shared_cache: bool) -> dict:
     stats = fleet.fleet_stats()
     fleet.close()
     return stats
+
+
+def run_obs_fleet(store) -> dict:
+    """The skewed workload again with the observability plane ON: the
+    fleet-merged metrics must reconcile exactly with ``fleet_stats``,
+    the trace must schema-validate, and (outside smoke) the Chrome
+    trace lands next to the snapshot, Perfetto-loadable."""
+    fleet = Fleet(store, N_FRONTENDS, obs=True)
+    for i, (tenant, expr) in enumerate(skewed_workload(N_QUERIES)):
+        fleet.submit(expr, tenant=tenant)
+        if (i + 1) % WINDOW == 0:
+            fleet.step()
+    fleet.drain()
+    stats = fleet.fleet_stats()
+    snap = fleet.metrics_snapshot()
+    recs = fleet.trace_records()
+    problems = trace_lib.validate_records(recs)
+    assert not problems, f"fleet trace invalid: {problems[:5]}"
+    l1, l2 = snap.value("cache.hits_l1"), snap.value("cache.hits_l2")
+    assert l1 + l2 == stats["cache_hits"], \
+        f"obs cache counters {l1}+{l2} != fleet_stats " \
+        f"{stats['cache_hits']}"
+    assert l2 == stats["l2_hits"], \
+        f"obs L2 counter {l2} != fleet_stats {stats['l2_hits']}"
+    assert snap.value("tickets.served") == stats["served"], \
+        "obs tickets.served != fleet_stats served"
+    out = {"trace_records": len(recs), "cache_hits_l1": l1,
+           "cache_hits_l2": l2,
+           "tickets_served": snap.value("tickets.served")}
+    if not smoke():
+        fleet.save_chrome_trace(TRACE_OUT)
+        out["trace_file"] = TRACE_OUT.name
+    fleet.close()
+    return out
 
 
 def remote_first_result_latency(store, *, shared_cache: bool) -> float:
@@ -151,6 +194,12 @@ def main():
           f"{shared['l2_hits']},{shared['events_scanned']}")
     print(f"independent,{indep['hit_rate']:.3f},{indep['cache_hits']},"
           f"{indep['l2_hits']},{indep['events_scanned']}")
+
+    obs = run_obs_fleet(store)
+    print(f"obs_fleet,trace_records={obs['trace_records']},"
+          f"hits_l1={obs['cache_hits_l1']:.0f},"
+          f"hits_l2={obs['cache_hits_l2']:.0f},"
+          f"served={obs['tickets_served']:.0f},reconciled=exact")
 
     lat_shared = remote_first_result_latency(store, shared_cache=True)
     lat_indep = remote_first_result_latency(store, shared_cache=False)

@@ -16,6 +16,9 @@ table.  Prints ``name,value,derived`` CSV blocks.
                  vs simulated grid (bit-identical results, wall-clock
                  time-to-first-partial; BENCH_backend.json)
   query_spmd   - SPMD grid-brick query step micro-benchmark (real compute)
+  perf_probe   - lower one (arch x shape) cell and report roofline terms
+                 (subprocess: the probe must set XLA_FLAGS before jax
+                 imports; skipped gracefully on timeout/failure)
   roofline     - per-(arch x shape) terms from the dry-run artifacts
                  (skipped unless artifacts exist; see launch/dryrun.py)
 
@@ -106,6 +109,31 @@ def main(argv=None) -> None:
         label = "pallas_interpret" if use_pallas else "xla"
         print(f"query_spmd_{label},{us:.0f}us_per_call,"
               f"selected={int(out['n_selected'])}")
+
+    _section("perf probe (lower one cell, roofline terms)")
+    # subprocess on purpose: the probe must set XLA_FLAGS (host device
+    # count) BEFORE jax is imported, and this harness imported jax above
+    import pathlib
+    import subprocess
+    import sys
+    probe_arch = "xlstm-350m" if args.smoke else "starcoder2-3b"
+    try:
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.perf_probe",
+             "--arch", probe_arch, "--shape", "train_4k"],
+            capture_output=True, text=True,
+            timeout=240 if args.smoke else 600,
+            cwd=pathlib.Path(__file__).resolve().parent.parent,
+            env={**os.environ,
+                 "PYTHONPATH": "src" + os.pathsep
+                 + os.environ.get("PYTHONPATH", "")})
+        if proc.returncode == 0:
+            print(proc.stdout.strip())
+        else:
+            print(f"perf_probe,skipped,rc={proc.returncode}: "
+                  f"{proc.stderr.strip().splitlines()[-1][:120] if proc.stderr.strip() else ''}")
+    except subprocess.TimeoutExpired:
+        print("perf_probe,skipped,timeout")
 
     _section("roofline (from dry-run artifacts)")
     try:

@@ -6,16 +6,18 @@
 - Fenced ``bash`` blocks must shlex-parse line by line (no mangled
   commands in quickstarts).
 - Relative markdown links must resolve to files in the repo.
-- No ``*.pyc`` / ``__pycache__`` files may be tracked by git.
+- No ``*.pyc`` / ``__pycache__`` files may be tracked by git — checked
+  against both the file list and the HEAD tree, so a committed
+  ``__pycache__`` *directory* fails even if its files were filtered.
 - Public-API doc coverage: every public module / class / function /
-  method in ``src/repro/core``, ``src/repro/service`` and
-  ``src/repro/fabric`` must carry a docstring (the packages tenants
-  program against stay documented).
-- Backend-contract coverage: every public top-level symbol of
-  ``src/repro/core/backend.py`` (the execution-backend contract the
-  whole service tier programs against) must be mentioned by name in
-  ``docs/backends.md`` — adding a backend API without documenting the
-  contract fails CI.
+  method in ``src/repro/core``, ``src/repro/service``,
+  ``src/repro/fabric`` and ``src/repro/obs`` must carry a docstring
+  (the packages tenants program against stay documented).
+- Contract coverage: every public top-level symbol of
+  ``src/repro/core/backend.py`` must be mentioned by name in
+  ``docs/backends.md``, and every public top-level symbol of the
+  ``src/repro/obs`` modules in ``docs/observability.md`` — adding an
+  API without documenting the contract fails CI.
 
 Exits non-zero with a per-finding report on any violation.
 """
@@ -31,7 +33,8 @@ import sys
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 FENCE_RE = re.compile(r"^```(\w*)\s*$")
 LINK_RE = re.compile(r"\[[^\]]+\]\(([^)#]+)(?:#[^)]*)?\)")
-API_PACKAGES = ("src/repro/core", "src/repro/service", "src/repro/fabric")
+API_PACKAGES = ("src/repro/core", "src/repro/service", "src/repro/fabric",
+                "src/repro/obs")
 
 
 def doc_files():
@@ -120,41 +123,66 @@ def check_api_docs():
     return errors
 
 
-def check_backend_contract_doc():
-    """Every public top-level name in core/backend.py (classes,
-    functions, and UPPERCASE constants) must appear in docs/backends.md
-    (see module docstring)."""
-    src = ROOT / "src/repro/core/backend.py"
-    doc = ROOT / "docs/backends.md"
+def _contract_doc_errors(sources, doc_rel):
+    """Every public top-level name (classes, functions, UPPERCASE
+    constants) in ``sources`` must appear in the contract doc
+    ``doc_rel``."""
+    doc = ROOT / doc_rel
     if not doc.exists():
-        return [f"{src.relative_to(ROOT)}: contract doc "
-                f"docs/backends.md is missing"]
+        return [f"contract doc {doc_rel} is missing"]
     text = doc.read_text()
     errors = []
-    for node in ast.parse(src.read_text()).body:
-        names = []
-        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
-                             ast.ClassDef)):
-            names = [node.name]
-        elif isinstance(node, ast.Assign):
-            names = [t.id for t in node.targets
-                     if isinstance(t, ast.Name) and t.id.isupper()]
-        for name in names:
-            if name.startswith("_"):
-                continue
-            if not re.search(rf"\b{re.escape(name)}\b", text):
-                errors.append(
-                    f"docs/backends.md: public backend symbol "
-                    f"{name!r} is undocumented in the contract doc")
+    for src in sources:
+        for node in ast.parse(src.read_text()).body:
+            names = []
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                names = [node.name]
+            elif isinstance(node, ast.Assign):
+                names = [t.id for t in node.targets
+                         if isinstance(t, ast.Name) and t.id.isupper()]
+            for name in names:
+                if name.startswith("_"):
+                    continue
+                if not re.search(rf"\b{re.escape(name)}\b", text):
+                    errors.append(
+                        f"{doc_rel}: public symbol {name!r} "
+                        f"({src.relative_to(ROOT)}) is undocumented in "
+                        f"the contract doc")
     return errors
 
 
+def check_backend_contract_doc():
+    """Every public top-level name in core/backend.py must appear in
+    docs/backends.md (see module docstring)."""
+    return _contract_doc_errors([ROOT / "src/repro/core/backend.py"],
+                                "docs/backends.md")
+
+
+def check_obs_contract_doc():
+    """Every public top-level name of the observability package must
+    appear in docs/observability.md (span taxonomy / metric catalog /
+    health semantics stay in sync with the code)."""
+    return _contract_doc_errors(
+        sorted((ROOT / "src/repro/obs").glob("*.py")),
+        "docs/observability.md")
+
+
 def check_no_tracked_pyc():
+    """No bytecode in git: neither tracked ``*.pyc``/``__pycache__``
+    files, nor a committed ``__pycache__`` directory in the HEAD tree
+    (``ls-tree -rd`` sees tree entries that ``ls-files`` can miss)."""
     out = subprocess.run(["git", "ls-files"], cwd=ROOT, check=True,
                          capture_output=True, text=True).stdout
     bad = [f for f in out.splitlines()
            if f.endswith(".pyc") or "__pycache__" in f]
-    return [f"tracked bytecode must not be committed: {f}" for f in bad]
+    errors = [f"tracked bytecode must not be committed: {f}" for f in bad]
+    tree = subprocess.run(["git", "ls-tree", "-rd", "--name-only", "HEAD"],
+                          cwd=ROOT, check=False,
+                          capture_output=True, text=True).stdout
+    errors += [f"committed __pycache__ directory: {d}"
+               for d in tree.splitlines() if d.endswith("__pycache__")]
+    return errors
 
 
 def main() -> int:
@@ -164,6 +192,7 @@ def main() -> int:
     errors += check_no_tracked_pyc()
     errors += check_api_docs()
     errors += check_backend_contract_doc()
+    errors += check_obs_contract_doc()
     if errors:
         print(f"check_docs: {len(errors)} problem(s)")
         for e in errors:

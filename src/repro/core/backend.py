@@ -127,6 +127,18 @@ class SimulatedBackend:
         #: script fails fast with no state mutated
         self.supports_failure_injection = True
 
+    @property
+    def obs(self):
+        """Observability plane handle — stored on the wrapped engine (the
+        simulation loop is where packets are scanned), surfaced here so
+        the service can install/inspect it backend-agnostically."""
+        return self.engine.obs
+
+    @obs.setter
+    def obs(self, value):
+        """Install the plane on the wrapped engine."""
+        self.engine.obs = value
+
     def submit(self, expr: str, calib_iters: int = 0) -> int:
         """Register a job over every brick in the store (engine passthrough)."""
         return self.engine.submit(expr, calib_iters)
@@ -201,6 +213,8 @@ class SpmdBackend:
         self.cost_weights = None  # installed by the service after refits
         #: shards are resident compute state, not killable virtual nodes
         self.supports_failure_injection = False
+        # observability plane (repro.obs.Observability); None = disabled
+        self.obs = None
 
     # ------------------------------------------------------------------ #
     def _chunk_size(self, seq: int, remaining: int,
@@ -270,6 +284,7 @@ class SpmdBackend:
                 "SimulatedBackend for failure experiments)")
         rec, plan = prepare_window(self.catalog, job_ids, plan)
 
+        obs = self.obs
         stats = JobStats(n_queries=len(job_ids))
         plan_aggs = query_lib.unique_aggregates(plan.targets())
         fused = self._fuse_plan(plan)
@@ -283,6 +298,14 @@ class SpmdBackend:
             start = 0
             while start < n:
                 size = self._chunk_size(seq, n - start, ramp)
+                pkt_span = None
+                if obs is not None:
+                    pkt_span = obs.tracer.begin(
+                        "packet",
+                        t_virtual=(obs.tracer.virtual_base
+                                   + time.perf_counter() - t_start),
+                        seq=seq, brick=bid, start=start, size=size,
+                        node=owner)
                 t0 = time.perf_counter()
                 res = self._eval_chunk(plan, fused, bid, start, size,
                                        rec.calib_iters)
@@ -290,7 +313,16 @@ class SpmdBackend:
                 stats.packet_telemetry.append(PacketTelemetry(
                     size=size, calib_iters=rec.calib_iters,
                     n_aggregates=plan_aggs, wall_s=wall,
-                    n_targets=len(plan.targets())))
+                    n_targets=len(plan.targets()), node=owner))
+                if obs is not None:
+                    obs.tracer.end(
+                        pkt_span,
+                        t_virtual=(obs.tracer.virtual_base
+                                   + time.perf_counter() - t_start))
+                    obs.metrics.counter("packet.count").inc()
+                    obs.metrics.histogram("packet.latency_s").observe(wall)
+                    obs.metrics.histogram("packet.events").observe(size)
+                    obs.health.observe_packet(owner, size, wall)
                 results.append(res)
                 stats.events_scanned += size
                 stats.fragment_evals += plan.evals_per_batch

@@ -97,12 +97,17 @@ class PacketTelemetry:
     observable the planner's cost-model calibration
     (``planner.fit_cost_weights``) regresses on — virtual time charges a
     flat per-event rate, but the actual numpy/JAX compute scales with
-    calibration and aggregate depth."""
+    calibration and aggregate depth.
+
+    ``node`` attributes the measurement to the grid node that scanned the
+    packet (-1 when unknown) — the observability plane's health monitor
+    (``repro.obs.health``) folds these into per-node latency EWMAs."""
     size: int
     calib_iters: int
     n_aggregates: int
     wall_s: float
     n_targets: int = 1
+    node: int = -1
 
 
 @dataclasses.dataclass
@@ -205,6 +210,10 @@ class JobSubmissionEngine:
         # growing by `ramp_factor` per completed packet (None disables)
         self.packet_ramp = packet_ramp
         self.ramp_factor = ramp_factor
+        # observability plane (repro.obs.Observability); None = disabled,
+        # and every instrumentation site below is a single `is not None`
+        # test on the disabled path
+        self.obs = None
 
     # ------------------------------------------------------------------ #
     def submit(self, expr: str, calib_iters: int = 0) -> int:
@@ -306,6 +315,7 @@ class JobSubmissionEngine:
             return ([merge_lib.QueryResult() for _ in job_ids],
                     JobStats(n_queries=len(job_ids)))
 
+        obs = self.obs
         stats = JobStats(n_queries=len(job_ids))
         plan_aggs = query_lib.unique_aggregates(plan.targets())
         results: List[List[merge_lib.QueryResult]] = []
@@ -331,6 +341,13 @@ class JobSubmissionEngine:
                     sched.requeue_node(victim)
                     stats.failures += 1
                     stats.reassigned += 1
+                    if obs is not None:
+                        obs.tracer.event(
+                            "node_death",
+                            t_virtual=obs.tracer.virtual_base + now,
+                            node=victim)
+                        obs.metrics.counter("grid.node_deaths").inc()
+                        obs.health.observe_failure(victim)
             if not self.catalog.node(node).alive:
                 continue
             pkt = sched.next_packet(node)
@@ -338,15 +355,21 @@ class JobSubmissionEngine:
                 if sched.inflight:
                     heapq.heappush(heap, (now + 0.01, node))
                 continue
+            pkt_span = None
+            if obs is not None:
+                pkt_span = obs.tracer.begin(
+                    "packet", t_virtual=obs.tracer.virtual_base + now,
+                    seq=len(results), brick=pkt.brick_id, start=pkt.start,
+                    size=pkt.size, node=node)
             t_wall = time.perf_counter()
             res = self._eval_packet_batch(plan, pkt.brick_id,
                                           pkt.start, pkt.size,
                                           rec.calib_iters)
+            wall_s = time.perf_counter() - t_wall
             stats.packet_telemetry.append(PacketTelemetry(
                 size=pkt.size, calib_iters=rec.calib_iters,
-                n_aggregates=plan_aggs,
-                wall_s=time.perf_counter() - t_wall,
-                n_targets=len(plan.targets())))
+                n_aggregates=plan_aggs, wall_s=wall_s,
+                n_targets=len(plan.targets()), node=node))
             results.append(res)
             stats.events_scanned += pkt.size
             stats.fragment_evals += plan.evals_per_batch
@@ -356,6 +379,14 @@ class JobSubmissionEngine:
             if node not in staged:
                 dur += self.tm.stage_overhead_s
                 staged.add(node)
+            if obs is not None:
+                obs.tracer.end(
+                    pkt_span,
+                    t_virtual=obs.tracer.virtual_base + now + dur)
+                obs.metrics.counter("packet.count").inc()
+                obs.metrics.histogram("packet.latency_s").observe(wall_s)
+                obs.metrics.histogram("packet.events").observe(pkt.size)
+                obs.health.observe_packet(node, pkt.size, wall_s)
             if on_partial is not None:
                 on_partial(PacketPartial(
                     seq=len(results) - 1, brick_id=pkt.brick_id,

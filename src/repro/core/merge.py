@@ -21,7 +21,7 @@ Two merge schedules share the same ``merge2`` kernel:
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -135,7 +135,8 @@ def merge_batch(parts: Sequence[Sequence[QueryResult]]) -> List[QueryResult]:
     return [tree_merge([p[q] for p in parts]) for q in range(k)]
 
 
-def tree_merge(results: Sequence[QueryResult]) -> QueryResult:
+def tree_merge(results: Sequence[QueryResult],
+               merge_fn: Callable = merge2) -> QueryResult:
     """Pairwise tree reduction (the JSE merge schedule).
 
     Level-by-level: adjacent pairs merge, an odd leftover is carried to the
@@ -143,14 +144,22 @@ def tree_merge(results: Sequence[QueryResult]) -> QueryResult:
     by the greedy binary decomposition of ``len(results)`` — the same tree
     :class:`MergeAccumulator` maintains incrementally, which is why a
     streamed prefix snapshot finalizes to this function's output bit for
-    bit (``tests/test_streaming.py`` pins the property)."""
+    bit (``tests/test_streaming.py`` pins the property).
+
+    ``merge_fn`` generalizes the reduction to any associative pairwise
+    combiner over any element type (the observability plane reduces
+    fleet metrics snapshots through this exact schedule); it defaults to
+    :func:`merge2` over :class:`QueryResult`.  An empty input returns an
+    empty ``QueryResult`` — only meaningful under the default combiner,
+    so callers with a custom ``merge_fn`` must pass a non-empty
+    sequence."""
     if not results:
         return QueryResult()
     level: List[QueryResult] = list(results)
     while len(level) > 1:
         nxt = []
         for i in range(0, len(level) - 1, 2):
-            nxt.append(merge2(level[i], level[i + 1]))
+            nxt.append(merge_fn(level[i], level[i + 1]))
         if len(level) % 2:
             nxt.append(level[-1])
         level = nxt

@@ -78,6 +78,10 @@ class MessageBus:
         self.drop_rate = drop_rate
         self.round = 0
         self.stats = BusStats()
+        # observability metrics registry (repro.obs.MetricsRegistry);
+        # None = disabled.  The fleet installs its fleet-level registry
+        # here — the bus is shared infrastructure, not per-frontend.
+        self.metrics = None
         self._rng = random.Random(seed)
         self._inboxes: Dict[str, Deque[Envelope]] = {}
         self._inflight: List[Envelope] = []
@@ -123,11 +127,17 @@ class MessageBus:
         if dst not in self._inboxes:
             raise KeyError(f"unknown fabric node {dst!r}")
         self.stats.sent += 1
+        if self.metrics is not None:
+            self.metrics.counter("bus.sent").inc()
         if not self._same_side(src, dst):
             self.stats.partitioned += 1
+            if self.metrics is not None:
+                self.metrics.counter("bus.partitioned").inc()
             return False
         if self.drop_rate and self._rng.random() < self.drop_rate:
             self.stats.dropped += 1
+            if self.metrics is not None:
+                self.metrics.counter("bus.dropped").inc()
             return False
         env = Envelope(self._seq, src, dst, topic, payload, self.round,
                        self.round + 1 + self.delay)
@@ -152,6 +162,8 @@ class MessageBus:
         for env in due:
             self._inboxes[env.dst].append(env)
         self.stats.delivered += len(due)
+        if self.metrics is not None and due:
+            self.metrics.counter("bus.delivered").inc(len(due))
         return len(due)
 
     def recv(self, node_id: str) -> List[Envelope]:

@@ -39,6 +39,9 @@ from repro.fabric.gossip import (GOSSIP_TOPIC, GossipNode, adaptive_fanout,
                                  rounds_bound)
 from repro.fabric.registry import FragmentRegistry
 from repro.fabric.shared_cache import SharedCacheTier, TieredResultCache
+from repro.obs import (HealthMonitor, HealthReport, MetricsRegistry,
+                       MetricsSnapshot, Observability, merge_snapshots)
+from repro.obs import trace as trace_lib
 from repro.service import streaming as streaming_lib
 from repro.service.frontend import QueryService, Ticket
 from repro.service.scheduler import QueryScheduler
@@ -54,6 +57,7 @@ class Frontend:
     catalog: MetadataCatalog
     gossip: GossipNode
     fanout: StreamFanout
+    obs: Optional[Observability] = None
 
 
 class Fleet:
@@ -90,6 +94,14 @@ class Fleet:
     service_kwargs:
         Extra keyword arguments applied to every ``QueryService`` (e.g.
         ``stream_ramp``, ``refit_cost_every``, ``use_cache``).
+    obs:
+        ``True`` stands up the observability plane: one
+        :class:`~repro.obs.Observability` bundle per front-end (origin
+        ``fe{i}``) wired through the service, its gossip node (health
+        digests piggyback on epoch gossip), plus one fleet-level
+        :class:`~repro.obs.MetricsRegistry` (origin ``fleet``) installed
+        on the shared infrastructure — the bus and the L2 tier.  Default
+        ``False`` keeps every hook at ``None`` (zero overhead).
     """
 
     def __init__(self, store: BrickStore, n_frontends: int = 2, *,
@@ -102,12 +114,19 @@ class Fleet:
                  gossip_fanout: Optional[int] = None,
                  scheduler_factory: Optional[
                      Callable[[], QueryScheduler]] = None,
-                 service_kwargs: Optional[dict] = None):
+                 service_kwargs: Optional[dict] = None,
+                 obs: bool = False):
         if n_frontends < 1:
             raise ValueError("need at least one front-end")
         self.store = store
         self.bus = bus or MessageBus()
         self.l2 = SharedCacheTier(l2_capacity) if shared_cache else None
+        self.fleet_metrics: Optional[MetricsRegistry] = None
+        if obs:
+            self.fleet_metrics = MetricsRegistry(origin="fleet")
+            self.bus.metrics = self.fleet_metrics
+            if self.l2 is not None:
+                self.l2.metrics = self.fleet_metrics
         self.registry = registry
         self.backend = backend
         self.gossip_fanout = (gossip_fanout if gossip_fanout is not None
@@ -131,15 +150,22 @@ class Fleet:
             cache = TieredResultCache(l1_capacity, catalog=catalog,
                                       l2=self.l2,
                                       vv_source=lambda g=gossip: g.vv)
+            fe_obs = Observability(origin=node_id) if obs else None
+            if fe_obs is not None:
+                # health digests ride the gossip digest; gossip counters
+                # land in the front-end's own registry
+                gossip.health = fe_obs.health
+                gossip.metrics = fe_obs.metrics
             svc = QueryService(
                 store, catalog, cache=cache,
                 scheduler=scheduler_factory() if scheduler_factory else None,
-                registry=registry, frontend_id=node_id, **kwargs)
+                registry=registry, frontend_id=node_id, obs=fe_obs,
+                **kwargs)
             fanout = StreamFanout(
                 node_id, self.bus,
                 lambda key, idx=i: self._resolve_stream(key, idx))
             self.frontends.append(Frontend(i, node_id, svc, catalog,
-                                           gossip, fanout))
+                                           gossip, fanout, fe_obs))
 
     # ------------------------------------------------------------------ #
     @property
@@ -298,6 +324,58 @@ class Fleet:
             agg["l2_entries"] = len(self.l2)
             agg["l2_fragment_puts"] = self.l2.stats.fragment_puts
         return agg
+
+    # ------------------------- observability -------------------------- #
+    def metrics_snapshot(self) -> Optional[MetricsSnapshot]:
+        """Fleet-merged metrics: every front-end's registry plus the
+        fleet-level registry (bus/L2 counters), combined through the same
+        ``tree_merge`` machinery the result path uses.  ``None`` when the
+        fleet was built without ``obs=True``."""
+        snaps = [fe.obs.metrics.snapshot() for fe in self.frontends
+                 if fe.obs is not None]
+        if self.fleet_metrics is not None:
+            snaps.append(self.fleet_metrics.snapshot())
+        if not snaps:
+            return None
+        return merge_snapshots(snaps)
+
+    def trace_records(self) -> List[dict]:
+        """All front-ends' span/event records merged and ordered by
+        virtual start time — one fleet-wide timeline (span ids stay
+        unique per ``process``, which is how the schema scopes them)."""
+        recs: List[dict] = []
+        for fe in self.frontends:
+            if fe.obs is not None:
+                recs.extend(fe.obs.tracer.records())
+        recs.sort(key=lambda r: (r["t0_virtual"], r["process"],
+                                 r["span_id"]))
+        return recs
+
+    def save_trace_jsonl(self, path) -> int:
+        """Write the fleet-merged JSONL trace; returns records written."""
+        recs = self.trace_records()
+        trace_lib.save_jsonl(recs, path)
+        return len(recs)
+
+    def save_chrome_trace(self, path) -> int:
+        """Write the fleet-merged Chrome/Perfetto trace; returns records
+        exported."""
+        recs = self.trace_records()
+        trace_lib.save_chrome(recs, path)
+        return len(recs)
+
+    def health_report(self) -> Optional[HealthReport]:
+        """Fleet-wide node health: every front-end monitor's digest merged
+        into one view (the converged picture gossip drives each member
+        toward).  ``None`` without ``obs=True``."""
+        monitors = [fe.obs.health for fe in self.frontends
+                    if fe.obs is not None]
+        if not monitors:
+            return None
+        agg = HealthMonitor(origin="fleet")
+        for m in monitors:
+            agg.merge_digest(m.digest())
+        return agg.report()
 
     def close(self) -> None:
         """Shut the fleet down: every front-end's service closes (cache

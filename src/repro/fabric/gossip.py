@@ -141,6 +141,12 @@ class GossipNode:
         # instead of each observer keeping its own view forever.
         self.liveness: Dict[int, Tuple[int, str, bool]] = {}
         self.stats = GossipStats()
+        # optional observability handles (installed by the Fleet):
+        # ``health`` is a repro.obs.HealthMonitor whose digest piggybacks
+        # on the gossip digest (anti-entropy carries health for free),
+        # ``metrics`` a MetricsRegistry for gossip counters.  None = off.
+        self.health = None
+        self.metrics = None
         bus.register(node_id)
         catalog.on_dataset_bump(self._on_local_bump)
 
@@ -166,11 +172,17 @@ class GossipNode:
 
     # ------------------------------------------------------------------ #
     def digest(self) -> dict:
-        """The full anti-entropy digest this node pushes every round."""
-        return {
+        """The full anti-entropy digest this node pushes every round.
+        When a health monitor is attached its digest rides along, so
+        node-health telemetry converges fleet-wide under the same
+        :func:`rounds_bound` as epochs and liveness."""
+        out = {
             "vv": dict(self.vv),
             "live": {n: list(v) for n, v in self.liveness.items()},
         }
+        if self.health is not None:
+            out["health"] = self.health.digest()
+        return out
 
     def targets(self) -> List[str]:
         """This round's push targets: the next ``fanout`` peers after us
@@ -191,12 +203,18 @@ class GossipNode:
         for dst in self.targets():
             self.bus.send(self.node_id, dst, GOSSIP_TOPIC, payload)
             self.stats.digests_sent += 1
+            if self.metrics is not None:
+                self.metrics.counter("gossip.digests_sent").inc()
 
     def on_message(self, payload: dict) -> None:
         """Merge one received digest into local state, applying epoch and
         liveness changes to the catalogue (which fans out to the caches
         through the ordinary bump-hook chain)."""
         self.stats.digests_received += 1
+        if self.metrics is not None:
+            self.metrics.counter("gossip.digests_received").inc()
+        if self.health is not None and "health" in payload:
+            self.health.merge_digest(payload["health"])
         changed = merge_vv(self.vv, payload.get("vv", {}))
         if changed:
             self.catalog.set_dataset_epoch(effective_epoch(self.vv))
@@ -215,6 +233,8 @@ class GossipNode:
                 live_changed = True
         if not changed and not live_changed:
             self.stats.digests_stale += 1
+        elif self.metrics is not None:
+            self.metrics.counter("gossip.updates_applied").inc()
 
     def detach(self) -> None:
         """Unhook from the catalogue (shutdown path — a long-lived

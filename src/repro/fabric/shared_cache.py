@@ -78,6 +78,10 @@ class SharedCacheTier:
             raise ValueError("capacity must be positive")
         self.capacity = capacity
         self.stats = SharedCacheStats()
+        # observability metrics registry (repro.obs.MetricsRegistry);
+        # None = disabled.  Fleet-level like the bus: one tier serves
+        # every front-end, so its counters live in the fleet registry.
+        self.metrics = None
         self._join: Dict[str, int] = {}  # element-wise max of seen vectors
         self._entries: "OrderedDict[Tuple, merge_lib.QueryResult]" = \
             OrderedDict()
@@ -138,14 +142,20 @@ class SharedCacheTier:
         vv = self._resolve(epoch, vv)
         if not self._current(vv):
             self.stats.stale_refused += 1
+            if self.metrics is not None:
+                self.metrics.counter("l2.stale_refused").inc()
             return None
         k = (canonical, int(calib_iters), self._fp(vv))
         hit = self._entries.get(k)
         if hit is None:
             self.stats.misses += 1
+            if self.metrics is not None:
+                self.metrics.counter("l2.misses").inc()
             return None
         self._entries.move_to_end(k)
         self.stats.hits += 1
+        if self.metrics is not None:
+            self.metrics.counter("l2.hits").inc()
         return hit
 
     def put(self, canonical: str, calib_iters: int, epoch: int,
@@ -158,11 +168,15 @@ class SharedCacheTier:
         vv = self._resolve(epoch, vv)
         if not self._current(vv):
             self.stats.stale_refused += 1
+            if self.metrics is not None:
+                self.metrics.counter("l2.stale_refused").inc()
             return
         k = (canonical, int(calib_iters), self._fp(vv))
         self._entries[k] = result
         self._entries.move_to_end(k)
         self.stats.puts += 1
+        if self.metrics is not None:
+            self.metrics.counter("l2.puts").inc()
         if fragment:
             self.stats.fragment_puts += 1
         while len(self._entries) > self.capacity:

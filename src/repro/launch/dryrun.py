@@ -102,6 +102,8 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
     t_compile = time.time() - t0
 
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older JAX returns [dict]
+        cost = cost[0] if cost else {}
     record = {
         "arch": arch,
         "shape": shape_name,

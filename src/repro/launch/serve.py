@@ -38,6 +38,8 @@ import time
 import jax
 import jax.numpy as jnp
 
+import json
+
 from repro.configs.registry import get_config, list_archs, reduced_config
 from repro.launch.mesh import make_mesh_of, make_production_mesh
 from repro.models import model_zoo
@@ -73,6 +75,24 @@ def generate(cfg, model, params, shd, prompt, max_new_tokens=16,
     return jnp.concatenate(out, axis=1)
 
 
+def _dump_trace(records, path):
+    """Write trace records to ``path``: JSONL for ``.jsonl``, Chrome-trace
+    JSON (Perfetto-loadable) otherwise."""
+    from repro.obs import trace as trace_lib
+    if str(path).endswith(".jsonl"):
+        trace_lib.save_jsonl(records, path)
+    else:
+        trace_lib.save_chrome(records, path)
+    print(f"  trace: {len(records)} records -> {path}")
+
+
+def _dump_metrics(snapshot, path):
+    """Write a metrics snapshot as JSON."""
+    with open(path, "w") as f:
+        json.dump(snapshot.to_dict(), f, indent=2, sort_keys=True)
+    print(f"  metrics: {len(snapshot.metrics)} series -> {path}")
+
+
 def serve_fleet(args):
     """Fleet serving mode: the multi-tenant workload of ``serve_queries``
     replayed round-robin over ``--fleet N`` coherence-fabric front-ends.
@@ -90,8 +110,9 @@ def serve_fleet(args):
                          n_nodes=args.n_nodes,
                          events_per_brick=cfg.events_per_brick,
                          replication=cfg.replication_factor, seed=0)
+    want_obs = bool(args.trace_out or args.metrics_dump)
     fleet = Fleet(store, args.fleet, registry=FragmentRegistry(),
-                  backend=args.backend)
+                  backend=args.backend, obs=want_obs)
     hot = ["e_total > 40 && count(pt > 15) >= 2",
            "e_t_miss > 30", "pt_lead > 60 || n_tracks >= 8"]
     t0 = time.time()
@@ -139,6 +160,10 @@ def serve_fleet(args):
         print(f"  cross-frontend stream: ticket {sample} (owner fe"
               f"{owner_idx}) read from fe{reader}: {proxy.published} "
               f"snapshots, state={state}")
+    if args.trace_out:
+        _dump_trace(fleet.trace_records(), args.trace_out)
+    if args.metrics_dump:
+        _dump_metrics(fleet.metrics_snapshot(), args.metrics_dump)
     fleet.close()
 
 
@@ -173,8 +198,12 @@ def serve_queries(args):
         vnow = [0.0]
         clock = lambda: vnow[0]
         wc = WindowController(initial=args.window)
+    obs = None
+    if args.trace_out or args.metrics_dump:
+        from repro.obs import Observability
+        obs = Observability(origin="fe0")
     svc = QueryService(store, scheduler=sched, window_controller=wc,
-                       backend=args.backend,
+                       backend=args.backend, obs=obs,
                        **({"clock": clock} if clock else {}))
     # multi-tenant workload: a few hot queries repeated across tenants
     # (the interactive-analysis regime) plus per-tenant near-duplicate
@@ -243,6 +272,12 @@ def serve_queries(args):
                   f"snapshots ({sample.dropped} conflated), final coverage "
                   f"{cov.events_scanned}/{cov.events_total} events over "
                   f"{len(cov.bricks_seen)}/{cov.bricks_total} bricks")
+    if obs is not None:
+        if args.trace_out:
+            _dump_trace(obs.tracer.records(), args.trace_out)
+        if args.metrics_dump:
+            _dump_metrics(obs.metrics.snapshot(), args.metrics_dump)
+    svc.close()
 
 
 def main(argv=None):
@@ -280,6 +315,15 @@ def main(argv=None):
     ap.add_argument("--fleet", type=int, default=1,
                     help="query mode: number of coherence-fabric "
                          "front-ends (1 = single QueryService)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="query mode: enable the observability plane and "
+                         "write the span trace to PATH (.jsonl = JSONL "
+                         "records, anything else = Chrome-trace JSON "
+                         "loadable in Perfetto)")
+    ap.add_argument("--metrics-dump", default=None, metavar="PATH",
+                    help="query mode: enable the observability plane and "
+                         "write the (fleet-merged) metrics snapshot to "
+                         "PATH as JSON")
     args = ap.parse_args(argv)
 
     if args.mode == "query":

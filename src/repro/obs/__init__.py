@@ -1,0 +1,63 @@
+"""Fleet-wide observability plane: ticket tracing, metrics, node health.
+
+Zero-dependency (stdlib + numpy-free) instrumentation threaded through
+every layer of the stack behind one convention: each instrumented object
+carries an ``obs`` attribute that defaults to ``None``, and every
+instrumentation site is guarded by ``if obs is not None`` — the disabled
+path costs one attribute test and allocates nothing.  Enabling is one
+constructor argument: pass an :class:`Observability` bundle to
+``QueryService`` (which installs it on its backend/engine) or let
+``Fleet(obs=True)`` build one per front-end.
+
+See ``docs/observability.md`` for the span taxonomy, metric catalog,
+health-state semantics and trace-file format.
+"""
+from __future__ import annotations
+
+from repro.obs.health import (HEALTH_DEGRADED, HEALTH_OK, HEALTH_STATES,
+                              HEALTH_SUSPECT, HealthMonitor, HealthReport,
+                              NodeHealth)
+from repro.obs.metrics import (DEFAULT_LATENCY_BUCKETS,
+                               DEFAULT_SIZE_BUCKETS, Counter, Gauge,
+                               Histogram, MetricsRegistry, MetricsSnapshot,
+                               merge2, merge_snapshots)
+from repro.obs.trace import (SCHEMA_VERSION, SPAN_NAMES, STATUS_ERROR,
+                             STATUS_OK, STATUS_OPEN, Span, Tracer,
+                             chrome_from_records, comparable_records,
+                             load_jsonl, save_chrome, save_jsonl,
+                             validate_file, validate_records)
+
+
+class Observability:
+    """The per-process observability bundle: one :class:`Tracer`, one
+    :class:`MetricsRegistry` and one :class:`HealthMonitor` sharing an
+    ``origin`` label (the front-end id in a fleet).  This is the single
+    handle instrumented layers accept — ``obs=None`` disables the whole
+    plane."""
+
+    def __init__(self, origin: str = "fe0"):
+        self.origin = origin
+        self.tracer = Tracer(process=origin)
+        self.metrics = MetricsRegistry(origin=origin)
+        self.health = HealthMonitor(origin=origin)
+        # pre-register the size-valued histograms so hot call sites can
+        # fetch them by name without re-stating bucket config
+        for name in ("packet.events", "window.queries"):
+            self.metrics.histogram(name, DEFAULT_SIZE_BUCKETS)
+
+
+__all__ = [
+    "Observability",
+    # trace
+    "Span", "Tracer", "SCHEMA_VERSION", "SPAN_NAMES",
+    "STATUS_OPEN", "STATUS_OK", "STATUS_ERROR",
+    "save_jsonl", "load_jsonl", "validate_records", "validate_file",
+    "comparable_records", "chrome_from_records", "save_chrome",
+    # metrics
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "MetricsSnapshot",
+    "merge2", "merge_snapshots",
+    "DEFAULT_LATENCY_BUCKETS", "DEFAULT_SIZE_BUCKETS",
+    # health
+    "HealthMonitor", "HealthReport", "NodeHealth",
+    "HEALTH_STATES", "HEALTH_OK", "HEALTH_DEGRADED", "HEALTH_SUSPECT",
+]

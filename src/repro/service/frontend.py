@@ -224,6 +224,15 @@ class QueryService:
     frontend_id:
         Stable identity of this front-end inside a fleet (fabric gossip
         and stream fan-out address it by this id).
+    obs:
+        Optional :class:`repro.obs.Observability` bundle.  When present
+        the service traces every ticket (submit/window/plan/dispatch/
+        per-packet/stream/final spans on one deterministic virtual
+        timeline), records the metric catalog of
+        ``docs/observability.md``, feeds the per-node health monitor,
+        and installs the bundle on the execution backend and scheduler.
+        ``None`` (default) disables the whole plane — every
+        instrumentation site is one ``is not None`` test.
     """
 
     #: sliding-window size of retained per-packet telemetry observations
@@ -246,7 +255,8 @@ class QueryService:
                  registry=None,
                  refit_cost_every: Optional[int] = None,
                  stream_ramp: Optional[int] = None,
-                 frontend_id: str = "fe0"):
+                 frontend_id: str = "fe0",
+                 obs=None):
         self.store = store
         if backend is not None and not isinstance(backend, str):
             # instance backend: it owns a catalogue/store pair already
@@ -306,6 +316,18 @@ class QueryService:
         self._next_ticket = 0
         self._next_batch = 0
         self._closed = False
+        # observability plane: install the bundle on the execution
+        # backend (per-packet spans/health) and the scheduler (advisory
+        # health hints); the service's own virtual timeline accumulates
+        # window makespans so every span shares one deterministic axis
+        self.obs = obs
+        self._virtual_now = 0.0
+        self._stream_spans: Dict[int, object] = {}
+        if obs is not None:
+            if getattr(self.backend, "obs", "missing") is None:
+                self.backend.obs = obs
+            if getattr(self.scheduler, "obs", "missing") is None:
+                self.scheduler.obs = obs
 
     # ------------------------------------------------------------------ #
     def submit(self, expr: str, *, tenant: str = "default",
@@ -331,11 +353,25 @@ class QueryService:
         ticket = Ticket(tid, tenant, expr, calib_iters, streamed=stream)
         self.tickets[tid] = ticket
         self.stats.submitted += 1
+        obs = self.obs
+        span = None
+        if obs is not None:
+            span = obs.tracer.begin("submit", t_virtual=self._virtual_now,
+                                    ticket=tid, tenant=tenant,
+                                    stream=stream)
         rs = None
         if stream:
             rs = streaming_lib.ResultStream(tid,
                                             capacity=self.stream_capacity)
             self.streams[tid] = rs
+            if obs is not None:
+                # the stream span lives until the stream closes (finish
+                # OR abort — the on_close hook covers every path, so an
+                # aborted stream can never leak an open span)
+                self._stream_spans[tid] = obs.tracer.begin(
+                    "stream", t_virtual=self._virtual_now, ticket=tid,
+                    parent=span)
+                rs.on_close(self._close_stream_span)
         try:
             sub = make_submission(tid, tenant, expr, calib_iters,
                                   self.store.schema,
@@ -348,9 +384,14 @@ class QueryService:
             self.stats.rejected += 1
             if rs is not None:
                 rs.abort(str(e))
+            if obs is not None:
+                obs.metrics.counter("submit.rejected").inc()
+                obs.tracer.end(span, t_virtual=self._virtual_now,
+                               status="error", note=str(e))
             return tid
 
         if self.use_cache:
+            l2_before = self.cache.stats.l2_hits
             hit = self.cache.get(expr, calib_iters,
                                  self.catalog.dataset_epoch,
                                  canonical=sub.canonical)
@@ -376,7 +417,24 @@ class QueryService:
                             events_scanned=hit.n_processed,
                             events_total=hit.n_processed),
                         t_virtual=0.0, final=True))
+                if obs is not None:
+                    # a cache hit is still a complete (short) ticket
+                    # trace: tier-attributed metric, closed submit span,
+                    # final event — never a telemetry bypass
+                    tier = ("l2" if self.cache.stats.l2_hits > l2_before
+                            else "l1")
+                    obs.metrics.counter(f"cache.hits_{tier}").inc()
+                    # a cache hit is a served ticket: tickets.served must
+                    # reconcile with ServiceStats.served across the fleet
+                    obs.metrics.counter("tickets.served").inc()
+                    span.attrs["cache_tier"] = tier
+                    obs.tracer.end(span, t_virtual=self._virtual_now)
+                    obs.tracer.event("final", t_virtual=self._virtual_now,
+                                     ticket=tid, outcome=SERVED,
+                                     cached=True)
                 return tid
+            if obs is not None:
+                obs.metrics.counter("cache.misses").inc()
 
         try:
             self.scheduler.enqueue(sub)
@@ -385,12 +443,19 @@ class QueryService:
             # window from them would defer scans past the lambda*L spot
             if self.window_controller is not None:
                 self.window_controller.observe_arrival(self.clock())
+            if obs is not None:
+                span.attrs["queued"] = True
+                obs.tracer.end(span, t_virtual=self._virtual_now)
         except AdmissionError as e:
             ticket.status = REJECTED
             ticket.note = str(e)
             self.stats.rejected += 1
             if rs is not None:
                 rs.abort(str(e))
+            if obs is not None:
+                obs.metrics.counter("submit.rejected").inc()
+                obs.tracer.end(span, t_virtual=self._virtual_now,
+                               status="error", note=str(e))
         return tid
 
     # ------------------------------------------------------------------ #
@@ -430,6 +495,14 @@ class QueryService:
         batch_id = self._next_batch
         self._next_batch += 1
         self.stats.batches += 1
+        obs = self.obs
+        wspan = None
+        if obs is not None:
+            wspan = obs.tracer.begin("window", t_virtual=self._virtual_now,
+                                     batch=batch_id, queries=len(window))
+            obs.tracer.push(wspan)
+            obs.metrics.counter("window.dispatched").inc()
+            obs.metrics.histogram("window.queries").observe(len(window))
 
         # dedup: identical canonical queries execute once, fan out to all
         groups: "OrderedDict[str, List[Submission]]" = OrderedDict()
@@ -439,9 +512,17 @@ class QueryService:
         # fragment factoring across the window's unique queries; the
         # fabric registry (when present) seeds the interner with
         # cross-window hot fragments and pre-warms their materialization
+        pspan = None
+        if obs is not None:
+            pspan = obs.tracer.begin("plan", t_virtual=self._virtual_now,
+                                     batch=batch_id, unique=len(groups))
         plan = planner_lib.plan_window(
             list(groups), materialize=self.planner_materialize
-            and self.use_cache, registry=self.registry)
+            and self.use_cache, registry=self.registry,
+            metrics=None if obs is None else obs.metrics)
+        if obs is not None:
+            pspan.attrs["materialized"] = len(plan.materialize)
+            obs.tracer.end(pspan, t_virtual=self._virtual_now)
         if self.registry is not None:
             self.registry.observe_plan(plan)
 
@@ -466,16 +547,49 @@ class QueryService:
                 col_streams,
                 events_total=sum(self.store.specs[b].n_events
                                  for b in bricks),
-                bricks_total=len(bricks))
+                bricks_total=len(bricks), obs=obs)
         # stream-aware packet sizing: a window someone is streaming gets
         # the small-early/growing-later ramp (fast first partial) while
         # keeping PROOF-adaptive sizing for the bulk of the scan
-        merged, stats = self.backend.run_batch(
-            job_ids, failure_script=failure_script, plan=plan,
-            on_partial=publisher.on_partial if publisher is not None
-            else None,
-            packet_ramp=self.stream_ramp if publisher is not None
-            else None)
+        dspan = None
+        if obs is not None:
+            dspan = obs.tracer.begin("dispatch",
+                                     t_virtual=self._virtual_now,
+                                     batch=batch_id, jobs=len(job_ids))
+            # per-packet spans from the engine nest under this dispatch
+            # and land on the service's cumulative virtual timeline
+            obs.tracer.push(dspan)
+            obs.tracer.virtual_base = self._virtual_now
+        try:
+            merged, stats = self.backend.run_batch(
+                job_ids, failure_script=failure_script, plan=plan,
+                on_partial=publisher.on_partial if publisher is not None
+                else None,
+                packet_ramp=self.stream_ramp if publisher is not None
+                else None)
+        finally:
+            if obs is not None:
+                obs.tracer.virtual_base = 0.0
+        if obs is not None:
+            ok_all = all(self.catalog.jobs[j].status == DONE
+                         for j in job_ids)
+            self._virtual_now += stats.makespan_s
+            obs.tracer.end(dspan, t_virtual=self._virtual_now,
+                           status="ok" if ok_all else "error")
+            obs.tracer.pop()
+            obs.metrics.histogram("window.makespan_s").observe(
+                stats.makespan_s)
+            if getattr(self.backend, "obs", None) is not obs:
+                # backend without native instrumentation (a custom
+                # ExecutionBackend): fall back to feeding metrics and
+                # health from the telemetry the contract guarantees
+                for t in stats.packet_telemetry:
+                    obs.metrics.counter("packet.count").inc()
+                    obs.metrics.histogram("packet.latency_s").observe(
+                        t.wall_s)
+                    obs.metrics.histogram("packet.events").observe(t.size)
+                    obs.health.observe_packet(getattr(t, "node", -1),
+                                              t.size, t.wall_s)
         self.stats.jobs_run += len(job_ids)
         self.stats.events_scanned += stats.events_scanned
         self.stats.fragment_evals += stats.fragment_evals
@@ -524,11 +638,23 @@ class QueryService:
                 if ok:
                     self.stats.served += 1
                     served.append(sub.ticket)
+                if obs is not None:
+                    obs.tracer.event(
+                        "final", t_virtual=self._virtual_now,
+                        ticket=sub.ticket, batch=batch_id,
+                        outcome=ticket.status)
+                    obs.metrics.counter(
+                        "tickets.served" if ok
+                        else "tickets.failed").inc()
         # fragment-level cache entries: a future query equal to a shared
         # conjunct of this window is then a zero-I/O hit
         if batch_ok and self.use_cache:
             for frag_key, frag_res in stats.fragment_results.items():
                 self.cache.put_fragment(frag_key, calib, epoch, frag_res)
+        if obs is not None:
+            obs.tracer.end(wspan, t_virtual=self._virtual_now,
+                           status="ok" if batch_ok else "error")
+            obs.tracer.pop()
         return served
 
     def drain(self, *, max_windows: int = 10_000) -> List[int]:
@@ -565,6 +691,20 @@ class QueryService:
         self.cache.detach()
         for rs in self.streams.values():
             rs.abort("service closed")
+
+    def _close_stream_span(self, stream) -> None:
+        """Stream ``on_close`` hook: close the ticket's stream span with
+        the stream's terminal state (error on ABORTED — rejected tickets,
+        truncated scans and service shutdown all land here, so no path
+        leaks an open span)."""
+        span = self._stream_spans.pop(stream.ticket_id, None)
+        if span is None or self.obs is None:
+            return
+        if stream.state == streaming_lib.ABORTED:
+            self.obs.tracer.end(span, t_virtual=self._virtual_now,
+                                status="error", note=stream.note)
+        else:
+            self.obs.tracer.end(span, t_virtual=self._virtual_now)
 
     def release_stream(self, ticket_id: int) -> None:
         """Drop a finished consumer's stream (and its buffered snapshots)

@@ -226,7 +226,7 @@ def shared_boolean_fragments(plan: query_lib.FragmentPlan,
 
 def plan_window(exprs: Sequence[str], *, materialize: bool = True,
                 max_materialized: int = 8, shared: bool = True,
-                registry=None) -> query_lib.FragmentPlan:
+                registry=None, metrics=None) -> query_lib.FragmentPlan:
     """Build the fragment plan for one dispatch window.
 
     Factors common subexpressions across ``exprs`` (one entry per unique
@@ -243,7 +243,12 @@ def plan_window(exprs: Sequence[str], *, materialize: bool = True,
     when only one query references it — its mask is a scan by-product,
     and caching it makes the next submission equal to it (on any fleet
     front-end) a zero-I/O hit.  Materialization never changes per-query
-    results; the registry budget rides on top of ``max_materialized``."""
+    results; the registry budget rides on top of ``max_materialized``.
+
+    ``metrics`` (a :class:`repro.obs.metrics.MetricsRegistry`, or None)
+    records the planner's share of the observability catalog: windows
+    planned, unique-fragment evaluations per packet vs. what unshared
+    execution would cost, and fragments marked for materialization."""
     interner = query_lib.Interner()
     hot_nodes: Dict[str, query_lib.Node] = {}
     if registry is not None and shared:
@@ -268,4 +273,10 @@ def plan_window(exprs: Sequence[str], *, materialize: bool = True,
                         and query_lib.is_boolean(node)):
                     plan.materialize.append(node)
                     chosen.add(id(node))
+    if metrics is not None:
+        metrics.counter("plan.windows").inc()
+        metrics.counter("plan.fragment_evals").inc(plan.evals_per_batch)
+        metrics.counter("plan.fragment_evals_unshared").inc(
+            plan.unshared_evals)
+        metrics.counter("plan.materialized").inc(len(plan.materialize))
     return plan

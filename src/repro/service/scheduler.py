@@ -97,6 +97,17 @@ class QueryScheduler:
         (telemetry-fitted for that backend) recost queued submissions at
         dispatch time; ``None`` falls back to each submission's
         admission-time cost.
+    obs / health_gate:
+        ``obs`` is the observability plane bundle
+        (:class:`repro.obs.Observability`; the service installs its own
+        when None), whose health monitor supplies the fleet
+        ok/degraded/suspect report.  ``health_gate`` is the ADVISORY
+        flag (default off): when set and the report shows unhealthy
+        nodes, :meth:`next_batch` narrows the dispatch window by the
+        healthy fraction, so sick nodes see less concurrent work while
+        staying in rotation.  This is deliberately a hint, not a
+        routing policy — ROADMAP item 4's resource-status system plugs
+        into exactly this consumption point.
     """
 
     def __init__(self, *, max_batch: int = 64,
@@ -105,8 +116,13 @@ class QueryScheduler:
                  cost_budget_per_tenant: Optional[float] = None,
                  cost_budget_total: Optional[float] = None,
                  window_cost_budget: Optional[float] = None,
-                 backend=None):
+                 backend=None, obs=None, health_gate: bool = False):
         self.max_batch = max_batch
+        self.obs = obs
+        self.health_gate = health_gate
+        #: last advisory narrowing applied (None when the gate is off or
+        #: the fleet is healthy) — what tests and operators inspect
+        self.last_health_hint: Optional[Dict] = None
         self.max_pending_per_tenant = max_pending_per_tenant
         self.max_pending_total = max_pending_total
         self.cost_budget_per_tenant = cost_budget_per_tenant
@@ -203,10 +219,29 @@ class QueryScheduler:
         FREE — the front-end dedups it onto the same execution, so
         charging it would under-fill windows on hot-query traffic.
         Dequeued submissions release their queued (admission-time)
-        cost."""
+        cost.
+
+        With ``health_gate`` set and the observability plane's health
+        report showing degraded/suspect nodes, the window is narrowed to
+        ``max_batch * healthy_fraction`` (floor 1) — the advisory
+        consumption of the fleet health telemetry."""
         oldest = self._oldest()
         if oldest is None:
             return []
+        max_batch = self.max_batch
+        self.last_health_hint = None
+        if self.health_gate and self.obs is not None:
+            report = self.obs.health.report()
+            frac = report.healthy_fraction
+            if frac < 1.0:
+                max_batch = max(1, int(round(self.max_batch * frac)))
+                self.last_health_hint = {
+                    "max_batch": max_batch,
+                    "healthy_fraction": frac,
+                    "suspect": report.suspects,
+                    "degraded": report.degraded,
+                }
+                self.obs.metrics.counter("sched.health_hints").inc()
         group = oldest.calib_iters
         budget = self.window_cost_budget
         window_cost = 0.0
@@ -215,10 +250,10 @@ class QueryScheduler:
         tenants = list(self._pending)
         start = self._rr % max(1, len(tenants))
         progressed, capped = True, False
-        while len(out) < self.max_batch and progressed and not capped:
+        while len(out) < max_batch and progressed and not capped:
             progressed = False
             for off in range(len(tenants)):
-                if len(out) >= self.max_batch:
+                if len(out) >= max_batch:
                     break
                 tenant = tenants[(start + off) % len(tenants)]
                 q = self._pending[tenant]

@@ -197,7 +197,7 @@ class WindowStreamPublisher:
 
     def __init__(self, column_streams: Sequence[Sequence[ResultStream]], *,
                  events_total: Optional[int] = None,
-                 bricks_total: Optional[int] = None):
+                 bricks_total: Optional[int] = None, obs=None):
         self.column_streams = [list(streams) for streams in column_streams]
         self._accs: List[Optional[merge_lib.MergeAccumulator]] = [
             merge_lib.MergeAccumulator(events_total=events_total,
@@ -206,6 +206,8 @@ class WindowStreamPublisher:
             for streams in self.column_streams]
         self._failures = 0
         self._t = 0.0  # prefix availability clock (see on_partial)
+        # observability plane (repro.obs.Observability); None = disabled
+        self.obs = obs
 
     @property
     def active(self) -> bool:
@@ -223,6 +225,12 @@ class WindowStreamPublisher:
         new_failures = pp.failures - self._failures
         self._failures = pp.failures
         self._t = max(self._t, pp.t_virtual)
+        obs = self.obs
+        if obs is not None:
+            obs.tracer.event(
+                "merge_prefix",
+                t_virtual=obs.tracer.virtual_base + self._t,
+                seq=pp.seq, brick=pp.brick_id)
         for col, acc in enumerate(self._accs):
             if acc is None:
                 continue
@@ -232,13 +240,28 @@ class WindowStreamPublisher:
             snap = StreamSnapshot(seq=pp.seq, result=acc.snapshot(),
                                   coverage=acc.coverage(),
                                   t_virtual=self._t)
-            for stream in self.column_streams[col]:
-                stream.publish(snap)
+            if obs is None:
+                for stream in self.column_streams[col]:
+                    stream.publish(snap)
+            else:
+                for stream in self.column_streams[col]:
+                    d0 = stream.dropped
+                    stream.publish(snap)
+                    obs.metrics.counter("stream.published").inc()
+                    if stream.dropped > d0:
+                        # backpressure conflated an older snapshot away
+                        obs.metrics.counter("stream.conflated").inc(
+                            stream.dropped - d0)
+                    obs.tracer.event(
+                        "stream_partial",
+                        t_virtual=obs.tracer.virtual_base + self._t,
+                        ticket=stream.ticket_id, seq=pp.seq, col=col)
 
     def finish(self, merged: Sequence[merge_lib.QueryResult],
                makespan_s: float) -> None:
         """Publish each column's final snapshot (the batch-merged result)
         and close its streams as DONE."""
+        obs = self.obs
         for col, acc in enumerate(self._accs):
             if acc is None:
                 continue
@@ -247,10 +270,16 @@ class WindowStreamPublisher:
                 coverage=acc.coverage(), t_virtual=makespan_s, final=True)
             for stream in self.column_streams[col]:
                 stream.finish(snap)
+                if obs is not None:
+                    obs.metrics.counter("stream.finished").inc()
 
     def abort(self, note: str) -> None:
         """Close every subscribed stream without a final snapshot (the
         truncated-scan rule: a partial is never surfaced as an answer)."""
+        obs = self.obs
         for streams in self.column_streams:
             for stream in streams:
+                was_open = stream.state == OPEN
                 stream.abort(note)
+                if obs is not None and was_open:
+                    obs.metrics.counter("stream.aborted").inc()
