@@ -3,8 +3,12 @@ table.  Prints ``name,value,derived`` CSV blocks.
 
   crossover    - paper Fig 7 (single node vs grid-brick parallel)
   granularity  - paper section 6 packet-size effect
-  straggler    - PROOF-style adaptive packets vs fixed
+  straggler    - PROOF-style adaptive packets vs fixed + the failure
+                 policy's speculative re-execution pass (p99 time-to-final
+                 ratio; BENCH_straggler.json)
   failover     - node death with/without replication (paper future work)
+                 + failure-policy pass: seeded evidence bans the sick
+                 node, zero packets route to it, bricks re-replicate
   multiquery   - K-query shared scan vs one-job-at-a-time + cache hits
   planner      - common-subexpression factoring on near-duplicate queries
   streaming    - time-to-first-partial vs time-to-final (progressive

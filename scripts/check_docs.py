@@ -15,9 +15,11 @@
   (the packages tenants program against stay documented).
 - Contract coverage: every public top-level symbol of
   ``src/repro/core/backend.py`` must be mentioned by name in
-  ``docs/backends.md``, and every public top-level symbol of the
-  ``src/repro/obs`` modules in ``docs/observability.md`` — adding an
-  API without documenting the contract fails CI.
+  ``docs/backends.md``, every public top-level symbol of the
+  ``src/repro/obs`` modules in ``docs/observability.md``, and every
+  public top-level symbol of ``src/repro/service/policy.py`` in
+  ``docs/policy.md`` — adding an API without documenting the contract
+  fails CI.
 
 Exits non-zero with a per-finding report on any violation.
 """
@@ -159,6 +161,14 @@ def check_backend_contract_doc():
                                 "docs/backends.md")
 
 
+def check_policy_contract_doc():
+    """Every public top-level name in service/policy.py must appear in
+    docs/policy.md (state machine, thresholds and decision surface stay
+    in sync with the code)."""
+    return _contract_doc_errors([ROOT / "src/repro/service/policy.py"],
+                                "docs/policy.md")
+
+
 def check_obs_contract_doc():
     """Every public top-level name of the observability package must
     appear in docs/observability.md (span taxonomy / metric catalog /
@@ -192,6 +202,7 @@ def main() -> int:
     errors += check_no_tracked_pyc()
     errors += check_api_docs()
     errors += check_backend_contract_doc()
+    errors += check_policy_contract_doc()
     errors += check_obs_contract_doc()
     if errors:
         print(f"check_docs: {len(errors)} problem(s)")

@@ -126,6 +126,10 @@ class SimulatedBackend:
         #: this BEFORE dequeuing a window so an unsupported failure
         #: script fails fast with no state mutated
         self.supports_failure_injection = True
+        #: the virtual grid routes packets per node, so the failure
+        #: policy's avoid/probe/speculate decision applies here; the
+        #: service checks this before passing routing kwargs
+        self.supports_routing_policy = True
 
     @property
     def obs(self):
@@ -148,13 +152,21 @@ class SimulatedBackend:
                   on_partial: Optional[
                       Callable[[PacketPartial], None]] = None,
                   failure_script: Optional[Dict[float, int]] = None,
-                  packet_ramp: Optional[int] = None
+                  packet_ramp: Optional[int] = None,
+                  route_avoid: Optional[set] = None,
+                  probe_quota: Optional[Dict[int, int]] = None,
+                  speculate: bool = False,
+                  spec_lead_factor: float = 1.5
                   ) -> Tuple[List[merge_lib.QueryResult], JobStats]:
         """Execute the window on the simulated grid (see
-        :meth:`ExecutionBackend.run_batch` for the contract)."""
+        :meth:`ExecutionBackend.run_batch` for the contract; the routing
+        kwargs carry a :class:`~repro.service.policy.PolicyDecision` —
+        see ``run_job_batch_simulated`` for their semantics)."""
         return self.engine.run_job_batch_simulated(
             job_ids, plan=plan, on_partial=on_partial,
-            failure_script=failure_script, packet_ramp=packet_ramp)
+            failure_script=failure_script, packet_ramp=packet_ramp,
+            route_avoid=route_avoid, probe_quota=probe_quota,
+            speculate=speculate, spec_lead_factor=spec_lead_factor)
 
 
 class SpmdBackend:
@@ -213,6 +225,9 @@ class SpmdBackend:
         self.cost_weights = None  # installed by the service after refits
         #: shards are resident compute state, not killable virtual nodes
         self.supports_failure_injection = False
+        #: no per-node routing either — chunks visit shards in place, so
+        #: policy decisions (avoid/probe/speculate) don't apply here
+        self.supports_routing_policy = False
         # observability plane (repro.obs.Observability); None = disabled
         self.obs = None
 

@@ -120,6 +120,11 @@ class JobStats:
     packets: int = 0
     failures: int = 0
     reassigned: int = 0
+    # failure-policy accounting: speculative duplicate executions of
+    # straggling packets attempted / won (first-result-wins), and packets
+    # the routing policy kept away from banned nodes
+    speculated: int = 0
+    spec_wins: int = 0
     events_scanned: int = 0   # brick events swept (shared across a batch)
     n_queries: int = 1        # queries amortized over that sweep
     # fragment accounting (common-subexpression factoring across the batch)
@@ -256,7 +261,11 @@ class JobSubmissionEngine:
                                 plan: Optional[query_lib.FragmentPlan] = None,
                                 on_partial: Optional[
                                     Callable[[PacketPartial], None]] = None,
-                                packet_ramp: Optional[int] = None
+                                packet_ramp: Optional[int] = None,
+                                route_avoid: Optional[set] = None,
+                                probe_quota: Optional[Dict[int, int]] = None,
+                                speculate: bool = False,
+                                spec_lead_factor: float = 1.5
                                 ) -> Tuple[List[merge_lib.QueryResult],
                                            JobStats]:
         """Shared-scan execution of K coalesced jobs: ONE sweep over the
@@ -282,7 +291,24 @@ class JobSubmissionEngine:
 
         ``packet_ramp`` overrides the engine-level stream-aware ramp for
         THIS run only (the service enables it per window when someone is
-        streaming); None inherits the engine setting."""
+        streaming); None inherits the engine setting.
+
+        ``route_avoid`` / ``probe_quota`` carry the failure policy's
+        routing decision (``service/policy.py``): avoided nodes never
+        lease a packet this window unless they hold probe quota, in which
+        case they lease at most that many packets.  Replica failover
+        prefers non-avoided owners; if avoidance would starve the scan,
+        availability wins and the policy is ignored.
+
+        ``speculate`` enables straggler mitigation: when a node goes idle
+        with the queue drained, it re-executes the slowest unresolved
+        in-flight packet (first-result-wins).  Because
+        :func:`eval_plan_slice` is pure, the duplicate partials are
+        bit-identical to the originals and are structurally discarded —
+        speculation can only lower a packet's ``t_virtual`` completion,
+        never change the merged result.  In this mode partial emission is
+        deferred to virtual completion order (stamps stay honest), and
+        ``makespan_s`` covers the straggler tail."""
         rec, plan = prepare_window(self.catalog, job_ids, plan)
         failure_script = dict(failure_script or {})
 
@@ -292,7 +318,19 @@ class JobSubmissionEngine:
         if not self.adaptive_packets:
             sched.min = sched.max = sched.base
         dead = self.catalog.dead_nodes()
-        n_alive = max(1, len(self.catalog.alive_nodes()))
+        # routing policy: banned nodes never lease; probing nodes lease at
+        # most their probe quota.  Availability beats policy — if avoidance
+        # would leave no usable node, it is ignored wholesale.
+        avoid = set(route_avoid or ()) - set(dead)
+        quota = dict(probe_quota or {})
+        alive_all = self.catalog.alive_nodes()
+        usable = [n for n in alive_all
+                  if n not in avoid or quota.get(n, 0) > 0]
+        if not usable:
+            avoid, quota = set(), {}
+            usable = list(alive_all)
+        banned = {n for n in avoid if quota.get(n, 0) <= 0}
+        n_alive = max(1, len(usable))
         total_events = sum(self.store.specs[b].n_events for b in rec.bricks)
         if self.adaptive_packets:
             # PROOF base sizing: ~8 packets per node over the job, adapted
@@ -300,8 +338,14 @@ class JobSubmissionEngine:
             sched.base = max(sched.min, total_events // (4 * n_alive))
         brick_node: Dict[int, int] = {}
         lost = []
+        unavailable = set(dead) | banned
         for bid in rec.bricks:
-            owner = failover_owner(self.store.owners(bid), dead)
+            # replica-aware re-targeting: prefer an owner that is neither
+            # dead nor banned; fall back to any live owner rather than
+            # declare the brick lost (availability over policy)
+            owner = failover_owner(self.store.owners(bid), unavailable)
+            if owner < 0:
+                owner = failover_owner(self.store.owners(bid), dead)
             if owner < 0:
                 lost.append(bid)
                 continue
@@ -321,17 +365,70 @@ class JobSubmissionEngine:
         results: List[List[merge_lib.QueryResult]] = []
         # virtual clock: heap of (t_free, node); staging charged on first use
         now = 0.0
-        heap = [(0.0, n) for n in self.catalog.alive_nodes()]
+        free_at: Dict[int, float] = {n: 0.0 for n in usable}
+        heap = [(0.0, n) for n in usable]
         heapq.heapify(heap)
         staged: set = set()
         deadlines = sorted(failure_script)  # virtual times at which nodes die
 
+        def push(t: float, n: int) -> None:
+            # `free_at` names each node's live heap entry, so a speculation
+            # win can cancel the loser by re-pushing it earlier (the stale
+            # entry is skipped at pop time)
+            free_at[n] = t
+            heapq.heappush(heap, (t, n))
+
         def speed(n):
             return self.node_speed.get(n, 1.0)
 
-        while not sched.exhausted and heap:
+        # speculation state: per-seq virtual completion of in-flight
+        # packets; spec mode defers partial emission to completion order
+        spec_open: Dict[int, dict] = {}
+        emit_buf: Dict[int, PacketPartial] = {}
+        emit_next = 0
+
+        def flush_partials(t_now: Optional[float]) -> None:
+            # emit buffered partials in seq order once the packet's virtual
+            # completion has passed (t_now=None flushes everything)
+            nonlocal emit_next
+            while emit_next in emit_buf:
+                info = spec_open.get(emit_next)
+                if t_now is not None and info is not None \
+                        and info["t_done"] > t_now:
+                    break
+                pp = emit_buf.pop(emit_next)
+                if info is not None:
+                    pp = dataclasses.replace(pp, t_virtual=info["t_done"],
+                                             node=info["node"])
+                    spec_open.pop(emit_next)
+                if on_partial is not None:
+                    on_partial(pp)
+                emit_next += 1
+
+        def spec_pending() -> bool:
+            # unresolved, not-yet-duplicated in-flight completions: what
+            # keeps the loop alive after the queue drains in spec mode so
+            # idle nodes get their chance to re-execute the stragglers
+            return any(i["t_done"] > now and not i["spec"]
+                       for i in spec_open.values())
+
+        while not sched.exhausted or (speculate and heap and spec_pending()):
+            if not heap:
+                live = self.catalog.alive_nodes()
+                if avoid and live:
+                    # the routing policy starved the scan (every routable
+                    # node out of budget): availability wins, re-admit all
+                    avoid, quota = set(), {}
+                    for n in live:
+                        push(now, n)
+                    continue
+                break
             t_free, node = heapq.heappop(heap)
+            if free_at.get(node, t_free) != t_free:
+                continue  # superseded by a speculation cancel/re-push
             now = max(now, t_free)
+            if speculate:
+                flush_partials(now)
             # failure injection
             while deadlines and deadlines[0] <= now:
                 t_kill = deadlines.pop(0)
@@ -350,10 +447,72 @@ class JobSubmissionEngine:
                         obs.health.observe_failure(victim)
             if not self.catalog.node(node).alive:
                 continue
+            if node in avoid and quota.get(node, 0) <= 0:
+                continue  # probe budget exhausted: out of this window
             pkt = sched.next_packet(node)
             if pkt is None:
+                if speculate:
+                    cand = [(info["t_done"], -seq, seq, info)
+                            for seq, info in spec_open.items()
+                            if info["t_done"] > now and not info["spec"]
+                            and info["node"] != node]
+                    if cand:
+                        _, _, seq, info = max(cand)
+                        dur2 = (self.tm.dispatch_latency_s
+                                + info["size"] * self.tm.t_event_s
+                                / speed(node))
+                        if node not in staged:
+                            dur2 += self.tm.stage_overhead_s
+                        if info["t_done"] - now > spec_lead_factor * dur2:
+                            # duplicate execution of the straggling slice:
+                            # eval_plan_slice is pure, so the duplicate is
+                            # bit-identical to the row already appended at
+                            # lease time and is discarded — structural
+                            # first-result-wins, no double merge possible
+                            dup = self._eval_packet_batch(
+                                plan, info["brick"], info["start"],
+                                info["size"], rec.calib_iters)
+                            identical = all(
+                                merge_lib.results_identical(a, b)
+                                for a, b in zip(results[seq], dup))
+                            staged.add(node)
+                            info["spec"] = True
+                            stats.speculated += 1
+                            t_spec = now + dur2
+                            win = t_spec < info["t_done"]
+                            if obs is not None:
+                                obs.tracer.event(
+                                    "speculate",
+                                    t_virtual=obs.tracer.virtual_base + now,
+                                    seq=seq, node=node,
+                                    origin_node=info["node"], win=win,
+                                    identical=identical)
+                                obs.metrics.counter(
+                                    "policy.speculations").inc()
+                            if win:
+                                stats.spec_wins += 1
+                                if obs is not None:
+                                    obs.metrics.counter(
+                                        "policy.spec_wins").inc()
+                                loser = info["node"]
+                                info["node"] = node
+                                info["t_done"] = t_spec
+                                # first result wins: the loser is cancelled
+                                # and frees when the winner completes
+                                push(t_spec, loser)
+                                stats.per_node_busy[node] = \
+                                    stats.per_node_busy.get(node, 0) + dur2
+                                push(t_spec, node)
+                            else:
+                                # the original finishes first; the
+                                # speculating node abandons at that moment
+                                stats.per_node_busy[node] = \
+                                    stats.per_node_busy.get(node, 0) \
+                                    + (info["t_done"] - now)
+                                push(info["t_done"], node)
+                            continue
                 if sched.inflight:
-                    heapq.heappush(heap, (now + 0.01, node))
+                    push(now + 0.01, node)
                 continue
             pkt_span = None
             if obs is not None:
@@ -387,9 +546,19 @@ class JobSubmissionEngine:
                 obs.metrics.histogram("packet.latency_s").observe(wall_s)
                 obs.metrics.histogram("packet.events").observe(pkt.size)
                 obs.health.observe_packet(node, pkt.size, wall_s)
-            if on_partial is not None:
+            seq = len(results) - 1
+            if speculate:
+                spec_open[seq] = {"node": node, "t_done": now + dur,
+                                  "brick": pkt.brick_id, "start": pkt.start,
+                                  "size": pkt.size, "spec": False}
+                if on_partial is not None:
+                    emit_buf[seq] = PacketPartial(
+                        seq=seq, brick_id=pkt.brick_id, start=pkt.start,
+                        size=pkt.size, node=node, t_virtual=now + dur,
+                        failures=stats.failures, partials=res)
+            elif on_partial is not None:
                 on_partial(PacketPartial(
-                    seq=len(results) - 1, brick_id=pkt.brick_id,
+                    seq=seq, brick_id=pkt.brick_id,
                     start=pkt.start, size=pkt.size, node=node,
                     t_virtual=now + dur, failures=stats.failures,
                     partials=res))
@@ -399,7 +568,16 @@ class JobSubmissionEngine:
             sched.complete(pkt.packet_id, pkt.size, compute)
             stats.per_node_busy[node] = stats.per_node_busy.get(node, 0) + dur
             stats.packets += 1
-            heapq.heappush(heap, (now + dur, node))
+            if node in avoid:
+                quota[node] = quota.get(node, 0) - 1
+            push(now + dur, node)
+
+        if speculate:
+            # the virtual clock stops at the last LEASE; the straggler tail
+            # (unresolved completions) is exactly what speculation shortens,
+            # so spec-mode makespan accounts for it before flushing
+            now = max([i["t_done"] for i in spec_open.values()] + [now])
+            flush_partials(None)
 
         if not sched.exhausted:
             # every node died with work outstanding: the scan is truncated,

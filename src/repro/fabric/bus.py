@@ -86,7 +86,20 @@ class MessageBus:
         self._inboxes: Dict[str, Deque[Envelope]] = {}
         self._inflight: List[Envelope] = []
         self._groups: Optional[List[set]] = None
+        self._link_loss: Dict[Tuple[str, str], float] = {}
         self._seq = 0
+
+    def set_link_loss(self, src: str, dst: str, rate: float) -> None:
+        """Override the loss rate for ONE directed link (0 restores the
+        bus-wide ``drop_rate``) — the lossy-link scenario the gossip
+        ack/repair protocol exists for.  Draws come from the same seeded
+        RNG as global loss, so runs stay reproducible."""
+        if not (0.0 <= rate < 1.0):
+            raise ValueError("rate must be in [0, 1)")
+        if rate == 0.0:
+            self._link_loss.pop((src, dst), None)
+        else:
+            self._link_loss[(src, dst)] = rate
 
     # ------------------------------------------------------------------ #
     def register(self, node_id: str) -> None:
@@ -134,7 +147,8 @@ class MessageBus:
             if self.metrics is not None:
                 self.metrics.counter("bus.partitioned").inc()
             return False
-        if self.drop_rate and self._rng.random() < self.drop_rate:
+        loss = self._link_loss.get((src, dst), self.drop_rate)
+        if loss and self._rng.random() < loss:
             self.stats.dropped += 1
             if self.metrics is not None:
                 self.metrics.counter("bus.dropped").inc()

@@ -44,6 +44,7 @@ from repro.obs import (HealthMonitor, HealthReport, MetricsRegistry,
 from repro.obs import trace as trace_lib
 from repro.service import streaming as streaming_lib
 from repro.service.frontend import QueryService, Ticket
+from repro.service.policy import FailurePolicy
 from repro.service.scheduler import QueryScheduler
 
 
@@ -102,6 +103,20 @@ class Fleet:
         :class:`~repro.obs.MetricsRegistry` (origin ``fleet``) installed
         on the shared infrastructure — the bus and the L2 tier.  Default
         ``False`` keeps every hook at ``None`` (zero overhead).
+    gossip_repair:
+        ``True`` runs the gossip nodes in ack/repair mode (see
+        ``fabric/gossip.py``): digests are acknowledged, unacked ones
+        re-pushed, and acks from stale senders carry a push-pull reply —
+        the hardening that keeps ``rounds_bound_lossy`` honest on a bus
+        with sustained seeded loss.
+    policy / policy_config:
+        ``True`` gives every front-end a
+        :class:`~repro.service.policy.FailurePolicy` over its own
+        catalogue view (evidence arrives via the gossip-merged health
+        digests, so a node banned from one front-end's evidence is soon
+        banned fleet-wide).  Requires ``obs=True`` (the policy consumes
+        health reports).  ``policy_config`` overrides the default
+        :class:`~repro.service.policy.PolicyConfig` thresholds.
     """
 
     def __init__(self, store: BrickStore, n_frontends: int = 2, *,
@@ -115,9 +130,16 @@ class Fleet:
                  scheduler_factory: Optional[
                      Callable[[], QueryScheduler]] = None,
                  service_kwargs: Optional[dict] = None,
-                 obs: bool = False):
+                 obs: bool = False,
+                 gossip_repair: bool = False,
+                 policy: bool = False,
+                 policy_config=None):
         if n_frontends < 1:
             raise ValueError("need at least one front-end")
+        if policy and not obs:
+            raise ValueError(
+                "policy=True requires obs=True (the failure policy "
+                "consumes the health plane's reports)")
         self.store = store
         self.bus = bus or MessageBus()
         self.l2 = SharedCacheTier(l2_capacity) if shared_cache else None
@@ -146,7 +168,8 @@ class Fleet:
             # vector first so the cache's hook forwards the already-updated
             # vector to the shared tier
             gossip = GossipNode(node_id, catalog, self.bus,
-                                fanout=self.gossip_fanout)
+                                fanout=self.gossip_fanout,
+                                repair=gossip_repair)
             cache = TieredResultCache(l1_capacity, catalog=catalog,
                                       l2=self.l2,
                                       vv_source=lambda g=gossip: g.vv)
@@ -156,11 +179,15 @@ class Fleet:
                 # land in the front-end's own registry
                 gossip.health = fe_obs.health
                 gossip.metrics = fe_obs.metrics
+            pol = None
+            if policy:
+                pol = FailurePolicy(catalog, store, obs=fe_obs,
+                                    config=policy_config)
             svc = QueryService(
                 store, catalog, cache=cache,
                 scheduler=scheduler_factory() if scheduler_factory else None,
                 registry=registry, frontend_id=node_id, obs=fe_obs,
-                **kwargs)
+                policy=pol, **kwargs)
             fanout = StreamFanout(
                 node_id, self.bus,
                 lambda key, idx=i: self._resolve_stream(key, idx))
@@ -177,6 +204,18 @@ class Fleet:
     def rounds_bound(self) -> int:
         """Documented gossip propagation bound for this fleet's shape."""
         return rounds_bound(self.n_frontends, self.gossip_fanout)
+
+    def policy_states(self) -> Dict[str, Dict[int, str]]:
+        """Per-frontend failure-policy states (``fe id -> {node: state}``);
+        empty dict when the fleet was built without ``policy=True``.  Each
+        front-end judges independently from its gossip-merged health view,
+        so entries can disagree transiently until evidence converges."""
+        out: Dict[str, Dict[int, str]] = {}
+        for fe in self.frontends:
+            pol = fe.service.policy
+            if pol is not None:
+                out[fe.node_id] = pol.states()
+        return out
 
     def _resolve_stream(self, key: int,
                         fe_index: int

@@ -99,6 +99,38 @@ def rounds_bound(n_frontends: int, fanout: Optional[int] = None) -> int:
     return math.ceil((n_frontends - 1) / max(1, fanout))
 
 
+def rounds_bound_lossy(n_frontends: int, fanout: Optional[int] = None, *,
+                       drop_rate: float = 0.0,
+                       confidence: float = 0.999) -> int:
+    """Probabilistic propagation bound under sustained i.i.d. message
+    loss: rounds after which a bump is fleet-wide with probability at
+    least ``confidence``.
+
+    Derivation: on the loss-free bus information crosses the ring in
+    ``R = rounds_bound(n, fanout)`` sequential hops.  Digests are
+    cumulative and re-pushed every round (and the ack/repair variant
+    additionally resends unacknowledged digests), so a hop that needs
+    ``m`` rounds to land a message fails with probability
+    ``drop_rate**m`` — each round is an independent Bernoulli trial.
+    Choosing ``m = ceil(log((1-confidence)/R) / log(drop_rate))`` makes
+    each hop's failure probability at most ``(1-confidence)/R``; a union
+    bound over the ``R`` sequential hops caps the total failure
+    probability at ``1-confidence``.  The bound is ``R * m`` rounds —
+    loss multiplies the loss-free bound by a log factor, it does not
+    break convergence (the anti-entropy property the test matrix
+    seeds loss to verify)."""
+    base = rounds_bound(n_frontends, fanout)
+    if base == 0 or drop_rate <= 0.0:
+        return base
+    if not (0.0 < drop_rate < 1.0):
+        raise ValueError("drop_rate must be in [0, 1)")
+    if not (0.0 < confidence < 1.0):
+        raise ValueError("confidence must be in (0, 1)")
+    fail_per_hop = (1.0 - confidence) / base
+    m = math.ceil(math.log(fail_per_hop) / math.log(drop_rate))
+    return base * max(1, m)
+
+
 @dataclasses.dataclass
 class GossipStats:
     """Monotonic gossip counters: digests sent/received, digests that
@@ -108,6 +140,11 @@ class GossipStats:
     digests_stale: int = 0       # received digests that taught us nothing
     epoch_updates: int = 0       # catalog epochs advanced by gossip
     liveness_updates: int = 0    # node alive/dead flips applied by gossip
+    # ack/repair protocol (GossipNode(repair=True)):
+    acks_sent: int = 0           # acks returned for want_ack digests
+    acks_received: int = 0       # our digests confirmed delivered
+    repairs: int = 0             # unacked digests re-pushed after timeout
+    replies_sent: int = 0        # push-pull replies to stale senders
 
 
 class GossipNode:
@@ -126,13 +163,25 @@ class GossipNode:
     """
 
     def __init__(self, node_id: str, catalog: MetadataCatalog,
-                 bus: MessageBus, *, fanout: Optional[int] = None):
+                 bus: MessageBus, *, fanout: Optional[int] = None,
+                 repair: bool = False, ack_rounds: int = 2):
         self.node_id = node_id
         self.catalog = catalog
         self.bus = bus
         # None = adaptive: resolved from the registered ring size at each
         # emit, so late-joining fabric nodes widen the push automatically
         self.fanout = max(1, fanout) if fanout is not None else None
+        # ack/repair hardening (off by default — the plain protocol's
+        # counters stay untouched): digests carry a sequence number and
+        # want an ack; a digest unacked after ``ack_rounds`` emits is
+        # re-pushed once (repair), and an ack from a peer whose digest
+        # shows it is stale carries our full digest back (push-pull) —
+        # what keeps rounds_bound_lossy honest under sustained loss
+        self.repair = repair
+        self.ack_rounds = max(1, ack_rounds)
+        self._round = 0
+        self._next_seq = 0
+        self._unacked: Dict[Tuple[str, int], int] = {}  # (dst, seq) -> round
         self.vv: VersionVector = {}
         # grid node liveness: node -> (version, origin, alive).  Highest
         # (version, origin) wins — the origin id breaks ties between
@@ -197,22 +246,44 @@ class GossipNode:
         return [ring[(i + 1 + k) % len(ring)]
                 for k in range(min(fanout, len(ring) - 1))]
 
-    def emit(self) -> None:
-        """Push the digest to this round's ring targets."""
-        payload = self.digest()
-        for dst in self.targets():
-            self.bus.send(self.node_id, dst, GOSSIP_TOPIC, payload)
-            self.stats.digests_sent += 1
-            if self.metrics is not None:
-                self.metrics.counter("gossip.digests_sent").inc()
-
-    def on_message(self, payload: dict) -> None:
-        """Merge one received digest into local state, applying epoch and
-        liveness changes to the catalogue (which fans out to the caches
-        through the ordinary bump-hook chain)."""
-        self.stats.digests_received += 1
+    def _send_digest(self, dst: str, payload: dict) -> None:
+        body = payload
+        if self.repair:
+            seq = self._next_seq
+            self._next_seq += 1
+            body = dict(payload, seq=seq, src=self.node_id, want_ack=True)
+            self._unacked[(dst, seq)] = self._round
+        self.bus.send(self.node_id, dst, GOSSIP_TOPIC, body)
+        self.stats.digests_sent += 1
         if self.metrics is not None:
-            self.metrics.counter("gossip.digests_received").inc()
+            self.metrics.counter("gossip.digests_sent").inc()
+
+    def emit(self) -> None:
+        """Push the digest to this round's ring targets; in repair mode,
+        additionally re-push to peers whose previous digest went unacked
+        for ``ack_rounds`` emits (the bus ate it — send a fresh one)."""
+        payload = self.digest()
+        targets = self.targets()
+        overdue: List[str] = []
+        if self.repair:
+            self._round += 1
+            for (dst, seq), sent_round in list(self._unacked.items()):
+                if self._round - sent_round >= self.ack_rounds:
+                    del self._unacked[(dst, seq)]
+                    overdue.append(dst)
+        for dst in targets:
+            self._send_digest(dst, payload)
+        for dst in overdue:
+            if dst not in targets:
+                self._send_digest(dst, payload)
+            self.stats.repairs += 1
+            if self.metrics is not None:
+                self.metrics.counter("gossip.repairs").inc()
+
+    # ------------------------------------------------------------------ #
+    def _apply_digest(self, payload: dict) -> Tuple[bool, bool]:
+        """Merge a digest body into local state; returns (epoch changed,
+        liveness changed)."""
         if self.health is not None and "health" in payload:
             self.health.merge_digest(payload["health"])
         changed = merge_vv(self.vv, payload.get("vv", {}))
@@ -231,10 +302,55 @@ class GossipNode:
                     self.catalog.mark_dead(node)
                 self.stats.liveness_updates += 1
                 live_changed = True
+        return changed, live_changed
+
+    def _sender_stale(self, payload: dict) -> bool:
+        """Does the sender's digest show it is missing something we
+        know?  (The push-pull trigger: loss is bidirectional, so an ack
+        is the cheapest place to carry the missing state back.)"""
+        theirs_vv = payload.get("vv", {})
+        if any(n > theirs_vv.get(origin, 0)
+               for origin, n in self.vv.items()):
+            return True
+        theirs_live = payload.get("live", {})
+        for node, mine in self.liveness.items():
+            t = theirs_live.get(node, theirs_live.get(str(node)))
+            if t is None or (mine[0], mine[1]) > (t[0], t[1]):
+                return True
+        return False
+
+    def on_message(self, payload: dict) -> None:
+        """Merge one received digest into local state, applying epoch and
+        liveness changes to the catalogue (which fans out to the caches
+        through the ordinary bump-hook chain).  In repair mode this also
+        handles protocol messages: acks (confirming our digests, possibly
+        carrying a push-pull reply) and digests wanting an ack."""
+        if "ack" in payload:
+            self.stats.acks_received += 1
+            self._unacked.pop((payload.get("src", ""), payload["ack"]),
+                              None)
+            reply = payload.get("reply")
+            if reply:
+                self._apply_digest(reply)
+            return
+        self.stats.digests_received += 1
+        if self.metrics is not None:
+            self.metrics.counter("gossip.digests_received").inc()
+        changed, live_changed = self._apply_digest(payload)
         if not changed and not live_changed:
             self.stats.digests_stale += 1
         elif self.metrics is not None:
             self.metrics.counter("gossip.updates_applied").inc()
+        if self.repair and payload.get("want_ack") \
+                and payload.get("src") in self.bus.nodes:
+            ack = {"ack": payload.get("seq"), "src": self.node_id}
+            if self._sender_stale(payload):
+                ack["reply"] = self.digest()
+                self.stats.replies_sent += 1
+            self.bus.send(self.node_id, payload["src"], GOSSIP_TOPIC, ack)
+            self.stats.acks_sent += 1
+            if self.metrics is not None:
+                self.metrics.counter("gossip.acks_sent").inc()
 
     def detach(self) -> None:
         """Unhook from the catalogue (shutdown path — a long-lived

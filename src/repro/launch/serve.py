@@ -29,6 +29,12 @@ cache tier + persistent fragment registry turn repeats into zero-I/O
 hits on ANY front-end, a mid-run dataset bump demonstrates the gossip
 invalidation bound, and with ``--stream`` one sample ticket is read
 cross-frontend through the bus fan-out.
+
+``--policy`` (query mode) arms the failure-policy engine
+(``service/policy.py``): each front-end runs the node state machine over
+its health reports, routes around degraded/banned nodes, speculatively
+re-executes stragglers, and re-replicates bricks off persistently sick
+nodes; fleet mode additionally hardens epoch gossip with ack/repair.
 """
 from __future__ import annotations
 
@@ -110,9 +116,10 @@ def serve_fleet(args):
                          n_nodes=args.n_nodes,
                          events_per_brick=cfg.events_per_brick,
                          replication=cfg.replication_factor, seed=0)
-    want_obs = bool(args.trace_out or args.metrics_dump)
+    want_obs = bool(args.trace_out or args.metrics_dump or args.policy)
     fleet = Fleet(store, args.fleet, registry=FragmentRegistry(),
-                  backend=args.backend, obs=want_obs)
+                  backend=args.backend, obs=want_obs,
+                  policy=args.policy, gossip_repair=args.policy)
     hot = ["e_total > 40 && count(pt > 15) >= 2",
            "e_t_miss > 30", "pt_lead > 60 || n_tracks >= 8"]
     t0 = time.time()
@@ -151,6 +158,14 @@ def serve_fleet(args):
     if fleet.registry is not None:
         print(f"  registry: {len(fleet.registry)} fragments tracked, "
               f"hot={fleet.registry.hot(4)}")
+    if args.policy:
+        for fe_id, states in fleet.policy_states().items():
+            bad = {n: s for n, s in states.items() if s != "ok"}
+            print(f"  policy[{fe_id}]: "
+                  f"{bad if bad else 'all nodes ok'} "
+                  f"(gossip repair: "
+                  f"{fleet.frontends[0].gossip.stats.repairs} repairs)")
+            break  # one line is enough; views converge via gossip
     if args.stream and sample is not None:
         owner_idx = fleet.owner_of(sample)
         reader = (owner_idx + 1) % args.fleet
@@ -199,11 +214,19 @@ def serve_queries(args):
         clock = lambda: vnow[0]
         wc = WindowController(initial=args.window)
     obs = None
-    if args.trace_out or args.metrics_dump:
+    if args.trace_out or args.metrics_dump or args.policy:
         from repro.obs import Observability
         obs = Observability(origin="fe0")
-    svc = QueryService(store, scheduler=sched, window_controller=wc,
-                       backend=args.backend, obs=obs,
+    policy = catalog = None
+    if args.policy:
+        # the policy and the service must judge node liveness from the
+        # SAME catalogue, so build it here and hand it to both
+        from repro.core.catalog import MetadataCatalog
+        from repro.service.policy import FailurePolicy
+        catalog = MetadataCatalog(store.n_nodes)
+        policy = FailurePolicy(catalog, store, obs=obs)
+    svc = QueryService(store, catalog, scheduler=sched, window_controller=wc,
+                       backend=args.backend, obs=obs, policy=policy,
                        **({"clock": clock} if clock else {}))
     # multi-tenant workload: a few hot queries repeated across tenants
     # (the interactive-analysis regime) plus per-tenant near-duplicate
@@ -272,6 +295,11 @@ def serve_queries(args):
                   f"snapshots ({sample.dropped} conflated), final coverage "
                   f"{cov.events_scanned}/{cov.events_total} events over "
                   f"{len(cov.bricks_seen)}/{cov.bricks_total} bricks")
+    if policy is not None:
+        states = policy.states()
+        bad = {n: st for n, st in states.items() if st != "ok"}
+        print(f"  policy: {bad if bad else 'all nodes ok'} "
+              f"(speculation {'on' if policy.config.speculate else 'off'})")
     if obs is not None:
         if args.trace_out:
             _dump_trace(obs.tracer.records(), args.trace_out)
@@ -315,6 +343,12 @@ def main(argv=None):
     ap.add_argument("--fleet", type=int, default=1,
                     help="query mode: number of coherence-fabric "
                          "front-ends (1 = single QueryService)")
+    ap.add_argument("--policy", action="store_true",
+                    help="query mode: enable the failure-policy engine "
+                         "(node state machine, routing avoidance, "
+                         "speculative re-execution, proactive "
+                         "re-replication; with --fleet also gossip "
+                         "ack/repair) — see docs/policy.md")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="query mode: enable the observability plane and "
                          "write the span trace to PATH (.jsonl = JSONL "

@@ -41,7 +41,7 @@ SCHEMA_VERSION = 1
 SPAN_NAMES = (
     "submit", "admit", "cache_probe", "window", "plan", "dispatch",
     "packet", "merge_prefix", "stream_partial", "stream", "final",
-    "node_death",
+    "node_death", "policy_transition", "speculate", "rereplicate",
 )
 
 STATUS_OPEN, STATUS_OK, STATUS_ERROR = "open", "ok", "error"

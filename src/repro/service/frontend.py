@@ -106,21 +106,34 @@ class WindowController:
     simulated service feeds virtual-time scan makespans, so drive arrivals
     with a virtual clock too (``QueryService(clock=...)``); a wall-clock
     deployment feeds wall-clock latencies instead.
+
+    ``hysteresis`` is a relative dead-band on the output: the held window
+    only moves when the proposal differs from it by more than
+    ``hysteresis x current``.  Under square-wave (bursty) arrivals the
+    raw EWMA proposal straddles two widths and flaps every window —
+    resizing churn with no amortization gain; the dead-band holds the
+    width until the demand shift is real.  ``hysteresis=0`` reproduces
+    the raw controller exactly.
     """
 
     def __init__(self, *, initial: int = 16, min_window: int = 1,
-                 max_window: int = 256, alpha: float = 0.3):
+                 max_window: int = 256, alpha: float = 0.3,
+                 hysteresis: float = 0.25):
         if not (0.0 < alpha <= 1.0):
             raise ValueError("alpha must be in (0, 1]")
         if not (1 <= min_window <= max_window):
             raise ValueError("need 1 <= min_window <= max_window")
+        if hysteresis < 0.0:
+            raise ValueError("hysteresis must be >= 0")
         self.initial = initial
         self.min_window = min_window
         self.max_window = max_window
         self.alpha = alpha
+        self.hysteresis = hysteresis
         self._interarrival: Optional[float] = None
         self._latency: Optional[float] = None
         self._last_arrival: Optional[float] = None
+        self._held: Optional[int] = None
 
     def observe_arrival(self, t: float):
         """Record one submission at time ``t`` (controller clock units)."""
@@ -156,12 +169,19 @@ class WindowController:
         return self._latency
 
     def window(self) -> int:
-        """Proposed window width for the next dispatch."""
+        """Window width for the next dispatch: the clamped ``λ·L``
+        proposal, filtered through the hysteresis dead-band."""
         lam, lat = self.arrival_rate, self.scan_latency
         if lam is None or lat is None:
-            return max(self.min_window, min(self.max_window, self.initial))
-        return max(self.min_window,
-                   min(self.max_window, round(lam * lat)))
+            target = max(self.min_window,
+                         min(self.max_window, self.initial))
+        else:
+            target = max(self.min_window,
+                         min(self.max_window, round(lam * lat)))
+        if self._held is None or \
+                abs(target - self._held) > self.hysteresis * self._held:
+            self._held = target
+        return self._held
 
 
 class QueryService:
@@ -256,7 +276,8 @@ class QueryService:
                  refit_cost_every: Optional[int] = None,
                  stream_ramp: Optional[int] = None,
                  frontend_id: str = "fe0",
-                 obs=None):
+                 obs=None,
+                 policy=None):
         self.store = store
         if backend is not None and not isinstance(backend, str):
             # instance backend: it owns a catalogue/store pair already
@@ -328,6 +349,14 @@ class QueryService:
                 self.backend.obs = obs
             if getattr(self.scheduler, "obs", "missing") is None:
                 self.scheduler.obs = obs
+        # failure policy (service/policy.py): decided before each window
+        # (routing avoidance + speculation on capable backends), resolved
+        # after it (probe outcomes); the scheduler narrows admission by
+        # the routable fraction
+        self.policy = policy
+        if policy is not None and \
+                getattr(self.scheduler, "policy", "missing") is None:
+            self.scheduler.policy = policy
 
     # ------------------------------------------------------------------ #
     def submit(self, expr: str, *, tenant: str = "default",
@@ -488,6 +517,22 @@ class QueryService:
                 "concept)")
         if self.window_controller is not None:
             self.scheduler.max_batch = self.window_controller.window()
+        # failure policy: one decision per window, from the freshest
+        # health evidence (local + gossip-merged); the scheduler's
+        # next_batch narrows admission by the resulting routable fraction
+        decision = None
+        if self.policy is not None:
+            report = (self.obs.health.report()
+                      if self.obs is not None else None)
+            if self.obs is not None:
+                # transition/rereplicate events land on the service's
+                # virtual timeline, not at 0 (reset after the dispatch)
+                self.obs.tracer.virtual_base = self._virtual_now
+            try:
+                decision = self.policy.decide(report)
+            finally:
+                if self.obs is not None:
+                    self.obs.tracer.virtual_base = 0.0
         window = self.scheduler.next_batch()
         if not window:
             return []
@@ -560,16 +605,32 @@ class QueryService:
             # and land on the service's cumulative virtual timeline
             obs.tracer.push(dspan)
             obs.tracer.virtual_base = self._virtual_now
+        routing_kwargs = {}
+        if decision is not None and getattr(
+                self.backend, "supports_routing_policy", False):
+            routing_kwargs = decision.backend_kwargs()
         try:
             merged, stats = self.backend.run_batch(
                 job_ids, failure_script=failure_script, plan=plan,
                 on_partial=publisher.on_partial if publisher is not None
                 else None,
                 packet_ramp=self.stream_ramp if publisher is not None
-                else None)
+                else None,
+                **routing_kwargs)
         finally:
             if obs is not None:
                 obs.tracer.virtual_base = 0.0
+        if self.policy is not None:
+            # resolve probe outcomes from this window's telemetry (any
+            # resulting transition stamps at the window's end time)
+            if obs is not None:
+                obs.tracer.virtual_base = \
+                    self._virtual_now + stats.makespan_s
+            try:
+                self.policy.observe_window(stats)
+            finally:
+                if obs is not None:
+                    obs.tracer.virtual_base = 0.0
         if obs is not None:
             ok_all = all(self.catalog.jobs[j].status == DONE
                          for j in job_ids)

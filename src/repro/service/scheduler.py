@@ -116,10 +116,16 @@ class QueryScheduler:
                  cost_budget_per_tenant: Optional[float] = None,
                  cost_budget_total: Optional[float] = None,
                  window_cost_budget: Optional[float] = None,
-                 backend=None, obs=None, health_gate: bool = False):
+                 backend=None, obs=None, health_gate: bool = False,
+                 policy=None):
         self.max_batch = max_batch
         self.obs = obs
         self.health_gate = health_gate
+        #: the failure policy (service/policy.py), when one is driving
+        #: the service: next_batch narrows admission by its routable
+        #: fraction — banned nodes shrink dispatch capacity, so windows
+        #: shrink with it (the acting counterpart of health_gate's hint)
+        self.policy = policy
         #: last advisory narrowing applied (None when the gate is off or
         #: the fleet is healthy) — what tests and operators inspect
         self.last_health_hint: Optional[Dict] = None
@@ -242,6 +248,19 @@ class QueryScheduler:
                     "degraded": report.degraded,
                 }
                 self.obs.metrics.counter("sched.health_hints").inc()
+        if self.policy is not None:
+            frac = self.policy.routable_fraction()
+            if frac < 1.0:
+                # banned nodes shrink scan capacity: admit proportionally
+                # fewer queries per window so queueing moves to admission
+                # (where fairness applies) instead of the scan itself
+                max_batch = max(1, min(max_batch,
+                                       int(round(self.max_batch * frac))))
+                self.last_health_hint = dict(
+                    self.last_health_hint or {},
+                    max_batch=max_batch,
+                    routable_fraction=frac,
+                    policy_states=self.policy.states())
         group = oldest.calib_iters
         budget = self.window_cost_budget
         window_cost = 0.0
