@@ -21,6 +21,15 @@ Three claims under test, on a fleet of 4 front-ends over one brick store:
    so later whole-query submissions of it never scan; total per-brick
    fragment evaluations drop below per-window factoring alone.
 
+4. **Single-flight execution** — on a near-duplicate workload (every
+   window one canonical submitted at EVERY front-end — the duplicate
+   the shared L2 cannot close, because same-window duplicates miss
+   independently and each runs its own scan), scan-intent leases
+   (``fabric/leases.py``) collapse the fleet to ONE scan per canonical:
+   fleet-wide scanned events drop >= 3x against the no-lease fleet,
+   every per-ticket final stays bit-identical, and the remote
+   first-result latency is unchanged.
+
 Plus the observability acceptance pass: the same workload replayed with
 ``Fleet(obs=True)`` must produce a schema-valid fleet trace (written as
 Perfetto-loadable ``BENCH_fabric_trace.json`` outside smoke) whose
@@ -39,6 +48,7 @@ import pathlib
 
 from repro.configs.geps_events import reduced
 from repro.core import events as ev
+from repro.core import merge as merge_lib
 from repro.core.brick import create_store
 from repro.fabric import Fleet, FragmentRegistry
 from repro.obs import trace as trace_lib
@@ -134,10 +144,39 @@ def run_obs_fleet(store) -> dict:
     return out
 
 
-def remote_first_result_latency(store, *, shared_cache: bool) -> float:
+def near_duplicate_workload(windows: int):
+    """One canonical per window, near-duplicates of each other (same
+    structure, shifted cut) so no window hits a previous window's cache
+    entry — every window is the same-window duplicate-scan race."""
+    return [f"e_total > {30 + w} && count(pt > 15) >= 2"
+            for w in range(windows)]
+
+
+def run_single_flight(store, *, single_flight: bool):
+    """The duplicate-work race at benchmark scale: every window's
+    canonical is submitted at EVERY front-end simultaneously.  Returns
+    (aggregate stats, per-ticket final results in submission order)."""
+    windows = 4 if smoke() else 8
+    fleet = Fleet(store, N_FRONTENDS, single_flight=single_flight)
+    gtids = []
+    for expr in near_duplicate_workload(windows):
+        gtids.extend(fleet.submit(expr, tenant=f"tenant{i}", frontend=i)
+                     for i in range(N_FRONTENDS))
+        fleet.step()
+    fleet.drain()
+    results = [fleet.result(g).result for g in gtids]
+    assert all(r is not None for r in results), "unserved duplicate ticket"
+    stats = fleet.fleet_stats()
+    fleet.close()
+    return stats, results
+
+
+def remote_first_result_latency(store, *, shared_cache: bool,
+                                single_flight: bool = False) -> float:
     """Virtual-clock latency until a tenant at front-end 1 holds a final
     result for a query front-end 0 already answered."""
-    fleet = Fleet(store, 2, shared_cache=shared_cache)
+    fleet = Fleet(store, 2, shared_cache=shared_cache,
+                  single_flight=single_flight)
     fleet.submit(HOT_POOL[0], tenant="a", frontend=0)
     fleet.drain()
     g = fleet.submit(HOT_POOL[0], tenant="b", frontend=1, stream=True)
@@ -203,8 +242,23 @@ def main():
 
     lat_shared = remote_first_result_latency(store, shared_cache=True)
     lat_indep = remote_first_result_latency(store, shared_cache=False)
+    lat_single = remote_first_result_latency(store, shared_cache=True,
+                                             single_flight=True)
     print(f"remote_first_result_s,shared={lat_shared:.3f},"
-          f"independent={lat_indep:.3f}")
+          f"independent={lat_indep:.3f},single_flight={lat_single:.3f}")
+
+    sf, sf_results = run_single_flight(store, single_flight=True)
+    nl, nl_results = run_single_flight(store, single_flight=False)
+    reduction = nl["events_scanned"] / max(1, sf["events_scanned"])
+    identical = all(merge_lib.results_identical(a, b)
+                    for a, b in zip(sf_results, nl_results))
+    print("single_flight,mode,events_scanned,adopted,fallbacks")
+    print(f"single_flight,lease,{sf['events_scanned']},{sf['adopted']},"
+          f"{sf['lease_fallbacks']}")
+    print(f"single_flight,no_lease,{nl['events_scanned']},0,0")
+    print(f"single_flight,scan_reduction={reduction:.2f}x,"
+          f"finals_identical={identical}")
+    assert identical, "adopted finals must be bit-identical to no-lease"
 
     reg = run_registry(store, use_registry=True)
     plain = run_registry(store, use_registry=False)
@@ -222,6 +276,13 @@ def main():
             "shared tier must answer the remote tenant faster"
         assert reg["fragment_evals"] < plain["fragment_evals"], \
             "registry pre-warming must reduce per-brick fragment evals"
+        assert reduction >= 3.0, \
+            f"single-flight must cut fleet-wide scanned events >= 3x " \
+            f"on the near-duplicate workload (got {reduction:.2f}x)"
+        assert sf["adopted"] > 0, "no adoptions happened"
+        assert lat_single == lat_shared, \
+            f"single-flight must not change remote first-result " \
+            f"latency ({lat_single:.3f}s vs {lat_shared:.3f}s)"
         OUT.write_text(json.dumps({
             "bench": "fabric",
             "config": {"n_events": N_EVENTS, "n_nodes": N_NODES,
@@ -232,9 +293,13 @@ def main():
             "fleet_hit_rate": {"shared_l2": shared,
                                "independent": indep},
             "remote_first_result_s": {"shared_l2": lat_shared,
-                                      "independent": lat_indep},
+                                      "independent": lat_indep,
+                                      "single_flight": lat_single},
             "registry_prewarming": {"prewarmed": reg,
                                     "window_only": plain},
+            "single_flight": {"lease": sf, "no_lease": nl,
+                              "scan_reduction_x": reduction,
+                              "finals_identical": identical},
         }, indent=2) + "\n")
         print(f"snapshot written: {OUT.name}")
         print(f"shared-L2 fleet hit rate {shared['hit_rate']:.3f} > "

@@ -169,6 +169,14 @@ def check_policy_contract_doc():
                                 "docs/policy.md")
 
 
+def check_lease_contract_doc():
+    """Every public top-level name in fabric/leases.py must appear in
+    docs/fabric.md (single-flight lease lifecycle, TTL/failover
+    semantics and the adoption surface stay in sync with the code)."""
+    return _contract_doc_errors([ROOT / "src/repro/fabric/leases.py"],
+                                "docs/fabric.md")
+
+
 def check_obs_contract_doc():
     """Every public top-level name of the observability package must
     appear in docs/observability.md (span taxonomy / metric catalog /
@@ -203,6 +211,7 @@ def main() -> int:
     errors += check_api_docs()
     errors += check_backend_contract_doc()
     errors += check_policy_contract_doc()
+    errors += check_lease_contract_doc()
     errors += check_obs_contract_doc()
     if errors:
         print(f"check_docs: {len(errors)} problem(s)")

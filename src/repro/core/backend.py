@@ -156,17 +156,20 @@ class SimulatedBackend:
                   route_avoid: Optional[set] = None,
                   probe_quota: Optional[Dict[int, int]] = None,
                   speculate: bool = False,
-                  spec_lead_factor: float = 1.5
+                  spec_lead_factor: float = 1.5,
+                  rereplicated: Optional[List[Tuple[int, int, int]]] = None
                   ) -> Tuple[List[merge_lib.QueryResult], JobStats]:
         """Execute the window on the simulated grid (see
         :meth:`ExecutionBackend.run_batch` for the contract; the routing
         kwargs carry a :class:`~repro.service.policy.PolicyDecision` —
-        see ``run_job_batch_simulated`` for their semantics)."""
+        see ``run_job_batch_simulated`` for their semantics, including
+        the ``rereplicated`` brick-copy transfer charge)."""
         return self.engine.run_job_batch_simulated(
             job_ids, plan=plan, on_partial=on_partial,
             failure_script=failure_script, packet_ramp=packet_ramp,
             route_avoid=route_avoid, probe_quota=probe_quota,
-            speculate=speculate, spec_lead_factor=spec_lead_factor)
+            speculate=speculate, spec_lead_factor=spec_lead_factor,
+            rereplicated=rereplicated)
 
 
 class SpmdBackend:

@@ -54,6 +54,9 @@ class TimeModel:
     result_bytes: float = 2.0e5        # per-node result file (per query)
     bandwidth_Bps: float = 12.5e6      # 100 Mbit/s fast Ethernet
     merge_per_node_s: float = 0.02     # JSE merge cost per partial result
+    brick_bytes_per_event: float = 2.0e3  # on-disk brick payload per event
+    # (re-replication ships whole bricks: n_events x brick_bytes_per_event
+    # over the same fast-Ethernet links, charged on BOTH endpoints)
 
     # A shared scan is read-dominated: evaluating K stacked predicates on a
     # resident slice costs the same sweep as one (the extra FLOPs hide under
@@ -125,6 +128,10 @@ class JobStats:
     # the routing policy kept away from banned nodes
     speculated: int = 0
     spec_wins: int = 0
+    # virtual seconds of brick-copy traffic charged for proactive
+    # re-replication applied to this window (both endpoints busy while the
+    # copy streams — data movement is never free)
+    rereplication_transfer_s: float = 0.0
     events_scanned: int = 0   # brick events swept (shared across a batch)
     n_queries: int = 1        # queries amortized over that sweep
     # fragment accounting (common-subexpression factoring across the batch)
@@ -265,7 +272,9 @@ class JobSubmissionEngine:
                                 route_avoid: Optional[set] = None,
                                 probe_quota: Optional[Dict[int, int]] = None,
                                 speculate: bool = False,
-                                spec_lead_factor: float = 1.5
+                                spec_lead_factor: float = 1.5,
+                                rereplicated: Optional[
+                                    List[Tuple[int, int, int]]] = None
                                 ) -> Tuple[List[merge_lib.QueryResult],
                                            JobStats]:
         """Shared-scan execution of K coalesced jobs: ONE sweep over the
@@ -299,6 +308,14 @@ class JobSubmissionEngine:
         case they lease at most that many packets.  Replica failover
         prefers non-avoided owners; if avoidance would starve the scan,
         availability wins and the policy is ignored.
+
+        ``rereplicated`` charges the data movement of brick copies the
+        failure policy applied before this window (``(brick, src, dst)``
+        triples): each copy occupies BOTH endpoints for the brick's
+        transfer time on the virtual clock before either node leases its
+        first packet, and the total lands in
+        ``JobStats.rereplication_transfer_s`` — re-replication buys
+        resilience with real bandwidth, not for free.
 
         ``speculate`` enables straggler mitigation: when a node goes idle
         with the queue drained, it re-executes the slowest unresolved
@@ -363,10 +380,23 @@ class JobSubmissionEngine:
         stats = JobStats(n_queries=len(job_ids))
         plan_aggs = query_lib.unique_aggregates(plan.targets())
         results: List[List[merge_lib.QueryResult]] = []
+        # re-replication transfer charge: each applied copy streams one
+        # whole brick src -> dst, occupying both endpoints before they can
+        # lease packets (the window pays for the policy's data movement)
+        busy0: Dict[int, float] = {}
+        for bid, src, dst in (rereplicated or ()):
+            spec = self.store.specs.get(bid)
+            if spec is None:
+                continue
+            xfer = (spec.n_events * self.tm.brick_bytes_per_event
+                    / self.tm.bandwidth_Bps)
+            busy0[src] = busy0.get(src, 0.0) + xfer
+            busy0[dst] = busy0.get(dst, 0.0) + xfer
+            stats.rereplication_transfer_s += xfer
         # virtual clock: heap of (t_free, node); staging charged on first use
         now = 0.0
-        free_at: Dict[int, float] = {n: 0.0 for n in usable}
-        heap = [(0.0, n) for n in usable]
+        free_at: Dict[int, float] = {n: busy0.get(n, 0.0) for n in usable}
+        heap = [(free_at[n], n) for n in usable]
         heapq.heapify(heap)
         staged: set = set()
         deadlines = sorted(failure_script)  # virtual times at which nodes die

@@ -10,6 +10,8 @@ from repro.fabric.fanout import FanoutStats, StreamFanout
 from repro.fabric.fleet import Fleet, Frontend
 from repro.fabric.gossip import (GossipNode, GossipStats, adaptive_fanout,
                                  effective_epoch, merge_vv, rounds_bound)
+from repro.fabric.leases import (LEASE_TOPIC, LeaseManager, LeaseRecord,
+                                 LeaseStats, lease_key, lease_ttl)
 from repro.fabric.registry import FragmentRecord, FragmentRegistry
 from repro.fabric.shared_cache import (SharedCacheStats, SharedCacheTier,
                                        TieredResultCache)
@@ -17,7 +19,8 @@ from repro.fabric.shared_cache import (SharedCacheStats, SharedCacheTier,
 __all__ = [
     "BusStats", "Envelope", "FanoutStats", "Fleet", "FragmentRecord",
     "FragmentRegistry", "Frontend", "GossipNode", "GossipStats",
+    "LEASE_TOPIC", "LeaseManager", "LeaseRecord", "LeaseStats",
     "MessageBus", "SharedCacheStats", "SharedCacheTier", "StreamFanout",
-    "TieredResultCache", "adaptive_fanout", "effective_epoch", "merge_vv",
-    "rounds_bound",
+    "TieredResultCache", "adaptive_fanout", "effective_epoch",
+    "lease_key", "lease_ttl", "merge_vv", "rounds_bound",
 ]

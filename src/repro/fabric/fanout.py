@@ -29,7 +29,7 @@ delays) are guarded by per-snapshot sequence numbers on the proxy side.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.fabric.bus import MessageBus
 from repro.service import streaming as streaming_lib
@@ -67,9 +67,16 @@ class StreamFanout:
         self.resolve = resolve
         self.proxy_capacity = proxy_capacity
         self.stats = FanoutStats()
+        #: optional predicate over keys: True defers an unresolvable
+        #: ``sub`` instead of aborting it (the stream is EXPECTED to
+        #: appear — e.g. a lease this front-end announced but whose
+        #: window has not dispatched yet); :meth:`flush` serves the
+        #: parked subs once the stream exists
+        self.defer: Optional[Callable[[object], bool]] = None
         self._proxies: Dict[int, streaming_lib.ResultStream] = {}
         self._proxy_seq: Dict[int, int] = {}  # last seq applied per proxy
         self._exports: Dict[Tuple[int, str], bool] = {}  # dedup subs
+        self._pending_subs: Dict[int, List[str]] = {}  # key -> readers
         bus.register(node_id)
 
     # ---------------------------- reader side -------------------------- #
@@ -87,10 +94,30 @@ class StreamFanout:
                       {"kind": "sub", "key": key, "reader": self.node_id})
         return proxy
 
+    def resubscribe(self, key: int, owner: str) -> None:
+        """Re-send the subscription for an existing proxy — the healing
+        move when a partition/drop may have swallowed snapshots (or the
+        original ``sub``) mid-adoption.  The owner replays its buffered
+        prefix (and the final, if the stream already finished); the
+        proxy's sequence guard discards whatever it already has, so
+        re-subscribing is always safe."""
+        if key in self._proxies:
+            self.bus.send(self.node_id, owner, STREAM_TOPIC,
+                          {"kind": "sub", "key": key,
+                           "reader": self.node_id})
+
     # ---------------------------- owner side --------------------------- #
     def _export(self, key: int, reader: str) -> None:
         stream = self.resolve(key)
         if stream is None:
+            if self.defer is not None and self.defer(key):
+                # the stream is expected (an announced-but-undispatched
+                # lease): park the sub; flush() serves it — live from
+                # the first packet — once the export registers
+                readers = self._pending_subs.setdefault(key, [])
+                if reader not in readers:
+                    readers.append(reader)
+                return
             self.bus.send(self.node_id, reader, STREAM_TOPIC,
                           {"kind": "close", "key": key, "state": "ABORTED",
                            "note": f"no stream for ticket {key} on "
@@ -131,6 +158,14 @@ class StreamFanout:
             self._exports[(key, reader)] = True
             stream.subscribe(forward)
             stream.on_close(closed)
+
+    def flush(self, key: int) -> None:
+        """Serve every sub parked on ``key`` (call when the key's stream
+        has become resolvable): deferred readers subscribe live from the
+        stream's first publish, exactly as if the sub had arrived after
+        the export."""
+        for reader in self._pending_subs.pop(key, []):
+            self._export(key, reader)
 
     # ---------------------------- dispatch ----------------------------- #
     def on_message(self, payload: dict) -> None:

@@ -28,7 +28,8 @@ tier.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Tuple
+import pathlib
+from typing import Callable, Dict, List, Optional, Tuple, Union
 
 from repro.core.brick import BrickStore
 from repro.core.catalog import MetadataCatalog
@@ -37,6 +38,8 @@ from repro.fabric.bus import MessageBus
 from repro.fabric.fanout import STREAM_TOPIC, StreamFanout
 from repro.fabric.gossip import (GOSSIP_TOPIC, GossipNode, adaptive_fanout,
                                  rounds_bound)
+from repro.fabric import leases as leases_lib
+from repro.fabric.leases import LEASE_TOPIC, LeaseManager
 from repro.fabric.registry import FragmentRegistry
 from repro.fabric.shared_cache import SharedCacheTier, TieredResultCache
 from repro.obs import (HealthMonitor, HealthReport, MetricsRegistry,
@@ -51,7 +54,10 @@ from repro.service.scheduler import QueryScheduler
 @dataclasses.dataclass
 class Frontend:
     """One fleet member: the service plus its fabric endpoints (own
-    catalogue view, gossip node, stream fan-out)."""
+    catalogue view, gossip node, stream fan-out, and — under
+    ``single_flight=True`` — the scan-intent lease manager).  ``alive``
+    turns False on :meth:`Fleet.frontend_leave`: a dead front-end stops
+    emitting/receiving and its leases expire by TTL."""
     index: int
     node_id: str
     service: QueryService
@@ -59,6 +65,8 @@ class Frontend:
     gossip: GossipNode
     fanout: StreamFanout
     obs: Optional[Observability] = None
+    leases: Optional[LeaseManager] = None
+    alive: bool = True
 
 
 class Fleet:
@@ -117,6 +125,21 @@ class Fleet:
         banned fleet-wide).  Requires ``obs=True`` (the policy consumes
         health reports).  ``policy_config`` overrides the default
         :class:`~repro.service.policy.PolicyConfig` thresholds.
+    single_flight / lease_ttl:
+        ``True`` wires a :class:`~repro.fabric.leases.LeaseManager` into
+        every front-end: scan intents are announced at submit, duplicate
+        scans are adopted from the lease owner's in-flight stream
+        (``fabric/leases.py``), and :meth:`step` pumps one bus
+        round-trip before dispatching so same-round intents resolve to
+        one owner first.  ``lease_ttl`` (bus rounds) overrides
+        :func:`~repro.fabric.leases.lease_ttl`'s gossip-bound default.
+    l2_path / l2_checkpoint_every:
+        Operational L2 persistence: when ``l2_path`` names an existing
+        file the shared tier boots from it (post-restart submissions hit
+        with zero I/O), and the fleet checkpoints the tier back to the
+        path on :meth:`close` plus every ``l2_checkpoint_every``
+        :meth:`step` calls (0 = only on close).  Requires
+        ``shared_cache=True`` to matter.
     """
 
     def __init__(self, store: BrickStore, n_frontends: int = 2, *,
@@ -133,7 +156,11 @@ class Fleet:
                  obs: bool = False,
                  gossip_repair: bool = False,
                  policy: bool = False,
-                 policy_config=None):
+                 policy_config=None,
+                 single_flight: bool = False,
+                 lease_ttl: Optional[int] = None,
+                 l2_path: Optional[Union[str, pathlib.Path]] = None,
+                 l2_checkpoint_every: int = 0):
         if n_frontends < 1:
             raise ValueError("need at least one front-end")
         if policy and not obs:
@@ -142,7 +169,17 @@ class Fleet:
                 "consumes the health plane's reports)")
         self.store = store
         self.bus = bus or MessageBus()
-        self.l2 = SharedCacheTier(l2_capacity) if shared_cache else None
+        self.single_flight = single_flight
+        self.l2_path = pathlib.Path(l2_path) if l2_path is not None else None
+        self.l2_checkpoint_every = l2_checkpoint_every
+        self._steps_since_ckpt = 0
+        if shared_cache and self.l2_path is not None \
+                and self.l2_path.exists():
+            # boot from the last checkpoint: results computed before the
+            # restart are zero-I/O hits immediately
+            self.l2 = SharedCacheTier.load(self.l2_path)
+        else:
+            self.l2 = SharedCacheTier(l2_capacity) if shared_cache else None
         self.fleet_metrics: Optional[MetricsRegistry] = None
         if obs:
             self.fleet_metrics = MetricsRegistry(origin="fleet")
@@ -183,16 +220,33 @@ class Fleet:
             if policy:
                 pol = FailurePolicy(catalog, store, obs=fe_obs,
                                     config=policy_config)
+            lease_mgr = None
+            if single_flight:
+                ttl = (lease_ttl if lease_ttl is not None
+                       else leases_lib.lease_ttl(n_frontends,
+                                                 self.gossip_fanout,
+                                                 self.bus.delay))
+                lease_mgr = LeaseManager(node_id, self.bus,
+                                         lambda g=gossip: g.vv,
+                                         ttl=ttl, obs=fe_obs)
             svc = QueryService(
                 store, catalog, cache=cache,
                 scheduler=scheduler_factory() if scheduler_factory else None,
                 registry=registry, frontend_id=node_id, obs=fe_obs,
-                policy=pol, **kwargs)
+                policy=pol, leases=lease_mgr, **kwargs)
             fanout = StreamFanout(
                 node_id, self.bus,
                 lambda key, idx=i: self._resolve_stream(key, idx))
+            if lease_mgr is not None:
+                # adoptees proxy remote lease streams through the same
+                # fan-out that serves cross-front-end ticket reads; subs
+                # for leases we announced but have not dispatched yet are
+                # parked, not aborted (the export is coming)
+                lease_mgr.fanout = fanout
+                fanout.defer = lease_mgr.intends
             self.frontends.append(Frontend(i, node_id, svc, catalog,
-                                           gossip, fanout, fe_obs))
+                                           gossip, fanout, fe_obs,
+                                           lease_mgr))
 
     # ------------------------------------------------------------------ #
     @property
@@ -217,13 +271,19 @@ class Fleet:
                 out[fe.node_id] = pol.states()
         return out
 
-    def _resolve_stream(self, key: int,
+    def _resolve_stream(self, key: Union[int, str],
                         fe_index: int
                         ) -> Optional[streaming_lib.ResultStream]:
+        fe = self.frontends[fe_index]
+        if isinstance(key, str):
+            # lease keys are strings; integer keys are global ticket ids
+            if fe.leases is None:
+                return None
+            return fe.leases.exports.get(key)
         owner = self._tickets.get(key)
         if owner is None or owner[0] != fe_index:
             return None
-        return self.frontends[fe_index].service.streams.get(owner[1])
+        return fe.service.streams.get(owner[1])
 
     def _owner(self, gtid: int) -> Tuple[Frontend, int]:
         fe_idx, tid = self._tickets[gtid]
@@ -238,11 +298,18 @@ class Fleet:
     def submit(self, expr: str, *, tenant: str = "default",
                calib_iters: int = 0, stream: bool = False,
                frontend: Optional[int] = None) -> int:
-        """Submit to one front-end (round-robin when ``frontend`` is None);
-        returns a fleet-global ticket id usable at any front-end."""
+        """Submit to one front-end (round-robin over LIVE front-ends when
+        ``frontend`` is None); returns a fleet-global ticket id usable at
+        any front-end."""
         if frontend is None:
-            frontend = self._rr % self.n_frontends
-            self._rr += 1
+            for _ in range(self.n_frontends):
+                idx = self._rr % self.n_frontends
+                self._rr += 1
+                if self.frontends[idx].alive:
+                    frontend = idx
+                    break
+            if frontend is None:
+                raise RuntimeError("no live front-ends")
         fe = self.frontends[frontend]
         tid = fe.service.submit(expr, tenant=tenant,
                                 calib_iters=calib_iters, stream=stream)
@@ -273,51 +340,90 @@ class Fleet:
 
     # ------------------------------------------------------------------ #
     def pump(self, rounds: int = 1) -> None:
-        """Advance the fabric ``rounds`` network rounds: every gossip node
-        pushes its digest, the bus ticks, and delivered messages are
-        dispatched to their topic handlers."""
+        """Advance the fabric ``rounds`` network rounds: every live
+        front-end's gossip node pushes its digest (and its lease manager
+        re-announces intents, under ``single_flight``), the bus ticks,
+        delivered messages are dispatched to their topic handlers, and
+        pending stream adoptions are polled.  Dead front-ends
+        (:meth:`frontend_leave`) emit nothing; their inboxes are drained
+        and discarded so in-flight accounting still quiesces."""
         for _ in range(rounds):
             for fe in self.frontends:
+                if not fe.alive:
+                    continue
                 fe.gossip.emit()
+                if fe.leases is not None:
+                    fe.leases.emit()
             self.bus.tick()
             for fe in self.frontends:
+                if not fe.alive:
+                    self.bus.recv(fe.node_id)  # discard: nobody is home
+                    continue
                 for env in self.bus.recv(fe.node_id):
                     if env.topic == GOSSIP_TOPIC:
                         fe.gossip.on_message(env.payload)
                     elif env.topic == STREAM_TOPIC:
                         fe.fanout.on_message(env.payload)
+                    elif env.topic == LEASE_TOPIC \
+                            and fe.leases is not None:
+                        fe.leases.on_message(env.payload)
+            for fe in self.frontends:
+                if fe.alive and fe.leases is not None:
+                    fe.service.poll_adoptions()
 
     def step(self, frontend: Optional[int] = None, *,
              failure_script=None, pump_rounds: int = 1) -> List[int]:
-        """Run one dispatch window on one (or every) front-end, then pump
-        the fabric; returns the GLOBAL ids of tickets served."""
+        """Run one dispatch window on one (or every live) front-end, then
+        pump the fabric; returns the GLOBAL ids of tickets served.  Under
+        ``single_flight`` the fabric is pumped one bus round-trip BEFORE
+        dispatch, so intents announced at submit time have resolved to
+        one owner per duplicated canonical fleet-wide and the losers
+        adopt instead of scanning."""
+        if self.single_flight:
+            self.pump(1 + self.bus.delay)
         targets = ([self.frontends[frontend]] if frontend is not None
-                   else self.frontends)
+                   else [fe for fe in self.frontends if fe.alive])
         served = []
         for fe in targets:
             for tid in fe.service.step(failure_script=failure_script):
                 served.append(self._by_local[(fe.index, tid)])
         self.pump(pump_rounds)
+        if self.l2_checkpoint_every > 0 and self.l2 is not None \
+                and self.l2_path is not None:
+            self._steps_since_ckpt += 1
+            if self._steps_since_ckpt >= self.l2_checkpoint_every:
+                self._steps_since_ckpt = 0
+                self.l2.save(self.l2_path)
         return served
 
+    def _busy(self) -> bool:
+        return any(fe.alive and (fe.service.scheduler.n_pending > 0
+                                 or fe.service.adoptions_pending)
+                   for fe in self.frontends)
+
     def drain(self, *, max_windows: int = 10_000) -> None:
-        """Dispatch windows on every front-end until no work is pending,
-        pump until the stream fan-out traffic quiesces (all snapshots
-        landed), then run one full anti-entropy cycle (``rounds_bound``
-        pumps) so every epoch/liveness fact observed before the drain is
-        fleet-wide.  Quiescence is judged on the stream topic only: every
-        pump emits fresh gossip digests, so waiting for a fully idle bus
-        would spin forever on a delayed bus."""
+        """Dispatch windows on every front-end until no work is pending
+        and no adoption is unresolved, pump until the stream fan-out
+        traffic quiesces (all snapshots landed), then run one full
+        anti-entropy cycle (``rounds_bound`` pumps) so every
+        epoch/liveness fact observed before the drain is fleet-wide.
+        Quiescence is judged on the stream topic only: every pump emits
+        fresh gossip digests, so waiting for a fully idle bus would spin
+        forever on a delayed bus.  The outer loop re-enters dispatch when
+        the anti-entropy cycle itself creates work — e.g. a lease TTL
+        expiry whose fallback requeued a scan."""
         for _ in range(max_windows):
-            if all(fe.service.scheduler.n_pending == 0
-                   for fe in self.frontends):
+            for _ in range(max_windows):
+                if not self._busy():
+                    break
+                self.step()
+            guard = 0
+            while self.bus.in_flight(STREAM_TOPIC) and guard < 1000:
+                self.pump()
+                guard += 1
+            self.pump(self.rounds_bound)
+            if not self._busy():
                 break
-            self.step()
-        guard = 0
-        while self.bus.in_flight(STREAM_TOPIC) and guard < 1000:
-            self.pump()
-            guard += 1
-        self.pump(self.rounds_bound)
 
     # ------------------------------------------------------------------ #
     def bump_dataset_version(self, frontend: int = 0) -> int:
@@ -343,12 +449,33 @@ class Fleet:
         fe.gossip.observe_liveness(grid_node, True)
         return plan
 
+    def frontend_leave(self, index: int) -> None:
+        """Silent FRONT-END crash: the member stops emitting gossip and
+        lease refreshes and stops receiving (its inbox is discarded).  No
+        message is sent — peers find out the slow way: leases it held
+        expire after one TTL, and adoptees of its streams fall back
+        (shared cache first, own rescan on a miss).  Its own queued work
+        is stranded, as a real crash strands it."""
+        self.frontends[index].alive = False
+
+    def ban_frontend(self, index: int, *, by: int = 0) -> None:
+        """Policy ban of a front-end (the PR 7 state machine's verdict
+        applied at the service tier): the member leaves as in
+        :meth:`frontend_leave`, AND front-end ``by`` broadcasts a lease
+        revocation for it — adoptees fall back on the next pump instead
+        of waiting out the TTL (the fast path for *known*-bad owners)."""
+        self.frontend_leave(index)
+        observer = self.frontends[by]
+        if observer.leases is not None:
+            observer.leases.revoke_owner(self.frontends[index].node_id)
+
     # ------------------------------------------------------------------ #
     def fleet_stats(self) -> dict:
         """Aggregated service/cache counters across the fleet (plus the
         shared tier's own counters when enabled)."""
         agg = {"submitted": 0, "served": 0, "rejected": 0, "cache_hits": 0,
-               "l2_hits": 0, "events_scanned": 0, "fragment_evals": 0}
+               "l2_hits": 0, "events_scanned": 0, "fragment_evals": 0,
+               "adopted": 0, "lease_fallbacks": 0}
         for fe in self.frontends:
             s = fe.service.stats
             agg["submitted"] += s.submitted
@@ -357,6 +484,8 @@ class Fleet:
             agg["cache_hits"] += s.cache_hits
             agg["events_scanned"] += s.events_scanned
             agg["fragment_evals"] += s.fragment_evals
+            agg["adopted"] += s.adopted
+            agg["lease_fallbacks"] += s.lease_fallbacks
             agg["l2_hits"] += fe.service.cache.stats.l2_hits
         agg["hit_rate"] = agg["cache_hits"] / max(1, agg["submitted"])
         if self.l2 is not None:
@@ -417,9 +546,12 @@ class Fleet:
         return agg.report()
 
     def close(self) -> None:
-        """Shut the fleet down: every front-end's service closes (cache
-        hooks detached) and every gossip node detaches from its
-        catalogue — a long-lived catalogue accumulates no dead hooks."""
+        """Shut the fleet down: checkpoint the L2 (when ``l2_path`` is
+        configured), close every front-end's service (cache hooks
+        detached) and detach every gossip node from its catalogue — a
+        long-lived catalogue accumulates no dead hooks."""
+        if self.l2 is not None and self.l2_path is not None:
+            self.l2.save(self.l2_path)
         for fe in self.frontends:
             fe.service.close()
             fe.gossip.detach()

@@ -119,7 +119,8 @@ def serve_fleet(args):
     want_obs = bool(args.trace_out or args.metrics_dump or args.policy)
     fleet = Fleet(store, args.fleet, registry=FragmentRegistry(),
                   backend=args.backend, obs=want_obs,
-                  policy=args.policy, gossip_repair=args.policy)
+                  policy=args.policy, gossip_repair=args.policy,
+                  single_flight=args.single_flight)
     hot = ["e_total > 40 && count(pt > 15) >= 2",
            "e_t_miss > 30", "pt_lead > 60 || n_tracks >= 8"]
     t0 = time.time()
@@ -127,7 +128,11 @@ def serve_fleet(args):
     for i in range(args.queries):
         tenant = f"tenant{i % args.tenants}"
         if i % 3 != 2:
-            expr = hot[i % len(hot)]
+            # hot index advances slower than the submit round-robin, so
+            # consecutive submissions of the same hot query land on
+            # DIFFERENT front-ends in the same window — the same-window
+            # duplicate-scan race single-flight leases exist to close
+            expr = hot[(i // 3) % len(hot)]
         else:
             expr = (f"e_total > {20 + (i % 7) * 10} && "
                     f"count(pt > 15) >= {1 + i % 4}")
@@ -148,6 +153,10 @@ def serve_fleet(args):
     print(f"  hit_rate={s['hit_rate']:.3f} (cache_hits={s['cache_hits']}, "
           f"of which l2_hits={s['l2_hits']}), "
           f"events_scanned={s['events_scanned']}")
+    if args.single_flight:
+        print(f"  single-flight: adopted={s['adopted']} tickets rode a "
+              f"remote lease owner's stream "
+              f"(fallbacks={s['lease_fallbacks']})")
     print(f"  gossip: bound={fleet.rounds_bound} rounds "
           f"(fanout={fleet.gossip_fanout}), epochs="
           f"{[fe.catalog.dataset_epoch for fe in fleet.frontends]}")
@@ -343,6 +352,11 @@ def main(argv=None):
     ap.add_argument("--fleet", type=int, default=1,
                     help="query mode: number of coherence-fabric "
                          "front-ends (1 = single QueryService)")
+    ap.add_argument("--single-flight", action="store_true",
+                    help="query mode with --fleet: scan-intent leases + "
+                         "in-flight stream adoption (fabric/leases.py) — "
+                         "N duplicate scans become 1 scan + N-1 zero-I/O "
+                         "stream subscriptions")
     ap.add_argument("--policy", action="store_true",
                     help="query mode: enable the failure-policy engine "
                          "(node state machine, routing avoidance, "

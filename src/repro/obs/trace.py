@@ -42,6 +42,7 @@ SPAN_NAMES = (
     "submit", "admit", "cache_probe", "window", "plan", "dispatch",
     "packet", "merge_prefix", "stream_partial", "stream", "final",
     "node_death", "policy_transition", "speculate", "rereplicate",
+    "lease_adopt", "lease_fallback",
 )
 
 STATUS_OPEN, STATUS_OK, STATUS_ERROR = "open", "ok", "error"

@@ -59,7 +59,9 @@ class Ticket:
     """Per-submission record a tenant polls via ``QueryService.result``.
 
     ``status`` moves QUEUED -> SERVED/REJECTED/FAILED; ``note`` carries the
-    rejection/failure reason; ``from_cache`` marks zero-I/O answers."""
+    rejection/failure reason; ``from_cache`` marks zero-I/O answers and
+    ``adopted`` answers taken from another front-end's in-flight lease
+    stream (single-flight execution — also zero local I/O)."""
     ticket_id: int
     tenant: str
     expr: str
@@ -71,6 +73,7 @@ class Ticket:
     result: Optional[merge_lib.QueryResult] = None
     note: str = ""
     streamed: bool = False  # progressive delivery via QueryService.stream()
+    adopted: bool = False   # resolved from a remote lease owner's stream
 
 
 @dataclasses.dataclass
@@ -89,6 +92,11 @@ class ServiceStats:
     # (fragment-cache installs are counted by ResultCache.stats)
     fragment_evals: int = 0
     fragment_evals_unshared: int = 0
+    # single-flight accounting: tickets resolved by adopting a remote
+    # lease owner's stream, and adoptions that had to fall back (owner
+    # death/ban/epoch bump — resolved from cache or by rescanning)
+    adopted: int = 0
+    lease_fallbacks: int = 0
 
 
 class WindowController:
@@ -184,6 +192,21 @@ class WindowController:
         return self._held
 
 
+@dataclasses.dataclass
+class _Adoption:
+    # one in-flight single-flight adoption: the dequeued submissions of a
+    # canonical group riding a remote lease owner's proxied stream
+    key: str
+    owner: str
+    subs: List[Submission]
+    proxy: streaming_lib.ResultStream
+    epoch: int
+    fp: str
+    adopted_round: int = 0   # bus round the adoption was made
+    last_published: int = 0  # proxy progress at the last stall check
+    checked_round: int = 0   # bus round of the last stall check
+
+
 class QueryService:
     """Multi-tenant query service: tickets in, shared scans underneath.
 
@@ -277,7 +300,8 @@ class QueryService:
                  stream_ramp: Optional[int] = None,
                  frontend_id: str = "fe0",
                  obs=None,
-                 policy=None):
+                 policy=None,
+                 leases=None):
         self.store = store
         if backend is not None and not isinstance(backend, str):
             # instance backend: it owns a catalogue/store pair already
@@ -357,6 +381,17 @@ class QueryService:
         if policy is not None and \
                 getattr(self.scheduler, "policy", "missing") is None:
             self.scheduler.policy = policy
+        # single-flight leases (fabric/leases.py): scan intents are
+        # announced at admission, remote leases adopted at dispatch, and
+        # adoptions resolved by poll_adoptions (the Fleet pumps it).
+        # None (standalone service / single_flight off) disables every
+        # lease site, exactly like obs/policy.
+        self.leases = leases
+        self._adoptions: Dict[str, _Adoption] = {}
+        if leases is not None and \
+                getattr(self.scheduler, "leases", "missing") is None:
+            # adopted submissions cost ~0 against window budgets
+            self.scheduler.leases = leases
 
     # ------------------------------------------------------------------ #
     def submit(self, expr: str, *, tenant: str = "default",
@@ -472,6 +507,11 @@ class QueryService:
             # window from them would defer scans past the lambda*L spot
             if self.window_controller is not None:
                 self.window_controller.observe_arrival(self.clock())
+            if self.leases is not None:
+                # single-flight: announce the scan intent NOW, so by
+                # dispatch time the fleet has resolved one owner per
+                # duplicated canonical (deterministic bus-order tiebreak)
+                self.leases.announce(sub.canonical, sub.calib_iters)
             if obs is not None:
                 span.attrs["queued"] = True
                 obs.tracer.end(span, t_virtual=self._virtual_now)
@@ -536,6 +576,26 @@ class QueryService:
         window = self.scheduler.next_batch()
         if not window:
             return []
+        if self.leases is not None:
+            # single-flight: a canonical group another front-end holds a
+            # fresh lease on is ADOPTED — its tickets ride the owner's
+            # in-flight stream (fan-out buffered-prefix replay, zero
+            # local I/O) and resolve in poll_adoptions; only what is
+            # left dispatches as our own scan
+            keep: List[Submission] = []
+            byc: "OrderedDict[str, List[Submission]]" = OrderedDict()
+            for sub in window:
+                byc.setdefault(sub.canonical, []).append(sub)
+            for canonical, subs in byc.items():
+                key = self.leases.key_for(canonical, subs[0].calib_iters)
+                owner = self.leases.holder(key)
+                if owner is not None and owner != self.leases.node_id:
+                    self._adopt(key, owner, subs)
+                else:
+                    keep.extend(subs)
+            window = keep
+            if not window:
+                return []
         self.window_history.append(self.scheduler.max_batch)
         batch_id = self._next_batch
         self._next_batch += 1
@@ -587,6 +647,28 @@ class QueryService:
         col_streams = [[self.streams[s.ticket] for s in subs
                         if s.ticket in self.streams]
                        for subs in groups.values()]
+        # single-flight owner side: export one lease stream per query
+        # column we are scanning, plus one per materialized fragment
+        # (fragment columns align with the plan's partials layout —
+        # roots first, then materialize order), so adoptees receive the
+        # bit-identical per-packet prefix stream with zero I/O
+        window_leases: List[str] = []
+        if self.leases is not None:
+            calib_w = window[0].calib_iters
+            for ci, canonical in enumerate(groups):
+                key = self.leases.key_for(canonical, calib_w)
+                es = streaming_lib.ResultStream(
+                    key, capacity=self.stream_capacity)
+                self.leases.export(key, es)
+                col_streams[ci].append(es)
+                window_leases.append(key)
+            for fk in plan.materialize_keys():
+                key = self.leases.announce(fk, calib_w)
+                es = streaming_lib.ResultStream(
+                    key, capacity=self.stream_capacity)
+                self.leases.export(key, es)
+                col_streams.append([es])
+                window_leases.append(key)
         if any(col_streams):
             publisher = streaming_lib.WindowStreamPublisher(
                 col_streams,
@@ -679,8 +761,14 @@ class QueryService:
         if publisher is not None:
             if batch_ok:
                 # final snapshot IS the batch-merged result object (the
-                # prefix property guarantees the accumulator agrees)
-                publisher.finish(merged, stats.makespan_s)
+                # prefix property guarantees the accumulator agrees);
+                # with lease exports the fragment columns get their
+                # merged fragment results, same order as the plan
+                finals = list(merged)
+                if self.leases is not None:
+                    finals += [stats.fragment_results[k]
+                               for k in plan.materialize_keys()]
+                publisher.finish(finals, stats.makespan_s)
             else:
                 publisher.abort(self.catalog.jobs[job_ids[0]].note)
         for (canonical, subs), jid, res in zip(groups.items(), job_ids,
@@ -712,6 +800,13 @@ class QueryService:
         if batch_ok and self.use_cache:
             for frag_key, frag_res in stats.fragment_results.items():
                 self.cache.put_fragment(frag_key, calib, epoch, frag_res)
+        # single-flight: the window resolved (DONE or FAILED), release
+        # its leases — adoptees still waiting get the release promptly
+        # instead of waiting out the TTL; finished exports stay readable
+        # for late subscribers until the lease GC reclaims them
+        if self.leases is not None:
+            for key in window_leases:
+                self.leases.release(key)
         if obs is not None:
             obs.tracer.end(wspan, t_virtual=self._virtual_now,
                            status="ok" if batch_ok else "error")
@@ -728,6 +823,185 @@ class QueryService:
                 break
             served.extend(self.step())
         return served
+
+    # ------------------------- single-flight -------------------------- #
+    @property
+    def adoptions_pending(self) -> bool:
+        """True while any adopted canonical group is still waiting for
+        its remote lease owner's final (or for fallback)."""
+        return bool(self._adoptions)
+
+    def _adopt(self, key: str, owner: str,
+               subs: List[Submission]) -> None:
+        """Attach a dequeued canonical group to a remote owner's lease
+        stream: proxy it through the fan-out, withdraw our own intent,
+        and mirror live proxy snapshots into the group's ticket streams
+        (non-final only — an adopted partial is NEVER surfaced as
+        final; the final lands in :meth:`_resolve_adoption`)."""
+        self.leases.withdraw(key)
+        ad = self._adoptions.get(key)
+        if ad is not None:
+            # a later window re-adopted the same key: the new tickets
+            # catch up on the buffered prefix, then ride the live feed
+            for snap in ad.proxy.buffered():
+                if not snap.final:
+                    self._mirror(ad, snap)
+            ad.subs.extend(subs)
+            return
+        proxy = self.leases.fanout.proxy(key, owner)
+        ad = _Adoption(key=key, owner=owner, subs=list(subs), proxy=proxy,
+                       epoch=self.catalog.dataset_epoch,
+                       fp=self.leases.current_fp(),
+                       adopted_round=self.leases.bus.round,
+                       checked_round=self.leases.bus.round)
+        self._adoptions[key] = ad
+        proxy.subscribe(lambda snap, a=ad: None if snap.final
+                        else self._mirror(a, snap))
+        self.stats.adopted += len(subs)
+        if self.obs is not None:
+            self.obs.metrics.counter("lease.adopted").inc(len(subs))
+            for sub in subs:
+                self.obs.tracer.event(
+                    "lease_adopt", t_virtual=self._virtual_now,
+                    ticket=sub.ticket, owner=owner)
+
+    def _mirror(self, ad: _Adoption, snap) -> None:
+        # forward one non-final owner snapshot into the adopted tickets'
+        # streams (same snapshot object: bit-identical prefixes)
+        for sub in ad.subs:
+            rs = self.streams.get(sub.ticket)
+            if rs is not None:
+                rs.publish(snap)
+
+    def poll_adoptions(self) -> None:
+        """Advance every pending adoption (the Fleet calls this each
+        fabric round): a DONE proxy under a still-current epoch resolves
+        its tickets from the owner's final; an aborted proxy, an
+        expired/released/revoked lease, or a mid-stream epoch bump falls
+        back — shared-cache re-probe first (the owner's completed result
+        is reachable in-process even across a bus partition), own rescan
+        on a miss.  A stalled-but-fresh adoption re-subscribes, healing
+        snapshots a partition dropped."""
+        if self.leases is None:
+            return
+        for key in list(self._adoptions):
+            ad = self._adoptions.get(key)
+            if ad is None:
+                continue
+            if ad.proxy.done:
+                if self.leases.fp_current(ad.fp):
+                    self._resolve_adoption(ad)
+                else:
+                    self._fallback(ad, "epoch bumped mid-adoption")
+            elif ad.proxy.state == streaming_lib.ABORTED:
+                self._fallback(ad, f"owner aborted: {ad.proxy.note}")
+            elif not self.leases.fp_current(ad.fp):
+                self._fallback(ad, "epoch bumped mid-adoption")
+            else:
+                owner_now = self.leases.holder(key)
+                if owner_now != ad.owner \
+                        and not self.leases.released_recently(key):
+                    self._fallback(ad, "lease lost (owner dead or "
+                                       "banned mid-stream)")
+                    continue
+                rnd = self.leases.bus.round
+                if rnd - ad.checked_round >= self.leases.ttl:
+                    ad.checked_round = rnd
+                    if ad.proxy.published == ad.last_published:
+                        # fresh lease but no progress for a full TTL:
+                        # re-subscribe — the owner replays its buffered
+                        # prefix (and final, if any), healing whatever a
+                        # partition dropped
+                        self.leases.fanout.resubscribe(key, ad.owner)
+                    ad.last_published = ad.proxy.published
+
+    def _resolve_adoption(self, ad: _Adoption) -> None:
+        final = ad.proxy.latest()
+        res = final.result
+        self._adoptions.pop(ad.key, None)
+        self.leases.fanout.release(ad.key)
+        if self.use_cache:
+            # same write-through as a local scan: later duplicates are
+            # L1 hits here and zero-I/O everywhere via L2
+            self.cache.put(ad.subs[0].expr, ad.subs[0].calib_iters,
+                           ad.epoch, res, canonical=ad.subs[0].canonical)
+        for sub in ad.subs:
+            jid = self.catalog.submit(sub.expr, sub.calib_iters,
+                                      tuple(sorted(self.store.bricks)),
+                                      tenant=sub.tenant)
+            self.catalog.update(jid, status=DONE, note="adopted",
+                                result={"n_selected": res.n_selected,
+                                        "n_processed": res.n_processed,
+                                        "sum_var": res.sum_var})
+            ticket = self.tickets[sub.ticket]
+            ticket.status = SERVED
+            ticket.job_id = jid
+            ticket.adopted = True
+            ticket.result = res
+            ticket.note = f"adopted from {ad.owner}"
+            self.stats.served += 1
+            rs = self.streams.get(sub.ticket)
+            if rs is not None:
+                rs.finish(final)  # the owner's final snapshot, verbatim
+            if self.obs is not None:
+                self.obs.metrics.counter("tickets.served").inc()
+                self.obs.tracer.event(
+                    "final", t_virtual=self._virtual_now,
+                    ticket=sub.ticket, outcome=SERVED, adopted=True)
+
+    def _fallback(self, ad: _Adoption, reason: str) -> None:
+        self._adoptions.pop(ad.key, None)
+        self.leases.fanout.release(ad.key)
+        self.stats.lease_fallbacks += 1
+        if self.obs is not None:
+            self.obs.metrics.counter("lease.fallbacks").inc()
+            self.obs.tracer.event("lease_fallback",
+                                  t_virtual=self._virtual_now,
+                                  note=reason)
+        sub0 = ad.subs[0]
+        hit = (self.cache.get(sub0.expr, sub0.calib_iters,
+                              self.catalog.dataset_epoch,
+                              canonical=sub0.canonical)
+               if self.use_cache else None)
+        if hit is not None:
+            # the owner finished (its result is in the shared tier) but
+            # the final/release never reached us: a zero-I/O resolve —
+            # "never lose a final" without a duplicate scan
+            for sub in ad.subs:
+                jid = self.catalog.submit(sub.expr, sub.calib_iters,
+                                          tuple(sorted(self.store.bricks)),
+                                          tenant=sub.tenant)
+                self.catalog.update(
+                    jid, status=DONE, note="adopted (cache fallback)",
+                    result={"n_selected": hit.n_selected,
+                            "n_processed": hit.n_processed,
+                            "sum_var": hit.sum_var})
+                ticket = self.tickets[sub.ticket]
+                ticket.status = SERVED
+                ticket.job_id = jid
+                ticket.adopted = True
+                ticket.from_cache = True
+                ticket.result = hit
+                ticket.note = f"adopted via cache ({reason})"
+                self.stats.served += 1
+                self.stats.cache_hits += 1
+                rs = self.streams.get(sub.ticket)
+                if rs is not None:
+                    rs.finish(streaming_lib.StreamSnapshot(
+                        seq=0, result=hit,
+                        coverage=merge_lib.Coverage(
+                            events_scanned=hit.n_processed,
+                            events_total=hit.n_processed),
+                        t_virtual=0.0, final=True))
+                if self.obs is not None:
+                    self.obs.metrics.counter("tickets.served").inc()
+            return
+        # genuine fallback: requeue for our own scan and re-announce a
+        # fresh intent — N-1 simultaneous fallbacks re-race and resolve
+        # to exactly one rescanner, the others re-adopt
+        for sub in ad.subs:
+            self.scheduler.requeue(sub)
+        self.leases.announce(sub0.canonical, sub0.calib_iters)
 
     # ------------------------------------------------------------------ #
     def result(self, ticket_id: int) -> Ticket:

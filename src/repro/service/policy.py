@@ -127,7 +127,8 @@ class PolicyDecision:
         return {"route_avoid": set(self.avoid),
                 "probe_quota": dict(self.probe_quota),
                 "speculate": self.speculate,
-                "spec_lead_factor": self.spec_lead_factor}
+                "spec_lead_factor": self.spec_lead_factor,
+                "rereplicated": list(self.rereplicated)}
 
 
 class FailurePolicy:

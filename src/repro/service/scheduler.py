@@ -129,6 +129,12 @@ class QueryScheduler:
         #: last advisory narrowing applied (None when the gate is off or
         #: the fleet is healthy) — what tests and operators inspect
         self.last_health_hint: Optional[Dict] = None
+        #: single-flight lease manager (fabric/leases.py), wired by the
+        #: service when the fleet runs with leases: a submission another
+        #: front-end already holds a fresh lease on will be ADOPTED at
+        #: dispatch (zero local I/O), so it costs ~0 against window
+        #: budgets — adopted work never crowds out real scans
+        self.leases = None
         self.max_pending_per_tenant = max_pending_per_tenant
         self.max_pending_total = max_pending_total
         self.cost_budget_per_tenant = cost_budget_per_tenant
@@ -191,6 +197,23 @@ class QueryScheduler:
         self._total += 1
         self._cost[sub.tenant] = tenant_cost + sub.cost
         self._cost_total += sub.cost
+
+    def requeue(self, sub: Submission) -> None:
+        """Put a previously dequeued submission back at the FRONT of its
+        tenant queue, bypassing admission caps — the single-flight
+        fallback path (an adoption whose owner died/was banned must get
+        its own scan, and it was already admitted once)."""
+        self._pending.setdefault(sub.tenant, deque()).appendleft(sub)
+        self._total += 1
+        self._cost[sub.tenant] = self._cost.get(sub.tenant, 0.0) + sub.cost
+        self._cost_total += sub.cost
+
+    def _remotely_leased(self, sub: Submission) -> bool:
+        # a fresh remote lease means this submission will be adopted,
+        # not scanned: ~0 window cost
+        return (self.leases is not None
+                and self.leases.remote_holder(sub.canonical,
+                                              sub.calib_iters) is not None)
 
     # ------------------------------------------------------------------ #
     def _oldest(self) -> Optional[Submission]:
@@ -281,6 +304,7 @@ class QueryScheduler:
                     continue
                 sub = q[i]
                 cost = (0.0 if sub.canonical in window_canonicals
+                        or self._remotely_leased(sub)
                         else self.dispatch_cost(sub))
                 if budget is not None and out and window_cost + cost > budget:
                     capped = True

@@ -1,0 +1,588 @@
+"""Duplicate-work race matrix for fleet-wide single-flight execution
+(``fabric/leases.py``): simultaneous duplicate submissions resolve to
+exactly ONE lease owner (deterministic bus-order tiebreak); adoptees
+receive the owner's in-flight stream bit-identically with zero local
+I/O; owner death, policy ban, and mid-stream epoch bumps force fallback
+without ever serving stale or losing a final; seeded drops and
+partition+heal never yield two scans AND never lose a final.  Plus the
+operational satellites: L2 persistence across a fleet restart and the
+re-replication transfer charge in the virtual time model.
+
+Seeds come from ``LEASE_SEEDS`` (comma-separated, default 101,202,303)
+so the CI lease-matrix job can pin one seed per shard.
+"""
+import os
+
+import pytest
+
+from repro.configs.geps_events import reduced
+from repro.core import events as ev
+from repro.core import merge as merge_lib
+from repro.core.brick import create_store
+from repro.fabric import (Fleet, FragmentRegistry, LeaseManager, MessageBus,
+                          lease_key, lease_ttl)
+from repro.service.scheduler import QueryScheduler, make_submission
+
+CFG = reduced()
+SCHEMA = ev.EventSchema.from_config(CFG)
+LEASE_SEEDS = tuple(int(s) for s in os.environ.get(
+    "LEASE_SEEDS", "101,202,303").split(","))
+
+Q = "e_total > 40 && count(pt > 15) >= 2"
+EXPRS = [Q,
+         "e_t_miss > 30",
+         "pt_lead > 60 || n_tracks >= 8"]
+
+
+def make_store(n_events=192, n_nodes=4, replication=2, seed=7):
+    return create_store(SCHEMA, n_events=n_events, n_nodes=n_nodes,
+                        events_per_brick=CFG.events_per_brick,
+                        replication=replication, seed=seed)
+
+
+def make_fleet(store, n=4, **kw):
+    kw.setdefault("registry", FragmentRegistry())
+    kw.setdefault("single_flight", True)
+    return Fleet(store, n, **kw)
+
+
+def snapshots_identical(a, b):
+    return (a.seq == b.seq and a.final == b.final
+            and a.t_virtual == b.t_virtual and a.coverage == b.coverage
+            and merge_lib.results_identical(a.result, b.result))
+
+
+def baseline_results(store, exprs_by_fe, n=4, **kw):
+    """The lease-disabled reference run: same workload, same fleet shape,
+    ``single_flight=False``.  Returns (per-ticket final results in
+    submission order, per-ticket final stream snapshots, fleet stats)."""
+    fleet = Fleet(store, n, registry=FragmentRegistry(),
+                  single_flight=False, **kw)
+    tids = [fleet.submit(e, frontend=i % n, stream=True)
+            for i, e in enumerate(exprs_by_fe)]
+    fleet.drain()
+    finals = [fleet.result(t).result for t in tids]
+    snaps = [fleet.stream(t).latest() for t in tids]
+    stats = fleet.fleet_stats()
+    fleet.close()
+    return finals, snaps, stats
+
+
+# ------------------------- lease protocol unit -------------------------- #
+def _mgr(bus, node_id, vv=None, **kw):
+    bus.register(node_id)
+    return LeaseManager(node_id, bus, lambda: dict(vv or {}), **kw)
+
+
+def test_lease_key_embeds_canonical_calib_and_vv_fingerprint():
+    k = lease_key("expr", 3, {"fe0": 2, "fe1": 0})
+    assert k == "lease:expr|c3|fe0:2"  # zero entries dropped
+    assert lease_key("expr", 3, {"fe0": 2}) == k
+    assert lease_key("expr", 0, {"fe0": 2}) != k
+    assert lease_key("expr", 3, {"fe0": 3}) != k
+
+
+def test_lease_ttl_tracks_gossip_bound_and_bus_delay():
+    assert lease_ttl(4, 2, 0) > 0
+    assert lease_ttl(16, 1, 0) > lease_ttl(4, 1, 0)
+    assert lease_ttl(4, 2, 3) == lease_ttl(4, 2, 0) + 6
+
+
+def test_same_round_intents_tiebreak_on_node_id():
+    bus = MessageBus()
+    a, b = _mgr(bus, "fe0"), _mgr(bus, "fe1")
+    ka = a.announce("q", 0)
+    kb = b.announce("q", 0)
+    assert ka == kb
+    bus.tick()
+    for m in (a, b):
+        for env in bus.recv(m.node_id):
+            m.on_message(env.payload)
+    # both tables agree: fe0 wins the same-round race deterministically
+    assert a.holder(ka) == "fe0"
+    assert b.holder(kb) == "fe0"
+
+
+def test_earlier_round_beats_lower_node_id():
+    bus = MessageBus()
+    a, b = _mgr(bus, "fe0"), _mgr(bus, "fe1")
+    kb = b.announce("q", 0)
+    bus.tick()
+    for env in bus.recv("fe0"):
+        a.on_message(env.payload)
+    ka = a.announce("q", 0)  # later round: loses despite lower node id
+    assert a.holder(ka) == "fe1"
+    assert b.holder(kb) == "fe1"
+
+
+def test_lease_expires_when_refreshes_stop():
+    bus = MessageBus()
+    a, b = _mgr(bus, "fe0", ttl=2), _mgr(bus, "fe1", ttl=2)
+    k = a.announce("q", 0)
+    bus.tick()
+    for env in bus.recv("fe1"):
+        b.on_message(env.payload)
+    assert b.holder(k) == "fe0"
+    for _ in range(4):  # fe0 never re-emits: the lease goes stale
+        bus.tick()
+        bus.recv("fe1")
+    assert b.holder(k) is None
+    assert b.stats.expired == 1
+
+
+def test_refreshes_keep_lease_fresh_and_never_improve_priority():
+    bus = MessageBus()
+    a, b = _mgr(bus, "fe0", ttl=3), _mgr(bus, "fe1", ttl=3)
+    k = a.announce("q", 0)
+    r0 = a._table[k].round
+    for _ in range(10):
+        a.emit()
+        bus.tick()
+        for env in bus.recv("fe1"):
+            b.on_message(env.payload)
+        bus.recv("fe0")
+    assert b.holder(k) == "fe0"
+    assert b._table[k].round == r0  # re-announcements carry ORIGINAL round
+
+
+def test_stale_epoch_lease_is_invisible_and_intent_gcd():
+    bus = MessageBus()
+    vv = {"fe0": 1}
+    a = _mgr(bus, "fe0", vv=vv)
+    b_vv = {"fe0": 1}
+    bus.register("fe1")
+    b = LeaseManager("fe1", bus, lambda: dict(b_vv))
+    k = a.announce("q", 0)
+    bus.tick()
+    for env in bus.recv("fe1"):
+        b.on_message(env.payload)
+    assert b.holder(k) == "fe0"
+    b_vv["fe0"] = 2  # epoch bump observed by the adoptee
+    assert b.holder(k) is None  # record survives but is unusable
+    # the owner's own stale-fp intent is garbage-collected on emit
+    vv["fe0"] = 2
+    a.emit()
+    assert a.intents() == []
+
+
+def test_release_drops_table_and_marks_peer_release():
+    bus = MessageBus()
+    a, b = _mgr(bus, "fe0"), _mgr(bus, "fe1")
+    k = a.announce("q", 0)
+    bus.tick()
+    for env in bus.recv("fe1"):
+        b.on_message(env.payload)
+    a.export(k, object())
+    a.release(k)
+    bus.tick()
+    for env in bus.recv("fe1"):
+        b.on_message(env.payload)
+    assert b.holder(k) is None
+    assert b.released_recently(k)  # owner FINISHED: wait, don't fall back
+    assert k in a.exports  # export stays readable for late subs
+    for _ in range(a.ttl + 2):
+        bus.tick()
+        a.emit()
+        b.emit()
+        bus.recv("fe0"), bus.recv("fe1")
+    assert k not in a.exports  # GC'd one TTL after release
+    assert not b.released_recently(k)
+
+
+def test_revoke_drops_owner_leases_fleet_wide():
+    bus = MessageBus()
+    a, b, c = _mgr(bus, "fe0"), _mgr(bus, "fe1"), _mgr(bus, "fe2")
+    k = a.announce("q", 0)
+    bus.tick()
+    for m in (b, c):
+        for env in bus.recv(m.node_id):
+            m.on_message(env.payload)
+    assert b.holder(k) == "fe0" and c.holder(k) == "fe0"
+    b.revoke_owner("fe0")  # policy ban applied by fe1
+    assert b.holder(k) is None and b.stats.revoked == 1
+    bus.tick()
+    for env in bus.recv("fe2"):
+        c.on_message(env.payload)
+    assert c.holder(k) is None  # the revoke broadcast reached fe2
+
+
+# --------------------------- race matrix -------------------------------- #
+def test_simultaneous_duplicates_one_lease_one_scan_bit_identical():
+    """N same-window duplicate submissions: exactly one front-end
+    acquires the lease (fe0 — deterministic bus-order tiebreak), scans
+    once, and every adoptee's final is bit-identical to the
+    lease-disabled run."""
+    store = make_store()
+    base_finals, base_snaps, base_stats = baseline_results(
+        store, [Q] * 4)
+    fleet = make_fleet(make_store(), 4)
+    tids = [fleet.submit(Q, frontend=i, stream=True) for i in range(4)]
+    fleet.drain()
+    scanned = [fe.service.stats.events_scanned for fe in fleet.frontends]
+    assert scanned[0] > 0 and scanned[1:] == [0, 0, 0]
+    s = fleet.fleet_stats()
+    assert s["adopted"] == 3 and s["served"] == 4
+    assert s["events_scanned"] * 4 == base_stats["events_scanned"]
+    for i, t in enumerate(tids):
+        r = fleet.result(t)
+        assert r.status == "SERVED"
+        assert r.adopted == (i != 0)
+        assert merge_lib.results_identical(r.result, base_finals[i])
+        assert snapshots_identical(fleet.stream(t).latest(), base_snaps[i])
+    # every adoptee's FULL stream mirrors the owner's, snapshot by snapshot
+    owner = fleet.stream(tids[0]).buffered()
+    for t in tids[1:]:
+        got = fleet.stream(t).buffered()
+        assert len(got) == len(owner)
+        assert all(snapshots_identical(x, y) for x, y in zip(got, owner))
+    fleet.close()
+
+
+def test_adoptee_dispatching_first_parks_sub_then_streams_live():
+    """The adoptee's window can dispatch BEFORE the owner's: its sub is
+    parked at the owner (never aborted) and served live from the scan's
+    first packet once the owner dispatches."""
+    store = make_store()
+    fleet = make_fleet(store, 2)
+    t0 = fleet.submit(Q, frontend=0, stream=True)
+    t1 = fleet.submit(Q, frontend=1, stream=True)
+    fleet.pump(2)
+    assert fleet.step(frontend=1) == []  # fe1 adopts instead of scanning
+    assert fleet.frontends[1].service.adoptions_pending
+    fleet.pump(2)  # sub arrives at fe0 pre-dispatch: parked
+    assert any(fleet.frontends[0].fanout._pending_subs.values())
+    fleet.drain()
+    assert fleet.frontends[1].service.stats.events_scanned == 0
+    a, b = fleet.stream(t0), fleet.stream(t1)
+    assert b.done and a.published == b.published
+    assert all(snapshots_identical(x, y)
+               for x, y in zip(a.buffered(), b.buffered()))
+    assert merge_lib.results_identical(fleet.result(t0).result,
+                                       fleet.result(t1).result)
+    fleet.close()
+
+
+def test_owner_death_mid_adoption_falls_back_to_rescan_bit_identical():
+    store = make_store()
+    base_finals, base_snaps, _ = baseline_results(store, [Q, Q], n=2)
+    fleet = make_fleet(make_store(), 2)
+    fleet.submit(Q, frontend=0, stream=True)
+    t1 = fleet.submit(Q, frontend=1, stream=True)
+    fleet.pump(2)
+    fleet.step(frontend=1)  # fe1 adopts fe0's lease
+    fleet.frontend_leave(0)  # owner dies before ever scanning
+    fleet.drain()
+    fe1 = fleet.frontends[1]
+    assert fe1.leases.stats.expired >= 1       # TTL fired
+    assert fe1.service.stats.lease_fallbacks == 1
+    assert fe1.service.stats.events_scanned > 0  # fell back to own scan
+    r = fleet.result(t1)
+    assert r.status == "SERVED" and not r.adopted
+    assert merge_lib.results_identical(r.result, base_finals[1])
+    assert snapshots_identical(fleet.stream(t1).latest(), base_snaps[1])
+    fleet.close()
+
+
+def test_policy_ban_mid_adoption_falls_back_without_waiting_ttl():
+    store = make_store()
+    base_finals, _, _ = baseline_results(store, [Q, Q], n=2)
+    fleet = make_fleet(make_store(), 2)
+    fleet.submit(Q, frontend=0, stream=True)
+    t1 = fleet.submit(Q, frontend=1, stream=True)
+    fleet.pump(2)
+    fleet.step(frontend=1)
+    fleet.ban_frontend(0, by=1)  # revoke: no TTL wait
+    fleet.drain()
+    fe1 = fleet.frontends[1]
+    assert fe1.leases.stats.revoked >= 1
+    # the FAST path: the revoke dropped the lease, not a TTL expiry —
+    # a silent crash of the same owner would have shown expired >= 1
+    assert fe1.leases.stats.expired == 0
+    assert fe1.service.stats.lease_fallbacks == 1
+    r = fleet.result(t1)
+    assert r.status == "SERVED"
+    assert merge_lib.results_identical(r.result, base_finals[1])
+    fleet.close()
+
+
+def test_epoch_bump_mid_adoption_never_serves_stale():
+    store = make_store()
+    fleet = make_fleet(store, 2)
+    fleet.submit(Q, frontend=0, stream=True)
+    t1 = fleet.submit(Q, frontend=1, stream=True)
+    fleet.pump(2)
+    fleet.step(frontend=1)  # fe1 adopts under the pre-bump fingerprint
+    fleet.bump_dataset_version(1)  # the adoptee's own epoch moves
+    fleet.drain()
+    fe1 = fleet.frontends[1]
+    assert fe1.service.stats.lease_fallbacks >= 1
+    r = fleet.result(t1)
+    # resolved by fe1's OWN post-bump scan, never the stale-epoch stream
+    assert r.status == "SERVED" and not r.adopted
+    assert fe1.service.stats.events_scanned > 0
+    ref = baseline_results(make_store(), [Q], n=1)[0][0]
+    assert merge_lib.results_identical(r.result, ref)
+    fleet.close()
+
+
+@pytest.mark.parametrize("seed", LEASE_SEEDS)
+def test_seeded_drops_never_two_scans_never_lose_a_final(seed):
+    """Lossy bus: once the lease tables agree pre-dispatch, drops can
+    delay snapshots and finals but must never cause a second scan of the
+    same canonical NOR a lost final (resubscribe replay and the shared
+    cache close every gap)."""
+    store = make_store()
+    base_finals, _, _ = baseline_results(store, [Q] * 4)
+    fleet = make_fleet(make_store(), 4,
+                       bus=MessageBus(drop_rate=0.3, seed=seed))
+    tids = [fleet.submit(Q, frontend=i, stream=True) for i in range(4)]
+    canonical = make_submission(0, "x", Q, 0, SCHEMA).canonical
+    key = fleet.frontends[0].leases.key_for(canonical, 0)
+    # pump until every member agrees fe0 owns the key (re-announcement
+    # beats drops), THEN dispatch
+    for _ in range(200):
+        if all(fe.leases.holder(key) == "fe0" for fe in fleet.frontends):
+            break
+        fleet.pump()
+    assert all(fe.leases.holder(key) == "fe0" for fe in fleet.frontends)
+    fleet.drain()
+    scanned = [fe.service.stats.events_scanned for fe in fleet.frontends]
+    assert scanned[0] == store.n_events and scanned[1:] == [0, 0, 0]
+    for i, t in enumerate(tids):
+        r = fleet.result(t)
+        assert r.status == "SERVED"
+        assert merge_lib.results_identical(r.result, base_finals[i])
+    fleet.close()
+
+
+@pytest.mark.parametrize("seed", LEASE_SEEDS)
+def test_partition_mid_stream_heals_without_double_scan_or_lost_final(seed):
+    """Partition the owner away AFTER adoption, let it scan into the
+    void, heal: the adoptees must still resolve every final bit-
+    identically — via late replay or the shared cache — and the
+    canonical is never scanned twice."""
+    store = make_store(seed=seed)
+    base_finals, _, _ = baseline_results(store, [Q] * 4)
+    fleet = make_fleet(make_store(seed=seed), 4)
+    tids = [fleet.submit(Q, frontend=i, stream=True) for i in range(4)]
+    fleet.pump(2)
+    for i in (1, 2, 3):
+        fleet.step(frontend=i)  # all three adopt fe0's lease
+    assert all(fleet.frontends[i].service.adoptions_pending
+               for i in (1, 2, 3))
+    fleet.bus.partition(["fe0"], ["fe1", "fe2", "fe3"])
+    fleet.step(frontend=0)  # the owner scans mid-partition
+    fleet.pump(2)           # snapshots/finals/release all dropped
+    fleet.bus.heal()
+    fleet.drain()
+    scanned = [fe.service.stats.events_scanned for fe in fleet.frontends]
+    assert sum(scanned) == store.n_events  # never two scans
+    for i, t in enumerate(tids):
+        r = fleet.result(t)
+        assert r.status == "SERVED"  # never lose a final
+        assert merge_lib.results_identical(r.result, base_finals[i])
+    fleet.close()
+
+
+def test_fragment_leases_exported_and_adoptable_bit_identically():
+    """A window that materializes a shared fragment exports one lease
+    stream per fragment: a peer can subscribe through the fan-out and
+    receive the fragment's full prefix + final, bit-identical to the
+    owner's merged fragment result, with zero I/O of its own."""
+    store = make_store()
+    fleet = make_fleet(store, 2)
+    # two queries sharing the conjunct -> the planner materializes it
+    fleet.submit(f"{Q} && e_t_miss > 30", frontend=0)
+    fleet.submit(f"{Q} && n_tracks >= 8", frontend=0)
+    fe0 = fleet.frontends[0]
+    fleet.step(frontend=0)
+    frag_keys = [k for k in fe0.leases.exports if k.startswith("lease:")]
+    # query leases + at least one materialized-fragment lease
+    assert len(frag_keys) >= 3
+    # find a fragment export (not one of the two query canonicals)
+    subs_canon = set()
+    for t in list(fe0.service.tickets.values()):
+        subs_canon.add(fe0.leases.key_for(
+            make_submission(0, "x", t.expr, t.calib_iters, SCHEMA,
+                            n_events=store.n_events).canonical, 0))
+    frag = [k for k in frag_keys if k not in subs_canon]
+    assert frag, "no fragment lease exported"
+    fkey = frag[0]
+    export = fe0.leases.exports[fkey]
+    assert export.done  # fragment stream finished with the window
+    proxy = fleet.frontends[1].fanout.proxy(fkey, "fe0")
+    fleet.pump(3)
+    assert proxy.done  # adopted with zero I/O on fe1
+    assert snapshots_identical(proxy.latest(), export.latest())
+    assert all(snapshots_identical(x, y)
+               for x, y in zip(proxy.buffered(), export.buffered()))
+    # and the materialized conjunct is an L2 entry now: a LATER bare
+    # submission of it anywhere in the fleet is a zero-I/O cache hit
+    frag_expr = fkey[len("lease:"):fkey.rindex("|c")]
+    fleet.drain()
+    scanned_before = fleet.frontends[1].service.stats.events_scanned
+    t = fleet.submit(frag_expr, frontend=1)
+    fleet.drain()
+    r = fleet.result(t)
+    assert r.status == "SERVED" and r.from_cache
+    assert fleet.frontends[1].service.stats.events_scanned == scanned_before
+    fleet.close()
+
+
+def test_adopted_submission_costs_zero_against_window_budget():
+    """A submission another front-end holds a fresh lease on is adopted,
+    not scanned — so it must not consume the window's cost budget."""
+    class OneRemoteLease:
+        node_id = "fe9"
+
+        def __init__(self, canonical):
+            self.canonical = canonical
+
+        def remote_holder(self, canonical, calib_iters):
+            return "fe0" if canonical == self.canonical else None
+
+    a = make_submission(1, "t1", EXPRS[0], 0, SCHEMA, n_events=192)
+    b = make_submission(2, "t2", EXPRS[1], 0, SCHEMA, n_events=192)
+    # budget fits the first submission plus half the second: only a
+    # free (adopted) second submission can ride along
+    budget = a.cost + 0.5 * b.cost
+
+    sched = QueryScheduler(window_cost_budget=budget)
+    sched.enqueue(a), sched.enqueue(b)
+    assert len(sched.next_batch()) == 1  # no leases: budget caps at one
+
+    sched = QueryScheduler(window_cost_budget=budget)
+    sched.leases = OneRemoteLease(b.canonical)
+    sched.enqueue(a), sched.enqueue(b)
+    assert len(sched.next_batch()) == 2  # the leased one rides for free
+
+
+def test_requeue_bypasses_admission_caps():
+    sched = QueryScheduler(max_pending_total=1)
+    a = make_submission(1, "t", EXPRS[0], 0, SCHEMA, n_events=192)
+    b = make_submission(2, "t", EXPRS[1], 0, SCHEMA, n_events=192)
+    sched.enqueue(a)
+    sched.requeue(b)  # fallback path: already admitted once
+    assert sched.n_pending == 2
+    assert sched.next_batch()[0].ticket == 2  # requeued at the FRONT
+
+
+# ----------------------- property test (random workloads) --------------- #
+def _check_duplicate_workload(picks):
+    """The single-flight invariant pair for one random workload: every
+    result bit-identical to the lease-disabled run, and total fleet-wide
+    scanned events bounded by the workload's UNIQUE structure."""
+    exprs = [EXPRS[p] for p in picks]
+    base_finals, _, _ = baseline_results(make_store(), exprs)
+    fleet = make_fleet(make_store(), 4)
+    n_events = fleet.store.n_events
+    tids = [fleet.submit(e, frontend=i % 4, stream=True)
+            for i, e in enumerate(exprs)]
+    fleet.drain()
+    for t, want in zip(tids, base_finals):
+        r = fleet.result(t)
+        assert r.status == "SERVED"
+        assert merge_lib.results_identical(r.result, want)
+    unique = len(set(picks))
+    s = fleet.fleet_stats()
+    assert s["events_scanned"] <= unique * n_events
+    fleet.close()
+
+
+@pytest.mark.parametrize("seed", LEASE_SEEDS)
+def test_random_duplicate_workloads_bit_identical_and_bounded(seed):
+    import random
+    rng = random.Random(seed)
+    for _ in range(4):
+        picks = [rng.randrange(len(EXPRS))
+                 for _ in range(rng.randint(4, 10))]
+        _check_duplicate_workload(picks)
+
+
+def test_hypothesis_duplicate_workloads_bit_identical_and_bounded():
+    hypothesis = pytest.importorskip("hypothesis")
+    st = hypothesis.strategies
+
+    @hypothesis.settings(max_examples=12, deadline=None)
+    @hypothesis.given(st.lists(st.integers(min_value=0, max_value=2),
+                               min_size=4, max_size=10))
+    def run(picks):
+        _check_duplicate_workload(picks)
+
+    run()
+
+
+# ------------------------- L2 persistence ------------------------------- #
+def test_fleet_l2_persists_across_restart_zero_io_hits(tmp_path):
+    path = tmp_path / "l2.json"
+    store = make_store()
+    fleet = make_fleet(store, 2, l2_path=path)
+    t = fleet.submit(Q, frontend=0)
+    fleet.drain()
+    want = fleet.result(t).result
+    assert fleet.frontends[0].service.stats.events_scanned > 0
+    fleet.close()  # checkpoints the L2
+    assert path.exists()
+
+    reborn = make_fleet(make_store(), 2, l2_path=path)
+    assert len(reborn.l2) > 0  # booted from the checkpoint
+    t2 = reborn.submit(Q, frontend=1)
+    reborn.drain()
+    r = reborn.result(t2)
+    assert r.status == "SERVED" and r.from_cache
+    assert merge_lib.results_identical(r.result, want)
+    # the whole post-restart fleet did ZERO brick I/O
+    assert all(fe.service.stats.events_scanned == 0
+               for fe in reborn.frontends)
+    reborn.close()
+
+
+def test_fleet_l2_periodic_checkpoint_during_operation(tmp_path):
+    path = tmp_path / "l2.json"
+    fleet = make_fleet(make_store(), 2, l2_path=path,
+                       l2_checkpoint_every=1)
+    fleet.submit(Q, frontend=0)
+    fleet.step()
+    assert path.exists()  # checkpointed by step(), before any close()
+    fleet.close()
+
+
+# --------------------- re-replication transfer charge ------------------- #
+def test_rereplication_copies_charge_transfer_time_in_jobstats():
+    from repro.core.backend import SimulatedBackend
+    from repro.core.catalog import MetadataCatalog
+
+    store = make_store()
+    bid = sorted(store.bricks)[0]
+    src = store.owners(bid)[0]
+    dst = next(n for n in range(store.n_nodes)
+               if n not in store.owners(bid))
+
+    def run(rereplicated):
+        cat = MetadataCatalog(store.n_nodes)
+        be = SimulatedBackend(cat, store, adaptive_packets=False)
+        jids = [be.submit(e) for e in EXPRS]
+        merged, stats = be.run_batch(jids, rereplicated=rereplicated)
+        return merged, stats
+
+    free_merged, free_stats = run(None)
+    paid_merged, paid_stats = run([(bid, src, dst)])
+
+    assert free_stats.rereplication_transfer_s == 0.0
+    spec = store.specs[bid]
+    tm = SimulatedBackend(MetadataCatalog(store.n_nodes), store).engine.tm
+    want = spec.n_events * tm.brick_bytes_per_event / tm.bandwidth_Bps
+    assert paid_stats.rereplication_transfer_s == pytest.approx(want)
+    # the copy delays the endpoints, so the window's makespan can only
+    # grow — data movement is visible on the virtual clock
+    assert paid_stats.makespan_s >= free_stats.makespan_s
+    # and it never changes results
+    for a, b in zip(free_merged, paid_merged):
+        assert merge_lib.results_identical(a, b)
+
+
+def test_policy_decision_carries_rereplications_to_backend():
+    from repro.service.policy import PolicyDecision
+    d = PolicyDecision(rereplicated=[(3, 0, 1)])
+    kw = d.backend_kwargs()
+    assert kw["rereplicated"] == [(3, 0, 1)]

@@ -158,6 +158,43 @@ def test_sustained_degradation_rereplicates_once_per_episode():
     assert pol.rereplications == 1
 
 
+def test_rereplication_data_movement_charged_in_window_jobstats():
+    """A window dispatched under a decision that re-replicated bricks
+    pays for the copies on the virtual clock: ``backend_kwargs`` carries
+    the copy list, the backend charges each copy's transfer time to both
+    endpoints, and ``JobStats.rereplication_transfer_s`` records it —
+    re-replication is no longer free in the time model."""
+    store = make_store(replication=2)
+    cat = MetadataCatalog(store.n_nodes)
+    pol = FailurePolicy(cat, store, config=PolicyConfig(
+        degrade_after=1, ban_after=99, rereplicate_after=2))
+    sick = report_with({1: 0.9})
+    pol.decide(sick), pol.decide(sick)
+    d = pol.decide(sick)
+    assert d.rereplicated
+    assert d.backend_kwargs()["rereplicated"] == d.rereplicated
+
+    def window(kwargs):
+        c = MetadataCatalog(store.n_nodes)
+        be = SimulatedBackend(c, store, adaptive_packets=False)
+        jids = [be.submit(e) for e in EXPRS]
+        return be.run_batch(jids, **kwargs)
+
+    base_res, base_stats = window({})
+    res, stats = window(d.backend_kwargs())
+    assert base_stats.rereplication_transfer_s == 0.0
+    assert stats.rereplication_transfer_s > 0.0
+    tm = SimulatedBackend(MetadataCatalog(store.n_nodes), store).engine.tm
+    want = sum(store.specs[bid].n_events * tm.brick_bytes_per_event
+               / tm.bandwidth_Bps for bid, _, _ in d.rereplicated)
+    assert stats.rereplication_transfer_s == pytest.approx(want)
+    # the copies delay their endpoints, so the window can only slow down
+    assert stats.makespan_s >= base_stats.makespan_s
+    # and never perturb results
+    for a, b in zip(base_res, res):
+        assert merge_lib.results_identical(a, b)
+
+
 # ------------------- engine routing avoidance (unit) ------------------- #
 def test_avoided_node_gets_zero_packets_results_identical():
     store = make_store(n_events=256)
