@@ -36,6 +36,12 @@ Perfetto-loadable ``BENCH_fabric_trace.json`` outside smoke) whose
 fleet-merged metric counters reconcile EXACTLY with the service-stats
 aggregation (L1 + L2 hit counters vs ``fleet_stats``).
 
+And the flight-recorder acceptance pass: arming ``Fleet(flight=True)``
+on the obs workload must leave the virtual timeline EXACTLY unchanged
+(bit-identical finals AND identical comparable trace records — every
+virtual makespan included — vs the recorder-less run), and the recorded
+log must replay bit-identically through ``repro.obs.replay``.
+
 Run: ``PYTHONPATH=src python benchmarks/bench_fabric.py``
 (writes a ``BENCH_fabric.json`` snapshot next to this file;
 ``BENCH_SMOKE=1`` shrinks sizes and skips the snapshot + perf asserts).
@@ -144,6 +150,43 @@ def run_obs_fleet(store) -> dict:
     return out
 
 
+def run_flight_fleet(store) -> dict:
+    """Recording must be free on the virtual clock: the obs workload
+    with the flight recorder armed yields bit-identical finals and an
+    IDENTICAL comparable trace (every virtual makespan included) vs the
+    recorder-less run, and the log replays bit-identically."""
+    from repro.obs import replay as replay_lib
+
+    def one(flight: bool):
+        fleet = Fleet(store, N_FRONTENDS, obs=True, flight=flight)
+        gtids = []
+        for i, (tenant, expr) in enumerate(skewed_workload(N_QUERIES)):
+            gtids.append(fleet.submit(expr, tenant=tenant))
+            if (i + 1) % WINDOW == 0:
+                fleet.step()
+        fleet.drain()
+        results = [fleet.result(g).result for g in gtids]
+        recs = trace_lib.comparable_records(fleet.trace_records())
+        log = list(fleet.flight.records) if flight else None
+        fleet.close()
+        return results, recs, log
+
+    res_on, trace_on, log = one(True)
+    res_off, trace_off, _ = one(False)
+    assert all(merge_lib.results_identical(a, b)
+               for a, b in zip(res_on, res_off)), \
+        "flight recording changed a final result"
+    assert trace_on == trace_off, \
+        "flight recording perturbed the virtual timeline"
+    # this workload never mutates the store (no deaths/re-replication),
+    # so replaying over the same store object is sound
+    rep = replay_lib.replay_run(log, store=store)
+    assert rep.identical, \
+        f"replay diverged: {rep.mismatches[:3]} {rep.bus_divergences[:3]}"
+    return {"flight_records": len(log), "finals": rep.n_finals,
+            "replay_identical": rep.identical}
+
+
 def near_duplicate_workload(windows: int):
     """One canonical per window, near-duplicates of each other (same
     structure, shifted cut) so no window hits a previous window's cache
@@ -239,6 +282,11 @@ def main():
           f"hits_l1={obs['cache_hits_l1']:.0f},"
           f"hits_l2={obs['cache_hits_l2']:.0f},"
           f"served={obs['tickets_served']:.0f},reconciled=exact")
+
+    fl = run_flight_fleet(store)
+    print(f"flight_fleet,records={fl['flight_records']},"
+          f"finals={fl['finals']},virtual_makespan=unchanged,"
+          f"replay_identical={fl['replay_identical']}")
 
     lat_shared = remote_first_result_latency(store, shared_cache=True)
     lat_indep = remote_first_result_latency(store, shared_cache=False)

@@ -1,0 +1,185 @@
+#!/usr/bin/env python3
+"""Bench-trajectory observatory: the committed benchmark snapshots
+(``benchmarks/BENCH_*.json``) across git history, as one table with
+per-metric regression gates.
+
+Each benchmark writes a JSON snapshot that gets committed alongside the
+code change that produced it, so the repository's own history IS the
+performance trajectory.  This tool replays that history (``git log`` /
+``git show`` per snapshot file, plus the working-tree copy when it
+differs), extracts the gated metrics, and
+
+- prints the trajectory table: one row per gated metric, one column per
+  version (short commit hash, ``work`` for the dirty working tree);
+- with ``--check``, compares the newest version of every metric against
+  the previous one and exits non-zero when any metric regressed past
+  its tolerance — the CI bench-trajectory step.
+
+Gates live in :data:`GATES`: dotted JSON path, direction, and relative
+tolerance.  A metric missing from an old snapshot (added later) is
+shown as ``-`` and never fails the check.  Stdlib + git only — runs in
+the docs/CI environment with no scientific stack.
+
+Usage::
+
+    python scripts/bench_report.py [--check] [--repo PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+LOWER, HIGHER = "lower", "higher"
+
+
+@dataclasses.dataclass(frozen=True)
+class Gate:
+    """One gated benchmark metric: where it lives (snapshot file +
+    dotted JSON path), which direction is better, and how much relative
+    movement the wrong way ``--check`` tolerates."""
+    file: str        # snapshot name under benchmarks/
+    path: str        # dotted path into the JSON (e.g. "rows.sim.ratio")
+    better: str      # LOWER or HIGHER is better
+    rel_tol: float   # allowed relative regression before --check fails
+
+
+#: The regression surface: the headline metric of every benchmark.
+GATES = (
+    Gate("BENCH_backend.json", "rows.sim.ratio", LOWER, 0.25),
+    Gate("BENCH_backend.json", "rows.spmd.ratio", LOWER, 0.25),
+    Gate("BENCH_backend.json", "rows.spmd_ramp.ratio", LOWER, 0.25),
+    Gate("BENCH_streaming.json", "rows.single_query.ratio", LOWER, 0.25),
+    Gate("BENCH_streaming.json", "rows.batch8.ratio", LOWER, 0.25),
+    Gate("BENCH_streaming.json", "rows.batch8_ramp.ratio", LOWER, 0.25),
+    Gate("BENCH_fabric.json", "fleet_hit_rate.shared_l2.hit_rate",
+         HIGHER, 0.05),
+    Gate("BENCH_fabric.json", "single_flight.scan_reduction_x",
+         HIGHER, 0.05),
+    Gate("BENCH_straggler.json", "speedup", HIGHER, 0.10),
+    Gate("BENCH_straggler.json", "rows.adaptive.makespan_s", LOWER, 0.10),
+    Gate("BENCH_straggler.json", "speculation.p99_ratio", LOWER, 0.25),
+)
+
+
+def dig(doc, dotted):
+    """Navigate a dotted path into nested dicts; None when absent."""
+    cur = doc
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur if isinstance(cur, (int, float)) else None
+
+
+def _git(repo, *args):
+    return subprocess.run(["git", "-C", str(repo), *args],
+                          capture_output=True, text=True)
+
+
+def snapshot_versions(repo, relpath):
+    """Every historical version of one snapshot file, oldest first:
+    ``[(label, parsed_json), ...]`` — one entry per commit touching it,
+    plus a ``work`` entry when the working tree differs from HEAD's."""
+    out = []
+    log = _git(repo, "log", "--reverse", "--format=%h", "--", relpath)
+    hashes = [h for h in log.stdout.split() if h]
+    last_blob = None
+    for h in hashes:
+        show = _git(repo, "show", f"{h}:{relpath}")
+        if show.returncode != 0:
+            continue  # deleted in this commit
+        try:
+            out.append((h, json.loads(show.stdout)))
+            last_blob = show.stdout
+        except ValueError:
+            continue
+    worktree = pathlib.Path(repo) / relpath
+    if worktree.exists():
+        text = worktree.read_text()
+        if last_blob is None or text != last_blob:
+            try:
+                out.append(("work", json.loads(text)))
+            except ValueError:
+                pass
+    return out
+
+
+def trajectory(repo):
+    """``{snapshot file: [(label, doc), ...]}`` for every gated file."""
+    files = sorted({g.file for g in GATES})
+    return {f: snapshot_versions(repo, f"benchmarks/{f}") for f in files}
+
+
+def check_gate(gate, values):
+    """The gate verdict over its value trajectory: ``(ok, message)``.
+    Compares the last two present values; absent history passes."""
+    present = [(label, v) for label, v in values if v is not None]
+    if len(present) < 2:
+        return True, "no history"
+    (l0, v0), (l1, v1) = present[-2], present[-1]
+    if v0 == 0:
+        return True, "zero baseline"
+    rel = (v1 - v0) / abs(v0)
+    worse = rel > gate.rel_tol if gate.better == LOWER \
+        else -rel > gate.rel_tol
+    msg = (f"{l0}={v0:g} -> {l1}={v1:g} ({rel:+.1%}, "
+           f"{gate.better} is better, tol {gate.rel_tol:.0%})")
+    return not worse, msg
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="Benchmark trajectory across git history, with "
+                    "per-metric regression gates.")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero when the newest version of any "
+                         "gated metric regressed past its tolerance")
+    ap.add_argument("--repo", default=str(ROOT),
+                    help="repository root (default: this script's repo)")
+    args = ap.parse_args(argv)
+
+    if _git(args.repo, "rev-parse", "--git-dir").returncode != 0:
+        print("bench_report: not a git repository (shallow CI checkout "
+              "needs fetch-depth: 0)")
+        return 2
+
+    traj = trajectory(args.repo)
+    labels = {f: [label for label, _ in vs] for f, vs in traj.items()}
+    width = max(len(g.path) for g in GATES) + 2
+
+    failures = []
+    cur_file = None
+    for gate in GATES:
+        versions = traj[gate.file]
+        if gate.file != cur_file:
+            cur_file = gate.file
+            cols = "  ".join(f"{l:>10}" for l in labels[gate.file])
+            print(f"\n{gate.file}  [{len(versions)} versions]")
+            print(f"  {'metric':<{width}}{cols}")
+        values = [(label, dig(doc, gate.path)) for label, doc in versions]
+        cells = "  ".join("         -" if v is None else f"{v:>10g}"
+                          for _, v in values)
+        ok, msg = check_gate(gate, values)
+        flag = "" if ok else "  << REGRESSED"
+        print(f"  {gate.path:<{width}}{cells}{flag}")
+        if not ok:
+            failures.append(f"{gate.file}:{gate.path}: {msg}")
+
+    if args.check:
+        if failures:
+            print(f"\n{len(failures)} gate(s) regressed:")
+            for f in failures:
+                print(f"  - {f}")
+            return 1
+        print("\nall gates pass")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

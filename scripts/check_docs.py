@@ -9,6 +9,8 @@
 - No ``*.pyc`` / ``__pycache__`` files may be tracked by git — checked
   against both the file list and the HEAD tree, so a committed
   ``__pycache__`` *directory* fails even if its files were filtered.
+- ``benchmarks/__pycache__/`` must be gitignored (the bench runners
+  drop bytecode next to the committed BENCH_*.json snapshots).
 - Public-API doc coverage: every public module / class / function /
   method in ``src/repro/core``, ``src/repro/service``,
   ``src/repro/fabric`` and ``src/repro/obs`` must carry a docstring
@@ -186,6 +188,21 @@ def check_obs_contract_doc():
         "docs/observability.md")
 
 
+def check_benchmark_hygiene():
+    """``benchmarks/__pycache__/`` must be covered by .gitignore (the
+    bench runners import ``benchmarks`` as a package, so running them
+    drops bytecode next to the committed BENCH_*.json snapshots — an
+    unignored cache dir shows up in every ``git status`` and invites a
+    committed-bytecode regression)."""
+    probe = subprocess.run(
+        ["git", "check-ignore", "-q", "benchmarks/__pycache__/x.pyc"],
+        cwd=ROOT, check=False)
+    if probe.returncode != 0:
+        return ["benchmarks/__pycache__/ is not gitignored "
+                "(add it to .gitignore)"]
+    return []
+
+
 def check_no_tracked_pyc():
     """No bytecode in git: neither tracked ``*.pyc``/``__pycache__``
     files, nor a committed ``__pycache__`` directory in the HEAD tree
@@ -208,6 +225,7 @@ def main() -> int:
     for path in doc_files():
         errors += check_file(path)
     errors += check_no_tracked_pyc()
+    errors += check_benchmark_hygiene()
     errors += check_api_docs()
     errors += check_backend_contract_doc()
     errors += check_policy_contract_doc()

@@ -1,0 +1,182 @@
+#!/usr/bin/env python3
+"""Divergence triage: diff two recorded runs and name the first causal
+divergence.
+
+Compares two JSONL logs record-by-record and, for the first index where
+they differ, prints both records plus each side's ancestry chain (the
+``cause`` links back to the driver op that started it) — the operator's
+answer to "where did these two runs stop being the same run".
+
+Two input formats, auto-detected per file:
+
+- **flight logs** (``serve.py --flight-out`` / ``FlightRecorder``):
+  records carry ``eid``/``kind``/``cause``; compared verbatim (the logs
+  are deterministic, so any byte difference is a real divergence);
+- **span traces** (``serve.py --trace-out *.jsonl``): compared through
+  :func:`repro.obs.trace.comparable_records`, which strips wall-clock
+  stamps first.
+
+Usage::
+
+    python scripts/flight_report.py run_a.jsonl run_b.jsonl [--context 3]
+
+Exit status: 0 when the logs are equivalent, 1 when they diverge.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.obs import flight as flight_lib  # noqa: E402
+from repro.obs import trace as trace_lib  # noqa: E402
+
+
+def is_flight(records) -> bool:
+    """Flight logs carry ``eid``; span traces carry ``span_id``."""
+    return bool(records) and "eid" in records[0]
+
+
+def canon(rec) -> str:
+    return json.dumps(rec, sort_keys=True)
+
+
+def ancestry(records, eid, limit=10):
+    """The cause chain of record ``eid``: itself, its cause, its cause's
+    cause ... up to the root driver op."""
+    chain = []
+    while eid is not None and len(chain) < limit:
+        rec = records[eid]
+        chain.append(rec)
+        eid = rec.get("cause")
+    return chain
+
+
+def brief(rec) -> str:
+    """One-line rendering of a flight record."""
+    skip = ("schema", "eid", "kind", "origin", "cause")
+    fields = ", ".join(f"{k}={rec[k]!r}" for k in rec if k not in skip)
+    return (f"eid {rec['eid']:>5} {rec['kind']:<16} "
+            f"[{rec.get('origin', '')}] {fields}")
+
+
+# fleet/store configuration, not run behaviour: differences here are
+# reported as notes, and the divergence search targets the events after
+CONFIG_KINDS = ("run_header", "store_config")
+
+
+def first_divergence(a, b, skip_config=False):
+    """Index of the first differing record pair, or None when one log is
+    a prefix of the other (the index past the prefix) or they match.
+    ``skip_config`` ignores pairs where both sides are config records
+    (reported separately by the caller)."""
+    n = min(len(a), len(b))
+    for i in range(n):
+        if skip_config and a[i].get("kind") in CONFIG_KINDS \
+                and b[i].get("kind") in CONFIG_KINDS:
+            continue
+        if canon(a[i]) != canon(b[i]):
+            return i
+    return None if len(a) == len(b) else n
+
+
+def config_diffs(a, b):
+    """Field-level differences between the two logs' config records."""
+    ca = {r["kind"]: r for r in a if r.get("kind") in CONFIG_KINDS}
+    cb = {r["kind"]: r for r in b if r.get("kind") in CONFIG_KINDS}
+    diffs = []
+    for kind in sorted(set(ca) | set(cb)):
+        ra, rb = ca.get(kind, {}), cb.get(kind, {})
+        for key in sorted(set(ra) | set(rb)):
+            if key in ("eid", "cause") or ra.get(key) == rb.get(key):
+                continue
+            diffs.append(f"{kind}.{key}: "
+                         f"{ra.get(key)!r} vs {rb.get(key)!r}")
+    return diffs
+
+
+def report_flight(a, b, name_a, name_b, context):
+    for name, recs in ((name_a, a), (name_b, b)):
+        problems = flight_lib.validate_flight(recs)
+        if problems:
+            print(f"{name}: INVALID flight log ({problems[0]})")
+            return 1
+    cfg = config_diffs(a, b)
+    for d in cfg:
+        print(f"config differs: {d}")
+    i = first_divergence(a, b, skip_config=True)
+    if i is None:
+        if cfg:
+            print(f"events identical despite config differences: "
+                  f"{len(a)} records")
+            return 1
+        print(f"logs identical: {len(a)} records")
+        return 0
+    print(f"first divergent event at record {i} "
+          f"({len(a)} vs {len(b)} records):")
+    for name, recs in ((name_a, a), (name_b, b)):
+        print(f"\n  {name}:")
+        if i >= len(recs):
+            print("    <log ends here>")
+            continue
+        for rec in recs[max(0, i - context):i]:
+            print(f"    {brief(rec)}")
+        print(f"  > {brief(recs[i])}")
+        chain = ancestry(recs, recs[i]["eid"])
+        if len(chain) > 1:
+            arrow = " <- ".join(
+                f"{r['kind']}({r['eid']})" for r in chain)
+            print(f"    ancestry: {arrow}")
+    return 1
+
+
+def report_trace(a, b, name_a, name_b, context):
+    ca = trace_lib.comparable_records(a)
+    cb = trace_lib.comparable_records(b)
+    i = first_divergence(ca, cb)
+    if i is None:
+        print(f"traces equivalent: {len(ca)} comparable records")
+        return 0
+    print(f"first divergence at comparable record {i} "
+          f"({len(ca)} vs {len(cb)} records):")
+    for name, recs in ((name_a, ca), (name_b, cb)):
+        print(f"\n  {name}:")
+        if i >= len(recs):
+            print("    <trace ends here>")
+            continue
+        for rec in recs[max(0, i - context):i + 1]:
+            mark = ">" if rec is recs[i] else " "
+            print(f"  {mark} span {rec['span_id']:>5} "
+                  f"{rec['name']:<16} [{rec['process']}] "
+                  f"ticket={rec['ticket']!r} status={rec['status']} "
+                  f"attrs={rec['attrs']!r}")
+    return 1
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="Diff two flight logs (or span traces) and name the "
+                    "first causal divergence.")
+    ap.add_argument("log_a", help="first JSONL log")
+    ap.add_argument("log_b", help="second JSONL log")
+    ap.add_argument("--context", type=int, default=3,
+                    help="matching records to show before the divergence")
+    args = ap.parse_args(argv)
+
+    a = flight_lib.load_flight(args.log_a)
+    b = flight_lib.load_flight(args.log_b)
+    fa, fb = is_flight(a), is_flight(b)
+    if fa != fb:
+        print("cannot compare a flight log against a span trace")
+        return 2
+    if fa:
+        return report_flight(a, b, args.log_a, args.log_b, args.context)
+    return report_trace(a, b, args.log_a, args.log_b, args.context)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

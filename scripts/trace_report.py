@@ -6,9 +6,17 @@ Reads a trace written by ``serve.py --trace-out out.jsonl`` (or any
 
 - the per-ticket latency breakdown — for every ticket, time (virtual
   seconds) from submit to final, split by phase (queue wait, plan share,
-  scan/dispatch, stream delivery) plus the outcome and cache tier;
+  scan/dispatch, stream delivery) plus the outcome, cache tier and the
+  adopting owner when the ticket was served by lease adoption;
+- a fleet-events section counting the failure-policy and single-flight
+  vocabulary per front-end: ``policy_transition`` (by edge),
+  ``rereplicate`` (copies), ``lease_adopt`` and ``lease_fallback``;
 - the top-N slowest packets with their grid node, brick and size (the
   straggler view the paper's operators would start from).
+
+Lease-export streams stamp their string lease key as the ``ticket`` of
+``stream_partial`` events; those rows sort after integer tickets and
+are otherwise reported verbatim.
 
 Usage::
 
@@ -58,16 +66,23 @@ def ticket_breakdown(records):
             info["final"] = rec
         elif rec["name"] == "stream":
             info["stream"] = rec
+        elif rec["name"] == "lease_adopt":
+            info["adopt"] = rec
     rows = []
-    for (_, t), info in sorted(by_ticket.items()):
+    # ticket keys may mix ints and lease-key strings: ints sort first
+    order = lambda kv: (kv[0][0], isinstance(kv[0][1], str), str(kv[0][1]))
+    for (_, t), info in sorted(by_ticket.items(), key=order):
         sub, fin = info.get("submit"), info.get("final")
         if sub is None:
             continue
+        adopt = info.get("adopt")
         row = {
             "ticket": t,
             "process": sub["process"],
             "status": sub["status"],
             "cache_tier": sub["attrs"].get("cache_tier", "-"),
+            "adopted_from": ("-" if adopt is None
+                             else str(adopt["attrs"].get("owner", "?"))),
             "outcome": (fin or {}).get("attrs", {}).get("outcome", "-"),
             "submit_t": sub["t0_virtual"],
             "final_t": None if fin is None else fin["t0_virtual"],
@@ -102,6 +117,26 @@ def slowest_packets(records, top):
     return pkts[:top]
 
 
+def fleet_events(records):
+    """Per-process counts of the failure-policy / single-flight events:
+    ``policy_transition`` edges, ``rereplicate`` copy totals, and lease
+    adoption/fallback occurrences."""
+    counts = defaultdict(lambda: defaultdict(int))
+    for rec in records:
+        name, a = rec["name"], rec.get("attrs", {})
+        if name == "policy_transition":
+            counts[rec["process"]][
+                f"policy {a.get('old')}->{a.get('new')}"] += 1
+        elif name == "rereplicate":
+            counts[rec["process"]]["rereplicate copies"] += int(
+                a.get("copies", 0))
+        elif name == "lease_adopt":
+            counts[rec["process"]]["lease adopts"] += 1
+        elif name == "lease_fallback":
+            counts[rec["process"]]["lease fallbacks"] += 1
+    return counts
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("trace", help="JSONL trace file (serve.py --trace-out)")
@@ -124,14 +159,23 @@ def main(argv=None):
     print(f"\nper-ticket latency (virtual seconds), "
           f"{min(len(rows), args.tickets)}/{len(rows)} tickets:")
     hdr = (f"{'ticket':>6} {'fe':>5} {'outcome':>8} {'tier':>4} "
-           f"{'total':>9} {'queued':>9} {'plan':>9} {'scan':>9}")
+           f"{'adopt':>6} {'total':>9} {'queued':>9} {'plan':>9} "
+           f"{'scan':>9}")
     print(hdr)
     for row in rows[:args.tickets]:
         fmt = lambda v: "-" if v is None else f"{v:9.4f}"
-        print(f"{row['ticket']:>6} {row['process']:>5} "
+        print(f"{str(row['ticket']):>6} {row['process']:>5} "
               f"{row['outcome']:>8} {row['cache_tier']:>4} "
+              f"{row['adopted_from']:>6} "
               f"{fmt(row['total']):>9} {fmt(row['queue_wait']):>9} "
               f"{row['plan']:9.4f} {row['scan']:9.4f}")
+
+    events = fleet_events(records)
+    if events:
+        print("\nfleet events (policy / leases):")
+        for proc in sorted(events):
+            for what in sorted(events[proc]):
+                print(f"  {proc:>5} {what}: {events[proc][what]}")
 
     pkts = slowest_packets(records, args.top)
     if pkts:

@@ -82,6 +82,9 @@ class MessageBus:
         # None = disabled.  The fleet installs its fleet-level registry
         # here — the bus is shared infrastructure, not per-frontend.
         self.metrics = None
+        # flight-recorder scope (repro.obs.flight.FlightScope); None =
+        # disabled.  Records every send outcome and delivery.
+        self.flight = None
         self._rng = random.Random(seed)
         self._inboxes: Dict[str, Deque[Envelope]] = {}
         self._inflight: List[Envelope] = []
@@ -133,6 +136,19 @@ class MessageBus:
         self._groups = None
 
     # ------------------------------------------------------------------ #
+    def _send_outcome(self, src: str, dst: str, topic: str) -> str:
+        # The single nondeterminism-relevant decision point of the bus:
+        # "partitioned" | "dropped" | "delivered".  The replay engine
+        # (repro.obs.replay.ReplayBus) overrides exactly this method to
+        # substitute recorded outcomes, which also covers partitions and
+        # per-link loss without re-driving partition()/set_link_loss().
+        if not self._same_side(src, dst):
+            return "partitioned"
+        loss = self._link_loss.get((src, dst), self.drop_rate)
+        if loss and self._rng.random() < loss:
+            return "dropped"
+        return "delivered"
+
     def send(self, src: str, dst: str, topic: str, payload: Any) -> bool:
         """Queue one message; returns False when the loss process or an
         active partition ate it (callers never retry — the fabric's
@@ -142,21 +158,29 @@ class MessageBus:
         self.stats.sent += 1
         if self.metrics is not None:
             self.metrics.counter("bus.sent").inc()
-        if not self._same_side(src, dst):
-            self.stats.partitioned += 1
+        outcome = self._send_outcome(src, dst, topic)
+        if outcome != "delivered":
+            if outcome == "partitioned":
+                self.stats.partitioned += 1
+            else:
+                self.stats.dropped += 1
             if self.metrics is not None:
-                self.metrics.counter("bus.partitioned").inc()
-            return False
-        loss = self._link_loss.get((src, dst), self.drop_rate)
-        if loss and self._rng.random() < loss:
-            self.stats.dropped += 1
-            if self.metrics is not None:
-                self.metrics.counter("bus.dropped").inc()
+                self.metrics.counter(f"bus.{outcome}").inc()
+            if self.flight is not None:
+                self.flight.record("bus_send", n=self.stats.sent, src=src,
+                                   dst=dst, topic=topic, outcome=outcome,
+                                   round=self.round)
             return False
         env = Envelope(self._seq, src, dst, topic, payload, self.round,
                        self.round + 1 + self.delay)
         self._seq += 1
         self._inflight.append(env)
+        if self.flight is not None:
+            rec = self.flight.record(
+                "bus_send", n=self.stats.sent, src=src, dst=dst,
+                topic=topic, outcome=outcome, round=self.round,
+                seq=env.seq, deliver_round=env.deliver_round)
+            self.flight.note_send(env.seq, rec["eid"])
         return True
 
     def broadcast(self, src: str, topic: str, payload: Any) -> int:
@@ -175,6 +199,12 @@ class MessageBus:
         due.sort(key=lambda e: e.seq)
         for env in due:
             self._inboxes[env.dst].append(env)
+            if self.flight is not None:
+                rec = self.flight.record(
+                    "bus_deliver", seq=env.seq, src=env.src, dst=env.dst,
+                    topic=env.topic, round=self.round,
+                    cause=self.flight.send_cause(env.seq))
+                self.flight.note_deliver(env.seq, rec["eid"])
         self.stats.delivered += len(due)
         if self.metrics is not None and due:
             self.metrics.counter("bus.delivered").inc(len(due))

@@ -27,6 +27,7 @@ tier.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import pathlib
 from typing import Callable, Dict, List, Optional, Tuple, Union
@@ -44,9 +45,10 @@ from repro.fabric.registry import FragmentRegistry
 from repro.fabric.shared_cache import SharedCacheTier, TieredResultCache
 from repro.obs import (HealthMonitor, HealthReport, MetricsRegistry,
                        MetricsSnapshot, Observability, merge_snapshots)
+from repro.obs import flight as flight_lib
 from repro.obs import trace as trace_lib
 from repro.service import streaming as streaming_lib
-from repro.service.frontend import QueryService, Ticket
+from repro.service.frontend import QUEUED, QueryService, Ticket
 from repro.service.policy import FailurePolicy
 from repro.service.scheduler import QueryScheduler
 
@@ -140,6 +142,17 @@ class Fleet:
         path on :meth:`close` plus every ``l2_checkpoint_every``
         :meth:`step` calls (0 = only on close).  Requires
         ``shared_cache=True`` to matter.
+    flight:
+        ``True`` (or an existing
+        :class:`~repro.obs.flight.FlightRecorder`) arms the flight
+        recorder: every driver call, bus send outcome/delivery, gossip
+        epoch/liveness change, lease transition, policy decision,
+        dispatch window and result digest is appended to a causal
+        decision log (:attr:`flight`; write it with
+        :meth:`save_flight`).  The log replays bit-identically through
+        :func:`repro.obs.replay.replay_run`.  Independent of ``obs``
+        and, like it, recorded in virtual time only — arming it leaves
+        simulated makespans exactly unchanged.
     """
 
     def __init__(self, store: BrickStore, n_frontends: int = 2, *,
@@ -160,7 +173,8 @@ class Fleet:
                  single_flight: bool = False,
                  lease_ttl: Optional[int] = None,
                  l2_path: Optional[Union[str, pathlib.Path]] = None,
-                 l2_checkpoint_every: int = 0):
+                 l2_checkpoint_every: int = 0,
+                 flight: Union[bool, flight_lib.FlightRecorder] = False):
         if n_frontends < 1:
             raise ValueError("need at least one front-end")
         if policy and not obs:
@@ -186,6 +200,15 @@ class Fleet:
             self.bus.metrics = self.fleet_metrics
             if self.l2 is not None:
                 self.l2.metrics = self.fleet_metrics
+        #: the armed FlightRecorder, or None (``flight=`` parameter)
+        self.flight: Optional[flight_lib.FlightRecorder] = None
+        self._flight_depth = 0   # nested driver ops record only the outer
+        self._flight_finals: set = set()  # gtids whose final is recorded
+        if flight:
+            self.flight = (flight
+                           if isinstance(flight, flight_lib.FlightRecorder)
+                           else flight_lib.FlightRecorder())
+            self.bus.flight = self.flight.scoped("bus")
         self.registry = registry
         self.backend = backend
         self.gossip_fanout = (gossip_fanout if gossip_fanout is not None
@@ -244,9 +267,35 @@ class Fleet:
                 # parked, not aborted (the export is coming)
                 lease_mgr.fanout = fanout
                 fanout.defer = lease_mgr.intends
+            if self.flight is not None:
+                scope = self.flight.scoped(node_id)
+                gossip.flight = scope
+                svc.scheduler.flight = scope
+                if pol is not None:
+                    pol.flight = scope
+                if lease_mgr is not None:
+                    lease_mgr.flight = scope
             self.frontends.append(Frontend(i, node_id, svc, catalog,
                                            gossip, fanout, fe_obs,
                                            lease_mgr))
+        if self.flight is not None:
+            safe_kwargs = {k: v for k, v in (service_kwargs or {}).items()
+                           if isinstance(v, (bool, int, float, str,
+                                             type(None)))}
+            self.flight.record(
+                "run_header", origin="fleet",
+                n_frontends=n_frontends, backend=backend,
+                shared_cache=shared_cache, l1_capacity=l1_capacity,
+                l2_capacity=l2_capacity, registry=registry is not None,
+                gossip_fanout=self.gossip_fanout,
+                gossip_repair=gossip_repair, obs=obs, policy=policy,
+                policy_config=policy_config is not None,
+                single_flight=single_flight, lease_ttl=lease_ttl,
+                scheduler_factory=scheduler_factory is not None,
+                l2_path=self.l2_path is not None,
+                service_kwargs=safe_kwargs,
+                bus_delay=self.bus.delay,
+                bus_drop_rate=self.bus.drop_rate)
 
     # ------------------------------------------------------------------ #
     @property
@@ -294,6 +343,57 @@ class Fleet:
         the id was never issued)."""
         return self._tickets[gtid][0]
 
+    # -------------------------- flight plumbing ----------------------- #
+    @contextlib.contextmanager
+    def _flight_op(self, op: str, **fields):
+        # Record one driver op and make it the causal parent of every
+        # record appended while it runs.  Internal nesting (drain->step->
+        # pump) records only the OUTERMOST op: replay re-issues driver
+        # calls verbatim, so inner calls replay themselves.
+        fl = self.flight
+        outer = fl is not None and self._flight_depth == 0
+        self._flight_depth += 1
+        rec = None
+        if outer:
+            rec = fl.record("op", origin="fleet", op=op, **fields)
+            fl.push(rec["eid"])
+        try:
+            yield rec
+        finally:
+            if outer:
+                fl.pop()
+            self._flight_depth -= 1
+
+    def _flight_finalize(self) -> None:
+        # Append one "final" digest record per newly resolved ticket, in
+        # gtid order — the bit-identity surface replay compares.
+        fl = self.flight
+        if fl is None:
+            return
+        for gtid in sorted(self._tickets):
+            if gtid in self._flight_finals:
+                continue
+            fe_idx, tid = self._tickets[gtid]
+            t = self.frontends[fe_idx].service.tickets[tid]
+            if t.status == QUEUED:
+                continue
+            self._flight_finals.add(gtid)
+            fl.record("final", origin="fleet", gtid=gtid, status=t.status,
+                      adopted=t.adopted, cached=t.from_cache,
+                      digest=(None if t.result is None
+                              else flight_lib.result_digest(t.result)))
+
+    def save_flight(self, path) -> int:
+        """Write the flight-recorder log as JSONL (records any
+        still-unrecorded finals first); returns records written.
+        Raises RuntimeError when the fleet was built without
+        ``flight=``."""
+        if self.flight is None:
+            raise RuntimeError("fleet was built without flight=")
+        self._flight_finalize()
+        self.flight.save_jsonl(path)
+        return len(self.flight.records)
+
     # ------------------------------------------------------------------ #
     def submit(self, expr: str, *, tenant: str = "default",
                calib_iters: int = 0, stream: bool = False,
@@ -301,23 +401,39 @@ class Fleet:
         """Submit to one front-end (round-robin over LIVE front-ends when
         ``frontend`` is None); returns a fleet-global ticket id usable at
         any front-end."""
-        if frontend is None:
-            for _ in range(self.n_frontends):
-                idx = self._rr % self.n_frontends
-                self._rr += 1
-                if self.frontends[idx].alive:
-                    frontend = idx
-                    break
+        with self._flight_op("submit", expr=expr, tenant=tenant,
+                             calib_iters=calib_iters, stream=stream,
+                             frontend=frontend, gtid=None) as oprec:
             if frontend is None:
-                raise RuntimeError("no live front-ends")
-        fe = self.frontends[frontend]
-        tid = fe.service.submit(expr, tenant=tenant,
-                                calib_iters=calib_iters, stream=stream)
-        gtid = self._next_gtid
-        self._next_gtid += 1
-        self._tickets[gtid] = (frontend, tid)
-        self._by_local[(frontend, tid)] = gtid
-        return gtid
+                for _ in range(self.n_frontends):
+                    idx = self._rr % self.n_frontends
+                    self._rr += 1
+                    if self.frontends[idx].alive:
+                        frontend = idx
+                        break
+                if frontend is None:
+                    raise RuntimeError("no live front-ends")
+            fe = self.frontends[frontend]
+            tid = fe.service.submit(expr, tenant=tenant,
+                                    calib_iters=calib_iters, stream=stream)
+            gtid = self._next_gtid
+            self._next_gtid += 1
+            self._tickets[gtid] = (frontend, tid)
+            self._by_local[(frontend, tid)] = gtid
+            if oprec is not None:
+                # patch in the resolved routing so replay re-targets the
+                # same front-end without re-running the round-robin
+                oprec["frontend"] = frontend
+                oprec["gtid"] = gtid
+            if stream and self.flight is not None:
+                rs = fe.service.streams.get(tid)
+                if rs is not None:
+                    fl = self.flight
+                    rs.subscribe(lambda snap, g=gtid: fl.record(
+                        "stream_snapshot", origin="fleet", gtid=g,
+                        seq=snap.seq, final=bool(snap.final),
+                        digest=flight_lib.result_digest(snap.result)))
+            return gtid
 
     def result(self, gtid: int) -> Ticket:
         """Ticket lookup routed to the owning front-end (the control
@@ -336,7 +452,10 @@ class Fleet:
         fe, tid = self._owner(gtid)
         if frontend is None or frontend == fe.index:
             return fe.service.stream(tid)
-        return self.frontends[frontend].fanout.proxy(gtid, fe.node_id)
+        with self._flight_op("stream", gtid=gtid, frontend=frontend):
+            # cross-frontend read: the proxy subscription talks over the
+            # bus, so the op must be in the log for replay to re-issue it
+            return self.frontends[frontend].fanout.proxy(gtid, fe.node_id)
 
     # ------------------------------------------------------------------ #
     def pump(self, rounds: int = 1) -> None:
@@ -347,29 +466,39 @@ class Fleet:
         pending stream adoptions are polled.  Dead front-ends
         (:meth:`frontend_leave`) emit nothing; their inboxes are drained
         and discarded so in-flight accounting still quiesces."""
-        for _ in range(rounds):
-            for fe in self.frontends:
-                if not fe.alive:
-                    continue
-                fe.gossip.emit()
-                if fe.leases is not None:
-                    fe.leases.emit()
-            self.bus.tick()
-            for fe in self.frontends:
-                if not fe.alive:
-                    self.bus.recv(fe.node_id)  # discard: nobody is home
-                    continue
-                for env in self.bus.recv(fe.node_id):
-                    if env.topic == GOSSIP_TOPIC:
-                        fe.gossip.on_message(env.payload)
-                    elif env.topic == STREAM_TOPIC:
-                        fe.fanout.on_message(env.payload)
-                    elif env.topic == LEASE_TOPIC \
-                            and fe.leases is not None:
-                        fe.leases.on_message(env.payload)
-            for fe in self.frontends:
-                if fe.alive and fe.leases is not None:
-                    fe.service.poll_adoptions()
+        fl = self.flight
+        with self._flight_op("pump", rounds=rounds):
+            for _ in range(rounds):
+                for fe in self.frontends:
+                    if not fe.alive:
+                        continue
+                    fe.gossip.emit()
+                    if fe.leases is not None:
+                        fe.leases.emit()
+                self.bus.tick()
+                for fe in self.frontends:
+                    if not fe.alive:
+                        self.bus.recv(fe.node_id)  # discard: nobody home
+                        continue
+                    for env in self.bus.recv(fe.node_id):
+                        if fl is not None:
+                            # handler effects chain to the delivery that
+                            # carried the message, not the pump op
+                            fl.push(fl.deliver_cause(env.seq))
+                        try:
+                            if env.topic == GOSSIP_TOPIC:
+                                fe.gossip.on_message(env.payload)
+                            elif env.topic == STREAM_TOPIC:
+                                fe.fanout.on_message(env.payload)
+                            elif env.topic == LEASE_TOPIC \
+                                    and fe.leases is not None:
+                                fe.leases.on_message(env.payload)
+                        finally:
+                            if fl is not None:
+                                fl.pop()
+                for fe in self.frontends:
+                    if fe.alive and fe.leases is not None:
+                        fe.service.poll_adoptions()
 
     def step(self, frontend: Optional[int] = None, *,
              failure_script=None, pump_rounds: int = 1) -> List[int]:
@@ -379,22 +508,25 @@ class Fleet:
         dispatch, so intents announced at submit time have resolved to
         one owner per duplicated canonical fleet-wide and the losers
         adopt instead of scanning."""
-        if self.single_flight:
-            self.pump(1 + self.bus.delay)
-        targets = ([self.frontends[frontend]] if frontend is not None
-                   else [fe for fe in self.frontends if fe.alive])
-        served = []
-        for fe in targets:
-            for tid in fe.service.step(failure_script=failure_script):
-                served.append(self._by_local[(fe.index, tid)])
-        self.pump(pump_rounds)
-        if self.l2_checkpoint_every > 0 and self.l2 is not None \
-                and self.l2_path is not None:
-            self._steps_since_ckpt += 1
-            if self._steps_since_ckpt >= self.l2_checkpoint_every:
-                self._steps_since_ckpt = 0
-                self.l2.save(self.l2_path)
-        return served
+        with self._flight_op("step", frontend=frontend,
+                             pump_rounds=pump_rounds,
+                             scripted=failure_script is not None):
+            if self.single_flight:
+                self.pump(1 + self.bus.delay)
+            targets = ([self.frontends[frontend]] if frontend is not None
+                       else [fe for fe in self.frontends if fe.alive])
+            served = []
+            for fe in targets:
+                for tid in fe.service.step(failure_script=failure_script):
+                    served.append(self._by_local[(fe.index, tid)])
+            self.pump(pump_rounds)
+            if self.l2_checkpoint_every > 0 and self.l2 is not None \
+                    and self.l2_path is not None:
+                self._steps_since_ckpt += 1
+                if self._steps_since_ckpt >= self.l2_checkpoint_every:
+                    self._steps_since_ckpt = 0
+                    self.l2.save(self.l2_path)
+            return served
 
     def _busy(self) -> bool:
         return any(fe.alive and (fe.service.scheduler.n_pending > 0
@@ -412,42 +544,51 @@ class Fleet:
         forever on a delayed bus.  The outer loop re-enters dispatch when
         the anti-entropy cycle itself creates work — e.g. a lease TTL
         expiry whose fallback requeued a scan."""
-        for _ in range(max_windows):
+        with self._flight_op("drain", max_windows=max_windows):
             for _ in range(max_windows):
+                for _ in range(max_windows):
+                    if not self._busy():
+                        break
+                    self.step()
+                guard = 0
+                while self.bus.in_flight(STREAM_TOPIC) and guard < 1000:
+                    self.pump()
+                    guard += 1
+                self.pump(self.rounds_bound)
                 if not self._busy():
                     break
-                self.step()
-            guard = 0
-            while self.bus.in_flight(STREAM_TOPIC) and guard < 1000:
-                self.pump()
-                guard += 1
-            self.pump(self.rounds_bound)
-            if not self._busy():
-                break
+            self._flight_finalize()
 
     # ------------------------------------------------------------------ #
     def bump_dataset_version(self, frontend: int = 0) -> int:
         """Record a dataset change as observed by one front-end; gossip
         carries it to every peer within :attr:`rounds_bound` pumps."""
-        return self.frontends[frontend].catalog.bump_dataset_version()
+        with self._flight_op("bump", frontend=frontend):
+            return self.frontends[frontend].catalog.bump_dataset_version()
 
     def node_leave(self, grid_node: int, *,
                    observed_by: int = 0) -> MigrationPlan:
         """Grid node death observed by one front-end: local failover via
         the ElasticManager, liveness gossip to every peer."""
-        fe = self.frontends[observed_by]
-        plan = ElasticManager(fe.catalog, self.store).node_leave(grid_node)
-        fe.gossip.observe_liveness(grid_node, False)
-        return plan
+        with self._flight_op("node_leave", grid_node=grid_node,
+                             observed_by=observed_by):
+            fe = self.frontends[observed_by]
+            plan = ElasticManager(fe.catalog,
+                                  self.store).node_leave(grid_node)
+            fe.gossip.observe_liveness(grid_node, False)
+            return plan
 
     def node_join(self, grid_node: int, *,
                   observed_by: int = 0) -> MigrationPlan:
         """Grid node (re)join observed by one front-end: local rebalance
         via the ElasticManager, liveness gossip to every peer."""
-        fe = self.frontends[observed_by]
-        plan = ElasticManager(fe.catalog, self.store).node_join(grid_node)
-        fe.gossip.observe_liveness(grid_node, True)
-        return plan
+        with self._flight_op("node_join", grid_node=grid_node,
+                             observed_by=observed_by):
+            fe = self.frontends[observed_by]
+            plan = ElasticManager(fe.catalog,
+                                  self.store).node_join(grid_node)
+            fe.gossip.observe_liveness(grid_node, True)
+            return plan
 
     def frontend_leave(self, index: int) -> None:
         """Silent FRONT-END crash: the member stops emitting gossip and
@@ -456,7 +597,8 @@ class Fleet:
         expire after one TTL, and adoptees of its streams fall back
         (shared cache first, own rescan on a miss).  Its own queued work
         is stranded, as a real crash strands it."""
-        self.frontends[index].alive = False
+        with self._flight_op("frontend_leave", index=index):
+            self.frontends[index].alive = False
 
     def ban_frontend(self, index: int, *, by: int = 0) -> None:
         """Policy ban of a front-end (the PR 7 state machine's verdict
@@ -464,10 +606,11 @@ class Fleet:
         :meth:`frontend_leave`, AND front-end ``by`` broadcasts a lease
         revocation for it — adoptees fall back on the next pump instead
         of waiting out the TTL (the fast path for *known*-bad owners)."""
-        self.frontend_leave(index)
-        observer = self.frontends[by]
-        if observer.leases is not None:
-            observer.leases.revoke_owner(self.frontends[index].node_id)
+        with self._flight_op("ban_frontend", index=index, by=by):
+            self.frontend_leave(index)
+            observer = self.frontends[by]
+            if observer.leases is not None:
+                observer.leases.revoke_owner(self.frontends[index].node_id)
 
     # ------------------------------------------------------------------ #
     def fleet_stats(self) -> dict:
@@ -550,8 +693,10 @@ class Fleet:
         configured), close every front-end's service (cache hooks
         detached) and detach every gossip node from its catalogue — a
         long-lived catalogue accumulates no dead hooks."""
-        if self.l2 is not None and self.l2_path is not None:
-            self.l2.save(self.l2_path)
-        for fe in self.frontends:
-            fe.service.close()
-            fe.gossip.detach()
+        with self._flight_op("close"):
+            self._flight_finalize()
+            if self.l2 is not None and self.l2_path is not None:
+                self.l2.save(self.l2_path)
+            for fe in self.frontends:
+                fe.service.close()
+                fe.gossip.detach()

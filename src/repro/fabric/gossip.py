@@ -196,6 +196,9 @@ class GossipNode:
         # ``metrics`` a MetricsRegistry for gossip counters.  None = off.
         self.health = None
         self.metrics = None
+        # flight-recorder scope (repro.obs.flight.FlightScope); None =
+        # off.  Records epoch advances and liveness flips.
+        self.flight = None
         bus.register(node_id)
         catalog.on_dataset_bump(self._on_local_bump)
 
@@ -209,6 +212,8 @@ class GossipNode:
         if epoch > known:
             self.vv[self.node_id] = \
                 self.vv.get(self.node_id, 0) + (epoch - known)
+            if self.flight is not None:
+                self.flight.record("gossip_epoch", epoch=epoch, via="local")
 
     def observe_liveness(self, grid_node: int, alive: bool) -> None:
         """Record a locally observed grid-node join/leave and stamp it
@@ -218,6 +223,9 @@ class GossipNode:
         ElasticManager already did it)."""
         ver = self.liveness.get(grid_node, (0, "", True))[0]
         self.liveness[grid_node] = (ver + 1, self.node_id, alive)
+        if self.flight is not None:
+            self.flight.record("gossip_liveness", grid_node=grid_node,
+                               alive=alive, version=ver + 1, via="local")
 
     # ------------------------------------------------------------------ #
     def digest(self) -> dict:
@@ -290,6 +298,10 @@ class GossipNode:
         if changed:
             self.catalog.set_dataset_epoch(effective_epoch(self.vv))
             self.stats.epoch_updates += 1
+            if self.flight is not None:
+                self.flight.record("gossip_epoch",
+                                   epoch=effective_epoch(self.vv),
+                                   via="gossip")
         live_changed = False
         for node, (ver, origin, alive) in payload.get("live", {}).items():
             node = int(node)
@@ -302,6 +314,10 @@ class GossipNode:
                     self.catalog.mark_dead(node)
                 self.stats.liveness_updates += 1
                 live_changed = True
+                if self.flight is not None:
+                    self.flight.record("gossip_liveness", grid_node=node,
+                                       alive=alive, version=ver,
+                                       via="gossip")
         return changed, live_changed
 
     def _sender_stale(self, payload: dict) -> bool:

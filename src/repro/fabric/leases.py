@@ -138,6 +138,10 @@ class LeaseManager:
         #: the front-end's StreamFanout (Fleet-wired); adoptions proxy
         #: remote lease streams through it
         self.fanout = None
+        #: flight-recorder scope (repro.obs.flight.FlightScope); None =
+        #: off.  Records announce/grant/expire/release/revoke and the
+        #: front-end's adopt/fallback transitions.
+        self.flight = None
         #: streams this front-end exports for keys it won, readable by
         #: any adoptee through the fan-out resolve hook
         self.exports: Dict[str, object] = {}
@@ -171,6 +175,9 @@ class LeaseManager:
                           round=self.bus.round, last_seen=self.bus.round,
                           fp=self.current_fp())
         self._intents[key] = rec
+        if self.flight is not None:
+            self.flight.record("lease_announce", key=key,
+                               round=self.bus.round)
         self._merge(rec)
         self._broadcast_intent(rec)
         self.stats.announced += 1
@@ -233,6 +240,10 @@ class LeaseManager:
         cur = self._table.get(rec.key)
         if cur is None or rec.priority < cur.priority:
             self._table[rec.key] = rec
+            if self.flight is not None and (cur is None
+                                            or cur.owner != rec.owner):
+                self.flight.record("lease_grant", key=rec.key,
+                                   owner=rec.owner, round=rec.round)
         elif rec.owner == cur.owner:
             cur.last_seen = max(cur.last_seen, rec.last_seen)
 
@@ -252,6 +263,9 @@ class LeaseManager:
             del self._table[key]
             self._intents.pop(key, None)
             self.stats.expired += 1
+            if self.flight is not None:
+                self.flight.record("lease_expire", key=key,
+                                   owner=rec.owner, round=self.bus.round)
             if self.obs is not None:
                 self.obs.metrics.counter("lease.expired").inc()
             return None
@@ -313,6 +327,9 @@ class LeaseManager:
             del self._table[key]
         if key in self.exports:
             self._released[key] = self.bus.round
+        if self.flight is not None:
+            self.flight.record("lease_release", key=key,
+                               round=self.bus.round)
         self.bus.broadcast(self.node_id, LEASE_TOPIC,
                            {"kind": "release", "key": key,
                             "owner": self.node_id})
@@ -336,6 +353,9 @@ class LeaseManager:
         for k in stale:
             del self._table[k]
         if stale:
+            if self.flight is not None:
+                self.flight.record("lease_revoke", owner=owner,
+                                   dropped=len(stale))
             self.stats.revoked += len(stale)
             if self.obs is not None:
                 self.obs.metrics.counter("lease.revoked").inc(len(stale))

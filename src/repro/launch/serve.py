@@ -93,9 +93,14 @@ def _dump_trace(records, path):
 
 
 def _dump_metrics(snapshot, path):
-    """Write a metrics snapshot as JSON."""
-    with open(path, "w") as f:
-        json.dump(snapshot.to_dict(), f, indent=2, sort_keys=True)
+    """Write a metrics snapshot: Prometheus text exposition format for
+    ``.prom`` paths, JSON otherwise."""
+    if str(path).endswith(".prom"):
+        with open(path, "w") as f:
+            f.write(snapshot.to_prom_text())
+    else:
+        with open(path, "w") as f:
+            json.dump(snapshot.to_dict(), f, indent=2, sort_keys=True)
     print(f"  metrics: {len(snapshot.metrics)} series -> {path}")
 
 
@@ -108,7 +113,8 @@ def serve_fleet(args):
     from repro.configs.geps_events import reduced as geps_reduced
     from repro.core import events as ev
     from repro.core.brick import create_store
-    from repro.fabric import Fleet, FragmentRegistry
+    from repro.fabric import Fleet, FragmentRegistry, MessageBus
+    from repro.obs import flight as flight_lib
 
     cfg = geps_reduced()
     schema = ev.EventSchema.from_config(cfg)
@@ -117,10 +123,22 @@ def serve_fleet(args):
                          events_per_brick=cfg.events_per_brick,
                          replication=cfg.replication_factor, seed=0)
     want_obs = bool(args.trace_out or args.metrics_dump or args.policy)
-    fleet = Fleet(store, args.fleet, registry=FragmentRegistry(),
+    bus = MessageBus(drop_rate=args.drop_rate, seed=args.bus_seed)
+    recorder = None
+    if args.flight_out:
+        # the store_config record makes the log self-contained: replay
+        # (python -m repro.obs.replay) rebuilds an equal store from it
+        recorder = flight_lib.FlightRecorder()
+        recorder.record("store_config", origin="serve",
+                        schema_name="geps_reduced", n_events=args.n_events,
+                        n_nodes=args.n_nodes,
+                        events_per_brick=cfg.events_per_brick,
+                        replication=cfg.replication_factor, seed=0)
+    fleet = Fleet(store, args.fleet, bus=bus, registry=FragmentRegistry(),
                   backend=args.backend, obs=want_obs,
                   policy=args.policy, gossip_repair=args.policy,
-                  single_flight=args.single_flight)
+                  single_flight=args.single_flight,
+                  flight=recorder if recorder is not None else False)
     hot = ["e_total > 40 && count(pt > 15) >= 2",
            "e_t_miss > 30", "pt_lead > 60 || n_tracks >= 8"]
     t0 = time.time()
@@ -141,6 +159,10 @@ def serve_fleet(args):
             sample = gtid
         if (i + 1) % args.window == 0:
             fleet.step()
+        if args.kill_node is not None and i == args.queries // 3:
+            # mid-run grid-node death: failover + liveness gossip (and,
+            # when recording, the event the replay must reproduce)
+            fleet.node_leave(args.kill_node)
         if args.queries > 2 and i == args.queries // 2:
             # mid-run dataset bump on one member: gossip invalidates the
             # whole fleet within the documented bound
@@ -188,6 +210,10 @@ def serve_fleet(args):
         _dump_trace(fleet.trace_records(), args.trace_out)
     if args.metrics_dump:
         _dump_metrics(fleet.metrics_snapshot(), args.metrics_dump)
+    if args.flight_out:
+        n = fleet.save_flight(args.flight_out)
+        print(f"  flight: {n} records -> {args.flight_out} "
+              f"(replay: python -m repro.obs.replay {args.flight_out})")
     fleet.close()
 
 
@@ -371,7 +397,23 @@ def main(argv=None):
     ap.add_argument("--metrics-dump", default=None, metavar="PATH",
                     help="query mode: enable the observability plane and "
                          "write the (fleet-merged) metrics snapshot to "
-                         "PATH as JSON")
+                         "PATH (.prom = Prometheus text exposition, "
+                         "anything else = JSON)")
+    ap.add_argument("--flight-out", default=None, metavar="PATH",
+                    help="query mode with --fleet: arm the flight "
+                         "recorder and write the causal decision log as "
+                         "JSONL to PATH; replay with "
+                         "'python -m repro.obs.replay PATH'")
+    ap.add_argument("--drop-rate", type=float, default=0.0,
+                    help="query mode with --fleet: seeded message-loss "
+                         "probability on every bus link")
+    ap.add_argument("--bus-seed", type=int, default=0,
+                    help="query mode with --fleet: RNG seed for the bus "
+                         "loss draw (determinism knob for --flight-out)")
+    ap.add_argument("--kill-node", type=int, default=None, metavar="N",
+                    help="query mode with --fleet: kill grid node N a "
+                         "third of the way through the workload "
+                         "(failover + liveness gossip)")
     args = ap.parse_args(argv)
 
     if args.mode == "query":

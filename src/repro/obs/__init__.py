@@ -10,10 +10,14 @@ constructor argument: pass an :class:`Observability` bundle to
 ``Fleet(obs=True)`` build one per front-end.
 
 See ``docs/observability.md`` for the span taxonomy, metric catalog,
-health-state semantics and trace-file format.
+health-state semantics, trace-file format, and the flight-recorder /
+replay contract (:mod:`repro.obs.flight`, :mod:`repro.obs.replay`).
 """
 from __future__ import annotations
 
+from repro.obs.flight import (FLIGHT_KINDS, FLIGHT_SCHEMA_VERSION,
+                              FlightRecorder, FlightScope, load_flight,
+                              result_digest, save_flight, validate_flight)
 from repro.obs.health import (HEALTH_DEGRADED, HEALTH_OK, HEALTH_STATES,
                               HEALTH_SUSPECT, HealthMonitor, HealthReport,
                               NodeHealth)
@@ -26,6 +30,21 @@ from repro.obs.trace import (SCHEMA_VERSION, SPAN_NAMES, STATUS_ERROR,
                              chrome_from_records, comparable_records,
                              load_jsonl, save_chrome, save_jsonl,
                              validate_file, validate_records)
+
+
+# the replay engine drives a Fleet, whose module imports this package:
+# resolve its names lazily (PEP 562) so `import repro.obs` never pulls
+# the fabric stack mid-initialization
+_REPLAY_NAMES = ("ReplayBus", "ReplayError", "ReplayReport", "replay_run")
+
+
+def __getattr__(name: str):
+    """Lazy re-export of :mod:`repro.obs.replay` (breaks the
+    obs -> replay -> fabric -> fleet -> obs import cycle)."""
+    if name in _REPLAY_NAMES:
+        from repro.obs import replay as _replay
+        return getattr(_replay, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 class Observability:
@@ -60,4 +79,9 @@ __all__ = [
     # health
     "HealthMonitor", "HealthReport", "NodeHealth",
     "HEALTH_STATES", "HEALTH_OK", "HEALTH_DEGRADED", "HEALTH_SUSPECT",
+    # flight recorder / replay
+    "FlightRecorder", "FlightScope", "FLIGHT_SCHEMA_VERSION",
+    "FLIGHT_KINDS", "result_digest",
+    "save_flight", "load_flight", "validate_flight",
+    "ReplayBus", "ReplayError", "ReplayReport", "replay_run",
 ]

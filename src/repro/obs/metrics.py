@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
+import re
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.core import merge as merge_lib
@@ -120,6 +121,34 @@ class MetricsSnapshot:
         ``count``) or None."""
         m = self.metrics.get(name)
         return m if m is not None and m["type"] == "histogram" else None
+
+    def to_prom_text(self) -> str:
+        """The snapshot in Prometheus text exposition format (what
+        ``serve.py --metrics-dump out.prom`` writes): dotted metric
+        names sanitized to underscores, counters/gauges as a single
+        sample, histograms as cumulative ``_bucket{le=...}`` series plus
+        ``_sum`` and ``_count`` — scrape-ready for a pushgateway or a
+        textfile collector."""
+        def sane(name: str) -> str:
+            return re.sub(r"[^a-zA-Z0-9_:]", "_", name)
+
+        lines: List[str] = []
+        for name in sorted(self.metrics):
+            m, pname = self.metrics[name], sane(name)
+            if m["type"] in ("counter", "gauge"):
+                lines.append(f"# TYPE {pname} {m['type']}")
+                lines.append(f"{pname} {m['value']}")
+                continue
+            lines.append(f"# TYPE {pname} histogram")
+            acc = 0
+            for edge, count in zip(m["edges"], m["counts"]):
+                acc += count
+                lines.append(f'{pname}_bucket{{le="{edge}"}} {acc}')
+            acc += m["counts"][-1]
+            lines.append(f'{pname}_bucket{{le="+Inf"}} {acc}')
+            lines.append(f"{pname}_sum {m['sum']}")
+            lines.append(f"{pname}_count {m['count']}")
+        return "\n".join(lines) + "\n"
 
 
 def merge2(a: MetricsSnapshot, b: MetricsSnapshot) -> MetricsSnapshot:

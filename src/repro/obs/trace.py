@@ -55,7 +55,7 @@ _SCHEMA: Dict[str, Tuple[type, ...]] = {
     "name": (str,),
     "kind": (str,),
     "process": (str,),
-    "ticket": (int, type(None)),
+    "ticket": (int, str, type(None)),  # str = lease key (fabric spans)
     "t0_virtual": (float, int),
     "t1_virtual": (float, int, type(None)),
     "t0_wall": (float, int),
@@ -82,7 +82,8 @@ class Span:
     t0_virtual: float
     t0_wall: float
     parent_id: Optional[int] = None
-    ticket: Optional[int] = None
+    #: ticket id, or a lease key (str) for fabric-side adoption spans
+    ticket: Optional[Any] = None
     kind: str = "span"
     t1_virtual: Optional[float] = None
     t1_wall: Optional[float] = None
@@ -134,7 +135,7 @@ class Tracer:
         return time.perf_counter() - self._wall0
 
     def begin(self, name: str, *, t_virtual: float = 0.0,
-              ticket: Optional[int] = None,
+              ticket: Optional[Any] = None,
               parent: Optional[Span] = None, **attrs) -> Span:
         """Open a span.  ``parent`` defaults to the top of the parent
         stack (see :meth:`push`); pass it explicitly to override."""
@@ -163,7 +164,7 @@ class Tracer:
             span.attrs["note"] = note
 
     def event(self, name: str, *, t_virtual: float = 0.0,
-              ticket: Optional[int] = None,
+              ticket: Optional[Any] = None,
               parent: Optional[Span] = None, **attrs) -> Span:
         """Record an instantaneous mark (a zero-duration closed span)."""
         span = self.begin(name, t_virtual=t_virtual, ticket=ticket,
@@ -299,7 +300,9 @@ def chrome_from_records(records: Sequence[Dict[str, Any]]
         t0 = float(rec["t0_virtual"]) * 1e6
         tid = rec["attrs"].get("node")
         if tid is None:
-            tid = rec["ticket"] if rec["ticket"] is not None else 0
+            t = rec["ticket"]
+            # string tickets (lease keys) share one lane; args keep the key
+            tid = t if isinstance(t, int) else (0 if t is None else -1)
         args = dict(rec["attrs"])
         args["status"] = rec["status"]
         if rec["ticket"] is not None:

@@ -858,6 +858,9 @@ class QueryService:
         proxy.subscribe(lambda snap, a=ad: None if snap.final
                         else self._mirror(a, snap))
         self.stats.adopted += len(subs)
+        if self.leases.flight is not None:
+            self.leases.flight.record("lease_adopt", key=key, owner=owner,
+                                      tickets=[s.ticket for s in subs])
         if self.obs is not None:
             self.obs.metrics.counter("lease.adopted").inc(len(subs))
             for sub in subs:
@@ -953,6 +956,10 @@ class QueryService:
         self._adoptions.pop(ad.key, None)
         self.leases.fanout.release(ad.key)
         self.stats.lease_fallbacks += 1
+        if self.leases.flight is not None:
+            self.leases.flight.record(
+                "lease_fallback", key=ad.key, owner=ad.owner,
+                reason=reason, tickets=[s.ticket for s in ad.subs])
         if self.obs is not None:
             self.obs.metrics.counter("lease.fallbacks").inc()
             self.obs.tracer.event("lease_fallback",

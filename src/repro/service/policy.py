@@ -151,6 +151,9 @@ class FailurePolicy:
         self.nodes: Dict[int, NodeState] = {
             n: NodeState(node=n) for n in range(store.n_nodes)}
         self.rereplications = 0
+        # flight-recorder scope (repro.obs.flight.FlightScope); None =
+        # off.  Records transitions, re-replication and decisions.
+        self.flight = None
 
     # --------------------------- transitions -------------------------- #
     def _transition(self, st: NodeState, new: str,
@@ -169,6 +172,9 @@ class FailurePolicy:
             st.rereplicated = False
         if decision is not None:
             decision.transitions.append((st.node, old, new))
+        if self.flight is not None:
+            self.flight.record("policy_transition", node=st.node,
+                               old=old, new=new)
         if self.obs is not None:
             self.obs.tracer.event(
                 "policy_transition",
@@ -203,6 +209,9 @@ class FailurePolicy:
         if applied:
             self.rereplications += 1
             decision.rereplicated.extend(applied)
+            if self.flight is not None:
+                self.flight.record("rereplicate", node=st.node,
+                                   copies=len(applied))
             if self.obs is not None:
                 self.obs.tracer.event(
                     "rereplicate",
@@ -269,6 +278,13 @@ class FailurePolicy:
             elif st.state == POLICY_PROBING:
                 decision.avoid.add(node)
                 decision.probe_quota[node] = cfg.probe_packets
+        if self.flight is not None and (decision.avoid
+                                        or decision.transitions
+                                        or decision.rereplicated):
+            self.flight.record("policy_decide",
+                               avoid=sorted(decision.avoid),
+                               probes=sorted(decision.probe_quota),
+                               speculate=decision.speculate)
         return decision
 
     def observe_window(self, stats) -> None:

@@ -135,6 +135,9 @@ class QueryScheduler:
         #: dispatch (zero local I/O), so it costs ~0 against window
         #: budgets — adopted work never crowds out real scans
         self.leases = None
+        #: flight-recorder scope (repro.obs.flight.FlightScope); None =
+        #: off.  Records each dispatch window's ticket composition.
+        self.flight = None
         self.max_pending_per_tenant = max_pending_per_tenant
         self.max_pending_total = max_pending_total
         self.cost_budget_per_tenant = cost_budget_per_tenant
@@ -322,6 +325,11 @@ class QueryScheduler:
         for tenant in [t for t, q in self._pending.items() if not q]:
             del self._pending[tenant]
             self._cost.pop(tenant, None)
+        if self.flight is not None and out:
+            self.flight.record("window",
+                               tickets=[s.ticket for s in out],
+                               tenants=sorted({s.tenant for s in out}),
+                               group=group, max_batch=max_batch)
         return out
 
     @staticmethod

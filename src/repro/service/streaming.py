@@ -254,15 +254,12 @@ class WindowStreamPublisher:
                             stream.dropped - d0)
                     # lease-export streams carry their string lease key
                     # as ticket_id; the span schema types ticket as
-                    # int|None, so the key rides as an attribute instead
-                    tid = stream.ticket_id
+                    # int|str|None, so the key is stamped directly
                     obs.tracer.event(
                         "stream_partial",
                         t_virtual=obs.tracer.virtual_base + self._t,
-                        ticket=tid if isinstance(tid, int) else None,
-                        seq=pp.seq, col=col,
-                        **({} if isinstance(tid, int)
-                           else {"lease": tid}))
+                        ticket=stream.ticket_id,
+                        seq=pp.seq, col=col)
 
     def finish(self, merged: Sequence[merge_lib.QueryResult],
                makespan_s: float) -> None:
