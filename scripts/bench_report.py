@@ -54,6 +54,14 @@ GATES = (
     Gate("BENCH_backend.json", "rows.sim.ratio", LOWER, 0.25),
     Gate("BENCH_backend.json", "rows.spmd.ratio", LOWER, 0.25),
     Gate("BENCH_backend.json", "rows.spmd_ramp.ratio", LOWER, 0.25),
+    # perf pass: mesh-sharded scan scaling (lockstep critical-path
+    # speedup over D=1), the block-shape autotune's margin over the
+    # fixed default, and the winner's achieved memory bandwidth
+    Gate("BENCH_backend.json", "scaling.mesh2.speedup_vs_1", HIGHER, 0.10),
+    Gate("BENCH_backend.json", "scaling.mesh4.speedup_vs_1", HIGHER, 0.10),
+    Gate("BENCH_backend.json", "autotune.speedup_vs_default", HIGHER, 0.05),
+    Gate("BENCH_backend.json", "autotune.roofline.gbytes_per_s",
+         HIGHER, 0.50),
     Gate("BENCH_streaming.json", "rows.single_query.ratio", LOWER, 0.25),
     Gate("BENCH_streaming.json", "rows.batch8.ratio", LOWER, 0.25),
     Gate("BENCH_streaming.json", "rows.batch8_ramp.ratio", LOWER, 0.25),

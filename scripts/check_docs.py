@@ -16,8 +16,9 @@
   ``src/repro/fabric`` and ``src/repro/obs`` must carry a docstring
   (the packages tenants program against stay documented).
 - Contract coverage: every public top-level symbol of
-  ``src/repro/core/backend.py`` must be mentioned by name in
-  ``docs/backends.md``, every public top-level symbol of the
+  ``src/repro/core/backend.py`` and of the event_filter kernel surface
+  (``src/repro/kernels/event_filter/{ops,tune}.py``) must be mentioned
+  by name in ``docs/backends.md``, every public top-level symbol of the
   ``src/repro/obs`` modules in ``docs/observability.md``, and every
   public top-level symbol of ``src/repro/service/policy.py`` in
   ``docs/policy.md`` — adding an API without documenting the contract
@@ -157,10 +158,15 @@ def _contract_doc_errors(sources, doc_rel):
 
 
 def check_backend_contract_doc():
-    """Every public top-level name in core/backend.py must appear in
-    docs/backends.md (see module docstring)."""
-    return _contract_doc_errors([ROOT / "src/repro/core/backend.py"],
-                                "docs/backends.md")
+    """Every public top-level name in core/backend.py — plus the
+    event_filter kernel surface the SPMD backend programs against
+    (ops.py recognizers/kernel entry points, tune.py autotuner) — must
+    appear in docs/backends.md (see module docstring)."""
+    return _contract_doc_errors(
+        [ROOT / "src/repro/core/backend.py",
+         ROOT / "src/repro/kernels/event_filter/ops.py",
+         ROOT / "src/repro/kernels/event_filter/tune.py"],
+        "docs/backends.md")
 
 
 def check_policy_contract_doc():

@@ -26,22 +26,26 @@ calibration, window planning) works identically on both paths:
   prefix snapshots fed to a :class:`~repro.core.merge.MergeAccumulator`
   are bit-identical to ``tree_merge`` of the same prefix, and a window
   executed with the same chunk boundaries on either backend produces
-  bit-identical partial streams and final results.  Time here is
-  WALL-CLOCK (``t_virtual`` carries elapsed seconds; ``JobStats``
-  telemetry feeds ``planner.fit_cost_weights`` exactly as on the
-  simulated path).  With ``use_pallas=True`` the fused ``event_filter``
-  kernel evaluates the plan's boolean targets — including materialized
-  shared fragments — in its epilogue (``interpret=True``), falling back
-  to the jnp fragment-plan walk whenever any target is outside the
-  kernel's conjunctive family.
+  bit-identical partial streams and final results.
+- :class:`ChunkController` — EWMA sizing for ``chunk_events`` from
+  measured per-chunk wall times (the PROOF-rule shape
+  ``WindowController`` uses for window widths, applied to chunks).
+- :class:`PlanSplit` — the mixed-window kernel/jnp split: plan targets
+  inside the fused ``event_filter`` kernel's conjunctive family run as
+  one kernel sub-batch per chunk, the rest through the jnp fragment
+  walk, reassembled in slot order so prefixes stay bit-identical.
 - :func:`make_backend` — string-keyed factory (``"sim"`` / ``"spmd"``)
   the service layer and ``launch/serve.py --backend`` use.
 
 See ``docs/backends.md`` for the full contract (merge-order determinism,
-clock semantics, failure semantics, Pallas fragment fusion).
+clock semantics, failure semantics, Pallas fragment fusion, and the
+performance-tuning knobs: block-shape autotune, adaptive chunk sizing,
+mesh sharding, interpret auto-detect, double buffering).
 """
 from __future__ import annotations
 
+import dataclasses
+import functools
 import time
 from typing import Callable, Dict, List, Optional, Protocol, Tuple, \
     runtime_checkable
@@ -172,6 +176,172 @@ class SimulatedBackend:
             rereplicated=rereplicated)
 
 
+class ChunkController:
+    """EWMA controller for the SPMD scan's ``chunk_events``.
+
+    The streaming sweet spot for chunk sizing mirrors the PROOF packet
+    rule the :class:`~repro.service.frontend.WindowController` applies to
+    window widths: a chunk should take about ``target_s`` seconds of
+    scan, so the proposal is ``clamp(round(rate * target_s), min_chunk,
+    max_chunk)`` where ``rate`` is an EWMA of measured events/second
+    over completed chunks.  Chunks too small drown the scan in per-chunk
+    dispatch/merge overhead; chunks too large starve the partial stream
+    (time-to-first-partial grows linearly in chunk size).
+
+    ``hysteresis`` is the same relative dead-band as the window
+    controller's: the held size only moves when the proposal differs
+    from it by more than ``hysteresis x current``, so a noisy rate
+    estimate doesn't re-chunk every packet (chunk-size churn also churns
+    kernel compilation caches, which are keyed on chunk shape).
+
+    Determinism: the controller is a pure function of the observation
+    sequence — drive it from an injectable clock
+    (``SpmdBackend(clock=...)``) and a fixed seed reproduces the exact
+    chunk boundaries, which is what keeps flight logs byte-identical
+    under adaptive sizing (see ``tests/test_backend.py``)."""
+
+    def __init__(self, *, initial: int = 64, min_chunk: int = 8,
+                 max_chunk: int = 4096, target_s: float = 0.02,
+                 alpha: float = 0.3, hysteresis: float = 0.25):
+        if not (0.0 < alpha <= 1.0):
+            raise ValueError("alpha must be in (0, 1]")
+        if not (1 <= min_chunk <= max_chunk):
+            raise ValueError("need 1 <= min_chunk <= max_chunk")
+        if target_s <= 0:
+            raise ValueError("target_s must be positive")
+        if hysteresis < 0.0:
+            raise ValueError("hysteresis must be >= 0")
+        self.initial = initial
+        self.min_chunk = min_chunk
+        self.max_chunk = max_chunk
+        self.target_s = target_s
+        self.alpha = alpha
+        self.hysteresis = hysteresis
+        self._rate: Optional[float] = None
+        self._held: Optional[int] = None
+
+    def observe(self, events: int, wall_s: float) -> None:
+        """Record one completed chunk: ``events`` swept in ``wall_s``
+        seconds (host-observed, same clock as the backend's)."""
+        if events <= 0 or wall_s <= 0:
+            return
+        rate = events / wall_s
+        self._rate = rate if self._rate is None else (
+            self.alpha * rate + (1 - self.alpha) * self._rate)
+
+    @property
+    def scan_rate(self) -> Optional[float]:
+        """Smoothed events/second, or None before the first chunk."""
+        return self._rate
+
+    def chunk(self) -> int:
+        """Chunk size for the next dispatch: the clamped ``rate *
+        target_s`` proposal, filtered through the hysteresis dead-band."""
+        if self._rate is None:
+            target = max(self.min_chunk,
+                         min(self.max_chunk, self.initial))
+        else:
+            target = max(self.min_chunk,
+                         min(self.max_chunk,
+                             int(round(self._rate * self.target_s))))
+        if self._held is None or \
+                abs(target - self._held) > self.hysteresis * self._held:
+            self._held = target
+        return self._held
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanSplit:
+    """The mixed-window kernel/jnp split of one fragment plan's targets.
+
+    ``kernel_cols`` are the target slots (roots-then-materialized order,
+    exactly :meth:`~repro.core.query.FragmentPlan.targets` order) whose
+    expressions matched the fused ``event_filter`` kernel's conjunctive
+    family (``match_epilogue``); they run as ONE kernel sub-batch per
+    chunk with ``thresholds`` (the ``(4, K_kernel)`` layout of
+    ``batch_kernel_params``) and ``var_idx``.  ``jnp_cols`` hold the
+    out-of-family targets (``jnp_targets`` the matching AST nodes),
+    evaluated through the same shared-memo jnp walk the plan itself
+    uses.  Per chunk the two sub-batches are reassembled in the original
+    slot order, so partial streams and prefixes stay bit-identical to
+    the pure-jnp path regardless of how the split falls."""
+
+    kernel_cols: Tuple[int, ...]
+    jnp_cols: Tuple[int, ...]
+    thresholds: Optional[object]        # jnp (4, len(kernel_cols)) or None
+    var_idx: Tuple[int, ...]
+    jnp_targets: Tuple[object, ...]     # AST nodes, aligned with jnp_cols
+
+    @property
+    def any_kernel(self) -> bool:
+        """True when at least one target runs through the kernel."""
+        return bool(self.kernel_cols)
+
+    @property
+    def full_kernel(self) -> bool:
+        """True when EVERY target runs through the kernel (the
+        all-in-family case the pre-split fusion hook required)."""
+        return bool(self.kernel_cols) and not self.jnp_cols
+
+
+@dataclasses.dataclass
+class _Inflight:
+    """One dispatched-but-unfinalized chunk: lazy device values plus the
+    slot bookkeeping needed to emit its partial in order."""
+    seq: int
+    brick_id: int
+    start: int
+    size: int
+    owner: int
+    span: object = None
+    # "plan" chunks are fully evaluated at dispatch (the eval_plan_slice
+    # primitive materializes internally); "split" chunks hold lazy
+    # kernel/jnp device arrays finalized later.
+    res: Optional[List[merge_lib.QueryResult]] = None
+    mask_dev: object = None             # (size, K_kernel) device array
+    var_dev: object = None              # (size,) device array
+    jnp_masks: Optional[list] = None    # lazy (size,) arrays, jnp_cols order
+    ids: Optional[np.ndarray] = None
+
+
+@functools.lru_cache(maxsize=64)
+def _sharded_kernel_call(n_dev: int, var_idx: Tuple[int, ...],
+                         calib_iters: int, interpret: Optional[bool],
+                         block_e: int, block_t: int):
+    """Build (and cache) the jitted ``shard_map`` kernel call for a
+    ``(1, "scan")`` device mesh: the stacked ``(D, n, ...)`` chunk slabs
+    are sharded over the leading axis (each device owns one sub-chunk —
+    the logical sharding constraint), thresholds replicated, outputs
+    sharded back.  Reuses the exact version-compat idiom proven in
+    ``core/brick_attention.py``."""
+    import jax
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    try:  # jax >= 0.5 exposes shard_map at top level
+        _shard_map = jax.shard_map
+        _sm_nocheck = {"check_vma": False}
+    except AttributeError:  # pragma: no cover - older jax
+        from jax.experimental.shard_map import shard_map as _shard_map
+        _sm_nocheck = {"check_rep": False}
+
+    from repro.kernels.event_filter.kernel import event_filter_batch_pallas
+
+    mesh = Mesh(np.asarray(jax.devices()[:n_dev]), ("scan",))
+
+    def body(sc, tr, ntr, thr):
+        # per-device view: leading axis is this shard's single sub-chunk
+        mask, var = event_filter_batch_pallas(
+            sc[0], tr[0], ntr[0], thr, var_idx=var_idx,
+            calib_iters=calib_iters, interpret=interpret,
+            block_e=block_e, block_t=block_t)
+        return mask[None], var[None]
+
+    fn = _shard_map(body, mesh=mesh,
+                    in_specs=(P("scan"), P("scan"), P("scan"), P(None, None)),
+                    out_specs=(P("scan"), P("scan")), **_sm_nocheck)
+    return jax.jit(fn)
+
+
 class SpmdBackend:
     """The SPMD realization of the contract: a chunked streaming scan
     over the brick shards.
@@ -192,32 +362,66 @@ class SpmdBackend:
     Differences from the simulation, by design:
 
     - **Clock**: ``t_virtual`` on emitted partials and
-      ``JobStats.makespan_s`` are wall-clock seconds since the window
-      started (there is no virtual grid here), so the front-end's
-      ``WindowController`` observes real latencies.
+      ``JobStats.makespan_s`` are seconds on the backend's injectable
+      ``clock`` (wall by default) since the window started.  With
+      ``mesh_devices > 1`` on fewer physical devices, the stamps switch
+      to the **lockstep mesh clock**: chunks are grouped ``mesh_devices``
+      at a time, each group's cost is the *maximum* of its measured
+      sub-chunk walls (all shards execute a group simultaneously on a
+      real mesh), and stamps/makespan accumulate those group maxima —
+      the critical-path time a D-device lockstep mesh would take for the
+      measured per-shard compute.  With enough physical jax devices the
+      group actually executes as one ``shard_map`` call and the clock is
+      plain wall again.
     - **Failures**: shards are resident compute state, not remote disks;
       ``failure_script`` is a simulated-grid concept and a non-empty one
       raises ``ValueError`` rather than being silently ignored.
-    - **Pallas fusion** (``use_pallas=True``): when every plan target —
-      per-query roots AND materialized boolean fragments — matches the
-      fused ``event_filter`` kernel's conjunctive family, the kernel
-      evaluates all of them in its epilogue in one track-streaming pass
-      per chunk (``interpret=True`` off-TPU); otherwise the chunk falls
-      back to the jnp fragment-plan walk.  Either way the per-chunk
+    - **Pallas fusion** (``use_pallas=True``): every plan target —
+      per-query roots AND materialized boolean fragments — that matches
+      the fused ``event_filter`` kernel's conjunctive family runs in the
+      kernel epilogue in one track-streaming pass per chunk; the rest
+      run through the jnp fragment walk on the same resident slice and
+      the two sub-batches are reassembled in slot order
+      (:class:`PlanSplit`), so a single out-of-family target no longer
+      drops the whole window to pure jnp.  ``interpret=None``
+      auto-detects (compiled on TPU/GPU, interpreter on CPU);
+      ``autotune=True`` sweeps ``(block_e, block_t)`` per chunk shape
+      and caches the winner in-process
+      (``repro.kernels.event_filter.tune``).  Either way the per-chunk
       telemetry (``PacketTelemetry``) is recorded, so
       ``planner.fit_cost_weights`` calibrates from SPMD runs too.
+    - **Double buffering** (``double_buffer=True``, the default): chunk
+      ``i+1`` is dispatched before chunk ``i`` is finalized, so host-side
+      ``MergeAccumulator`` prefix merging and partial emission overlap
+      the device compute of the next chunk.  Merge order is unchanged
+      (finalize strictly follows dispatch order).  Disabled automatically
+      in emulated-mesh mode, where per-sub-chunk walls must be measured
+      in isolation for the lockstep clock to be honest.
+    - **Adaptive chunks** (``adaptive_chunks=True``): ``chunk_events``
+      becomes the :class:`ChunkController`'s initial value and
+      subsequent chunks are sized from measured per-chunk walls toward
+      ``chunk_target_s`` seconds each.  Off by default — fixed chunks
+      are what make matched-packetization bit-identity tests possible.
     """
 
     def __init__(self, catalog: MetadataCatalog, store: BrickStore, *,
                  chunk_events: int = 64, packet_ramp: Optional[int] = None,
                  ramp_factor: float = 2.0, use_pallas: bool = False,
-                 interpret: bool = True):
+                 interpret: Optional[bool] = None,
+                 autotune: bool = False,
+                 mesh_devices: int = 1,
+                 adaptive_chunks: bool = False,
+                 chunk_target_s: float = 0.02,
+                 double_buffer: bool = True,
+                 clock: Callable[[], float] = time.perf_counter):
         if chunk_events <= 0:
             raise ValueError("chunk_events must be positive")
         if packet_ramp is not None and packet_ramp <= 0:
             raise ValueError("packet_ramp must be positive")
         if ramp_factor <= 1.0:
             raise ValueError("ramp_factor must be > 1")
+        if mesh_devices < 1:
+            raise ValueError("mesh_devices must be >= 1")
         self.catalog = catalog
         self.store = store
         self.chunk_events = chunk_events
@@ -225,6 +429,12 @@ class SpmdBackend:
         self.ramp_factor = ramp_factor
         self.use_pallas = use_pallas
         self.interpret = interpret
+        self.autotune = autotune
+        self.mesh_devices = mesh_devices
+        self.adaptive_chunks = adaptive_chunks
+        self.chunk_target_s = chunk_target_s
+        self.double_buffer = double_buffer
+        self.clock = clock
         self.cost_weights = None  # installed by the service after refits
         #: shards are resident compute state, not killable virtual nodes
         self.supports_failure_injection = False
@@ -233,56 +443,216 @@ class SpmdBackend:
         self.supports_routing_policy = False
         # observability plane (repro.obs.Observability); None = disabled
         self.obs = None
+        #: most recent autotune verdict (TunedShape) — bench reporting
+        self.last_autotune = None
+        # resolved lazily on first run (jax import deferred until needed)
+        self._mesh_real: Optional[bool] = None
 
     # ------------------------------------------------------------------ #
-    def _chunk_size(self, seq: int, remaining: int,
-                    ramp: Optional[int]) -> int:
-        """Size of chunk ``seq``: the configured chunk, capped early by
-        the shared geometric stream ramp (``core/packets.py``), clipped
-        to the shard remainder."""
-        size = self.chunk_events
+    def _chunk_size(self, seq: int, remaining: int, ramp: Optional[int],
+                    controller: Optional[ChunkController]) -> int:
+        """Size of chunk ``seq``: the configured chunk (or the adaptive
+        controller's proposal), capped early by the shared geometric
+        stream ramp (``core/packets.py``), clipped to the shard
+        remainder."""
+        size = controller.chunk() if controller is not None \
+            else self.chunk_events
         if ramp is not None:
             cap = ramp_cap(seq, ramp, self.ramp_factor)
             if cap < size:
                 size = max(1, int(cap))
         return min(size, remaining)
 
-    def _fuse_plan(self, plan: query_lib.FragmentPlan):
-        """Kernel-epilogue fusion: map EVERY plan target into the fused
-        ``event_filter`` kernel's threshold encoding, or None when any
-        target is outside the conjunctive family (chunks then take the
-        jnp fragment-plan walk)."""
+    def _split_plan(self, plan: query_lib.FragmentPlan) -> PlanSplit:
+        """Partition the plan's targets into the kernel sub-batch
+        (targets inside the fused kernel's conjunctive family) and the
+        jnp sub-batch (everything else) — see :class:`PlanSplit`.  With
+        ``use_pallas=False`` every target lands in the jnp sub-batch."""
+        targets = plan.targets()
         if not self.use_pallas:
-            return None
+            return PlanSplit(kernel_cols=(), jnp_cols=tuple(
+                range(len(targets))), thresholds=None, var_idx=(),
+                jnp_targets=tuple(targets))
         from repro.kernels.event_filter import ops as ef_ops
         params = [ef_ops.match_epilogue(t, self.store.schema)
-                  for t in plan.targets()]
-        if any(p is None for p in params):
-            return None
-        return ef_ops.batch_kernel_params(params)
+                  for t in targets]
+        kcols = tuple(i for i, p in enumerate(params) if p is not None)
+        jcols = tuple(i for i, p in enumerate(params) if p is None)
+        thresholds, var_idx = (None, ())
+        if kcols:
+            thresholds, var_idx = ef_ops.batch_kernel_params(
+                [params[i] for i in kcols])
+        return PlanSplit(kernel_cols=kcols, jnp_cols=jcols,
+                         thresholds=thresholds, var_idx=var_idx,
+                         jnp_targets=tuple(targets[i] for i in jcols))
 
-    def _eval_chunk(self, plan: query_lib.FragmentPlan, fused,
-                    brick_id: int, start: int, size: int,
-                    calib_iters: int) -> List[merge_lib.QueryResult]:
-        """One chunk -> one partial per plan target (kernel epilogue when
-        fused, shared jnp primitive otherwise)."""
-        if fused is None:
-            return eval_plan_slice(self.store, plan, brick_id, start, size,
-                                   calib_iters)
+    def _fuse_plan(self, plan: query_lib.FragmentPlan):
+        """Back-compat fusion hook: the batched kernel params when EVERY
+        plan target is in-family, else None.  Mixed windows no longer
+        fall back wholesale — see :meth:`_split_plan` — but this remains
+        the cheap "fully fused?" probe tests and tools use."""
+        split = self._split_plan(plan)
+        return (split.thresholds, split.var_idx) if split.full_kernel \
+            else None
+
+    # ------------------------------------------------------------------ #
+    def _mesh_is_real(self) -> bool:
+        """True when jax actually has ``mesh_devices`` devices (the
+        ``shard_map`` fast path); False emulates the mesh with lockstep
+        critical-path accounting.  Resolved once — jax pins its device
+        count at first init."""
+        if self._mesh_real is None:
+            if self.mesh_devices <= 1:
+                self._mesh_real = False
+            else:
+                import jax
+                self._mesh_real = len(jax.devices()) >= self.mesh_devices
+        return self._mesh_real
+
+    def _maybe_autotune(self, split: PlanSplit, brick_id: int,
+                        calib_iters: int) -> Tuple[int, int]:
+        """Resolve the kernel block shapes for this window: the in-process
+        autotune winner for the (chunk shape x K x calib) class when
+        ``autotune=True``, the fixed default otherwise."""
+        from repro.kernels.event_filter import tune as ef_tune
+        if not (self.autotune and split.any_kernel):
+            return ef_tune.DEFAULT_SHAPE
+        batch = self.store.bricks[brick_id]
+        n = min(self.chunk_events, batch["scalars"].shape[0])
+        import jax.numpy as jnp
+        tuned = ef_tune.autotune_block_shapes(
+            jnp.asarray(batch["scalars"][:n]),
+            jnp.asarray(batch["tracks"][:n]),
+            jnp.asarray(batch["n_tracks"][:n]),
+            split.thresholds, var_idx=split.var_idx,
+            calib_iters=calib_iters, interpret=self.interpret)
+        self.last_autotune = tuned
+        if self.obs is not None:
+            self.obs.metrics.gauge("spmd.autotune.block_e").set(
+                tuned.block_e)
+            self.obs.metrics.gauge("spmd.autotune.block_t").set(
+                tuned.block_t)
+        return tuned.block_e, tuned.block_t
+
+    # ------------------------------------------------------------------ #
+    def _dispatch_chunk(self, plan: query_lib.FragmentPlan,
+                        split: PlanSplit, seq: int, brick_id: int,
+                        start: int, size: int, owner: int,
+                        calib_iters: int,
+                        block_shapes: Tuple[int, int]) -> _Inflight:
+        """Dispatch one chunk: kernel sub-batch + jnp sub-batch launched
+        asynchronously (device values stay lazy), or — for windows with
+        no kernel targets — the shared ``eval_plan_slice`` primitive
+        evaluated in place."""
+        infl = _Inflight(seq=seq, brick_id=brick_id, start=start,
+                         size=size, owner=owner)
+        if not split.any_kernel:
+            infl.res = eval_plan_slice(self.store, plan, brick_id, start,
+                                       size, calib_iters)
+            return infl
         import jax.numpy as jnp
         from repro.kernels.event_filter import ops as ef_ops
-        thresholds, var_idx = fused
         batch = self.store.bricks[brick_id]
         sl = {k: v[start:start + size] for k, v in batch.items()}
-        mask, var = ef_ops.event_filter_batch(
+        infl.ids = np.asarray(sl["event_id"])
+        be, bt = block_shapes
+        infl.mask_dev, infl.var_dev = ef_ops.event_filter_batch(
             jnp.asarray(sl["scalars"]), jnp.asarray(sl["tracks"]),
-            jnp.asarray(sl["n_tracks"]), thresholds, var_idx=var_idx,
-            calib_iters=calib_iters, interpret=self.interpret)
-        mask = np.asarray(mask)            # (N, K) — one column per target
-        var = np.asarray(var)
-        ids = np.asarray(sl["event_id"])
-        return [merge_lib.from_mask(mask[:, k], var, ids)
-                for k in range(mask.shape[1])]
+            jnp.asarray(sl["n_tracks"]), split.thresholds,
+            var_idx=split.var_idx, calib_iters=calib_iters,
+            interpret=self.interpret, block_e=be, block_t=bt)
+        if split.jnp_cols:
+            # out-of-family targets: the same shared-memo jnp walk the
+            # plan runs, restricted to the jnp sub-batch (values are
+            # memo-independent, so restricting the memo cannot change
+            # bits — only sharing)
+            slj = {k: jnp.asarray(v) for k, v in sl.items()}
+            if calib_iters:
+                slj = dict(slj, tracks=query_lib.calibrate(slj,
+                                                           calib_iters))
+            memo: Optional[dict] = {} if plan.shared else None
+            infl.jnp_masks = [
+                query_lib.eval_node(t, slj, self.store.schema, False, memo)
+                for t in split.jnp_targets]
+        return infl
+
+    def _dispatch_group(self, plan: query_lib.FragmentPlan,
+                        split: PlanSplit,
+                        slots: List[Tuple[int, int, int]], brick_id: int,
+                        owner: int, calib_iters: int,
+                        block_shapes: Tuple[int, int]) -> List[_Inflight]:
+        """Dispatch one mesh group — up to ``mesh_devices`` chunk slots
+        of one brick — as a single ``shard_map`` kernel call over the
+        stacked, zero-padded ``(D, n_max, ...)`` slabs (each device owns
+        one sub-chunk).  Partials are still sliced back out per slot, so
+        packetization — and therefore prefix bit-identity — is unchanged
+        by the group width.  jnp sub-batch targets (mixed windows) run
+        per slot on the host path as usual."""
+        import jax.numpy as jnp
+        from repro.kernels import resolve_interpret
+        batch = self.store.bricks[brick_id]
+        n_max = max(size for _, _, size in slots)
+        d = self.mesh_devices
+
+        def slab(key, start, size):
+            a = np.asarray(batch[key][start:start + size])
+            if size < n_max:
+                pad = [(0, n_max - size)] + [(0, 0)] * (a.ndim - 1)
+                a = np.pad(a, pad)
+            return a
+
+        def stacked(key):
+            rows = [slab(key, start, size) for _, start, size in slots]
+            while len(rows) < d:    # tail group: replicate a dummy slab
+                rows.append(np.zeros_like(rows[0]))
+            return jnp.asarray(np.stack(rows))
+
+        be, bt = block_shapes
+        fn = _sharded_kernel_call(d, split.var_idx, calib_iters,
+                                  resolve_interpret(self.interpret),
+                                  be, bt)
+        gmask, gvar = fn(stacked("scalars"), stacked("tracks"),
+                         stacked("n_tracks"), split.thresholds)
+        out: List[_Inflight] = []
+        for i, (seq, start, size) in enumerate(slots):
+            infl = _Inflight(seq=seq, brick_id=brick_id, start=start,
+                             size=size, owner=owner)
+            infl.ids = np.asarray(batch["event_id"][start:start + size])
+            infl.mask_dev = gmask[i, :size]
+            infl.var_dev = gvar[i, :size]
+            if split.jnp_cols:
+                sl = {k: v[start:start + size] for k, v in batch.items()}
+                slj = {k: jnp.asarray(v) for k, v in sl.items()}
+                if calib_iters:
+                    slj = dict(slj, tracks=query_lib.calibrate(
+                        slj, calib_iters))
+                memo: Optional[dict] = {} if plan.shared else None
+                infl.jnp_masks = [
+                    query_lib.eval_node(t, slj, self.store.schema, False,
+                                        memo)
+                    for t in split.jnp_targets]
+            out.append(infl)
+        return out
+
+    def _finalize_chunk(self, infl: _Inflight,
+                        split: PlanSplit) -> List[merge_lib.QueryResult]:
+        """Force one dispatched chunk and reassemble its partials in the
+        plan's slot order (kernel and jnp sub-batches interleaved back to
+        their original target slots)."""
+        if infl.res is not None:
+            return infl.res
+        mask = np.asarray(infl.mask_dev)   # (size, K_kernel)
+        var = np.asarray(infl.var_dev)
+        n_targets = len(split.kernel_cols) + len(split.jnp_cols)
+        out: List[Optional[merge_lib.QueryResult]] = [None] * n_targets
+        for j, col in enumerate(split.kernel_cols):
+            out[col] = merge_lib.from_mask(mask[:, j], var, infl.ids)
+        if infl.jnp_masks is not None:
+            for j, col in enumerate(split.jnp_cols):
+                out[col] = merge_lib.from_mask(
+                    np.asarray(infl.jnp_masks[j]), var, infl.ids)
+        infl.res = out
+        return out
 
     # ------------------------------------------------------------------ #
     def run_batch(self, job_ids: List[int], *,
@@ -303,59 +673,163 @@ class SpmdBackend:
         rec, plan = prepare_window(self.catalog, job_ids, plan)
 
         obs = self.obs
+        clock = self.clock
         stats = JobStats(n_queries=len(job_ids))
         plan_aggs = query_lib.unique_aggregates(plan.targets())
-        fused = self._fuse_plan(plan)
+        split = self._split_plan(plan)
         ramp = packet_ramp if packet_ramp is not None else self.packet_ramp
+        controller = (ChunkController(initial=self.chunk_events,
+                                      target_s=self.chunk_target_s)
+                      if self.adaptive_chunks else None)
+        bricks = sorted(rec.bricks)
+        block_shapes = (self._maybe_autotune(split, bricks[0],
+                                             rec.calib_iters)
+                        if bricks and self.use_pallas
+                        else (128, 512))
+        mesh = max(1, self.mesh_devices)
+        lockstep = mesh > 1 and not self._mesh_is_real()
+        # with enough physical devices AND kernel targets, whole groups
+        # execute as one shard_map call; otherwise (pure-jnp window on a
+        # real mesh) the scan degrades to the sequential stream path
+        mesh_fast = mesh > 1 and not lockstep and split.any_kernel
+        # double buffering applies only where dispatch is actually lazy
+        # (kernel sub-batches): a pure-jnp chunk evaluates eagerly at
+        # dispatch, so holding it back would just delay its partial by a
+        # whole chunk; and lockstep emulation needs isolated walls
+        buffered = (self.double_buffer and split.any_kernel
+                    and not lockstep and not mesh_fast)
+
+        if obs is not None:
+            obs.metrics.gauge("spmd.mesh_devices").set(mesh)
+
         results: List[List[merge_lib.QueryResult]] = []
-        t_start = time.perf_counter()
+        t_start = clock()
+        t_lockstep = 0.0    # critical-path seconds (emulated mesh clock)
+        t_prev = t_start    # previous finalize completion (chunk walls)
+        group_walls: List[float] = []
+
+        def stamp() -> float:
+            return t_lockstep if lockstep else clock() - t_start
+
+        def emit(infl: _Inflight, wall: float) -> None:
+            """Record one finalized chunk: telemetry, obs, stats, and the
+            in-order partial emission."""
+            res = infl.res
+            stats.packet_telemetry.append(PacketTelemetry(
+                size=infl.size, calib_iters=rec.calib_iters,
+                n_aggregates=plan_aggs, wall_s=wall,
+                n_targets=len(plan.targets()), node=infl.owner))
+            if obs is not None:
+                if infl.span is not None:
+                    obs.tracer.end(
+                        infl.span,
+                        t_virtual=obs.tracer.virtual_base + stamp())
+                obs.metrics.counter("packet.count").inc()
+                obs.metrics.histogram("packet.latency_s").observe(wall)
+                obs.metrics.histogram("packet.events").observe(infl.size)
+                obs.metrics.gauge("spmd.chunk_events").set(infl.size)
+                if split.any_kernel:
+                    obs.metrics.counter("spmd.kernel_events").inc(
+                        infl.size)
+                obs.health.observe_packet(infl.owner, infl.size, wall)
+            results.append(res)
+            stats.events_scanned += infl.size
+            if split.any_kernel:
+                stats.kernel_events += infl.size
+            stats.fragment_evals += plan.evals_per_batch
+            stats.fragment_evals_unshared += plan.unshared_evals
+            stats.packets += 1
+            stats.per_node_busy[infl.owner] = \
+                stats.per_node_busy.get(infl.owner, 0.0) + wall
+            if controller is not None:
+                controller.observe(infl.size, wall)
+            if on_partial is not None:
+                on_partial(PacketPartial(
+                    seq=infl.seq, brick_id=infl.brick_id, start=infl.start,
+                    size=infl.size, node=infl.owner, t_virtual=stamp(),
+                    failures=0, partials=res))
+
+        pending: Optional[_Inflight] = None
+
+        def finalize(infl: _Inflight) -> None:
+            nonlocal t_prev
+            self._finalize_chunk(infl, split)
+            now = clock()
+            emit(infl, max(now - t_prev, 1e-9))
+            t_prev = now
+
         seq = 0
-        for bid in sorted(rec.bricks):
+        for bid in bricks:
             n = self.store.specs[bid].n_events
             owner = self.store.specs[bid].node
             start = 0
             while start < n:
-                size = self._chunk_size(seq, n - start, ramp)
-                pkt_span = None
+                if lockstep:
+                    # one lockstep group: up to `mesh` sub-chunks of this
+                    # brick, each measured in isolation; the group costs
+                    # the MAX of its walls on the mesh clock
+                    group: List[_Inflight] = []
+                    group_walls.clear()
+                    while len(group) < mesh and start < n:
+                        size = self._chunk_size(seq, n - start, ramp,
+                                                controller)
+                        t0 = clock()
+                        infl = self._dispatch_chunk(
+                            plan, split, seq, bid, start, size, owner,
+                            rec.calib_iters, block_shapes)
+                        self._finalize_chunk(infl, split)
+                        group_walls.append(max(clock() - t0, 1e-9))
+                        group.append(infl)
+                        seq += 1
+                        start += size
+                    t_lockstep += max(group_walls)
+                    for infl, wall in zip(group, group_walls):
+                        emit(infl, wall)
+                    continue
+                if mesh_fast:
+                    # one shard_map call per group of up to `mesh` slots;
+                    # partials still per slot, in order
+                    slots: List[Tuple[int, int, int]] = []
+                    while len(slots) < mesh and start < n:
+                        size = self._chunk_size(seq, n - start, ramp,
+                                                controller)
+                        slots.append((seq, start, size))
+                        seq += 1
+                        start += size
+                    t0 = clock()
+                    infls = self._dispatch_group(plan, split, slots, bid,
+                                                 owner, rec.calib_iters,
+                                                 block_shapes)
+                    for infl in infls:
+                        self._finalize_chunk(infl, split)
+                    per = max(clock() - t0, 1e-9) / len(slots)
+                    for infl in infls:
+                        emit(infl, per)
+                    continue
+                size = self._chunk_size(seq, n - start, ramp, controller)
+                span = None
                 if obs is not None:
-                    pkt_span = obs.tracer.begin(
+                    span = obs.tracer.begin(
                         "packet",
-                        t_virtual=(obs.tracer.virtual_base
-                                   + time.perf_counter() - t_start),
+                        t_virtual=obs.tracer.virtual_base + stamp(),
                         seq=seq, brick=bid, start=start, size=size,
                         node=owner)
-                t0 = time.perf_counter()
-                res = self._eval_chunk(plan, fused, bid, start, size,
-                                       rec.calib_iters)
-                wall = time.perf_counter() - t0
-                stats.packet_telemetry.append(PacketTelemetry(
-                    size=size, calib_iters=rec.calib_iters,
-                    n_aggregates=plan_aggs, wall_s=wall,
-                    n_targets=len(plan.targets()), node=owner))
-                if obs is not None:
-                    obs.tracer.end(
-                        pkt_span,
-                        t_virtual=(obs.tracer.virtual_base
-                                   + time.perf_counter() - t_start))
-                    obs.metrics.counter("packet.count").inc()
-                    obs.metrics.histogram("packet.latency_s").observe(wall)
-                    obs.metrics.histogram("packet.events").observe(size)
-                    obs.health.observe_packet(owner, size, wall)
-                results.append(res)
-                stats.events_scanned += size
-                stats.fragment_evals += plan.evals_per_batch
-                stats.fragment_evals_unshared += plan.unshared_evals
-                stats.packets += 1
-                stats.per_node_busy[owner] = \
-                    stats.per_node_busy.get(owner, 0.0) + wall
-                if on_partial is not None:
-                    on_partial(PacketPartial(
-                        seq=seq, brick_id=bid, start=start, size=size,
-                        node=owner,
-                        t_virtual=time.perf_counter() - t_start,
-                        failures=0, partials=res))
+                infl = self._dispatch_chunk(plan, split, seq, bid, start,
+                                            size, owner, rec.calib_iters,
+                                            block_shapes)
+                infl.span = span
+                if not buffered:
+                    finalize(infl)
+                else:
+                    if pending is not None:
+                        # chunk i finalizes (host merge + stream emit)
+                        # while chunk i+1's device compute is in flight
+                        finalize(pending)
+                    pending = infl
                 seq += 1
                 start += size
+        if pending is not None:
+            finalize(pending)
 
         k = len(job_ids)
         merged = (merge_lib.merge_batch(results) if results
@@ -364,7 +838,8 @@ class SpmdBackend:
         stats.fragment_results = dict(
             zip(plan.materialize_keys(), merged[k:]))
         merged = merged[:k]
-        stats.makespan_s = time.perf_counter() - t_start
+        stats.makespan_s = t_lockstep if lockstep \
+            else clock() - t_start
 
         end = time.time()
         for jid, m in zip(job_ids, merged):

@@ -133,6 +133,9 @@ class JobStats:
     # copy streams — data movement is never free)
     rereplication_transfer_s: float = 0.0
     events_scanned: int = 0   # brick events swept (shared across a batch)
+    # events whose chunk ran (at least partly) through the fused Pallas
+    # kernel sub-batch — 0 on the simulation and on pure-jnp SPMD windows
+    kernel_events: int = 0
     n_queries: int = 1        # queries amortized over that sweep
     # fragment accounting (common-subexpression factoring across the batch)
     fragment_evals: int = 0           # unique-fragment evaluations performed

@@ -95,6 +95,12 @@ class Fleet:
         (default) or ``"spmd"`` — passed by name so each front-end
         constructs its own backend over its own catalogue view (see
         ``core/backend.py``).
+    backend_kwargs:
+        Tuning kwargs forwarded to every front-end's backend
+        constructor — the SPMD performance knobs (``use_pallas``,
+        ``interpret``, ``chunk_events``, ``adaptive_chunks``,
+        ``mesh_devices``, ``autotune``, ``double_buffer``; see
+        ``docs/backends.md``, "Performance tuning").
     gossip_fanout:
         Digest push targets per round; ``None`` (default) adapts to
         fleet size (``max(1, ceil(log2(n)))``).  The propagation bound
@@ -162,6 +168,7 @@ class Fleet:
                  l2_capacity: int = 4096,
                  registry: Optional[FragmentRegistry] = None,
                  backend: str = "sim",
+                 backend_kwargs: Optional[dict] = None,
                  gossip_fanout: Optional[int] = None,
                  scheduler_factory: Optional[
                      Callable[[], QueryScheduler]] = None,
@@ -220,6 +227,10 @@ class Fleet:
         self._rr = 0
         kwargs = dict(service_kwargs or {})
         kwargs.setdefault("backend", backend)
+        if backend_kwargs:
+            # per-frontend backends share the tuning knobs (autotune
+            # winners are cached process-wide, so frontends share sweeps)
+            kwargs.setdefault("backend_kwargs", dict(backend_kwargs))
         for i in range(n_frontends):
             node_id = f"fe{i}"
             catalog = MetadataCatalog(store.n_nodes)

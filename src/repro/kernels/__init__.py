@@ -1,3 +1,66 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+"""Shared kernel-package utilities: the ONE `interpret` auto-detect.
+
+Every kernel package here (``event_filter``, ``flash_attention``,
+``mlstm_scan``, ``rglru_scan``) wraps ``pl.pallas_call`` whose
+``interpret`` flag decides between the compiled Mosaic/Triton lowering
+(TPU/GPU) and the pure-Python interpreter (the only thing that runs the
+kernel bodies on CPU).  Historically every wrapper defaulted to
+``interpret=True`` — safe everywhere, but it silently left compiled
+execution on the table on real accelerators.  The unified story:
+
+- ``interpret=None`` (every wrapper's new default) means **auto**:
+  compiled on TPU/GPU, interpret only as the CPU fallback.
+- :func:`default_interpret` is the single auto-detect; the
+  ``REPRO_INTERPRET`` environment variable (``auto`` / ``1`` /
+  ``interpret`` / ``0`` / ``compiled``) overrides it, which is what the
+  CI ``kernel-matrix`` job uses to force both modes on one host.
+- :func:`resolve_interpret` maps a wrapper's ``bool | None`` flag to the
+  concrete bool handed to ``pl.pallas_call``.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+#: Environment override consumed by :func:`default_interpret`.
+INTERPRET_ENV = "REPRO_INTERPRET"
+
+#: jax backends with a real Pallas lowering (everything else interprets).
+COMPILED_BACKENDS = ("tpu", "gpu", "cuda", "rocm")
+
+
+@functools.lru_cache(maxsize=None)
+def _backend_interprets() -> bool:
+    """True when the active jax backend has no compiled Pallas lowering
+    (CPU — the interpreter is the fallback).  Cached: the backend is
+    pinned at first jax init and never changes within a process."""
+    import jax
+    return jax.default_backend() not in COMPILED_BACKENDS
+
+
+def default_interpret() -> bool:
+    """The auto-detected ``interpret`` flag: False (compiled) on TPU/GPU,
+    True (interpreter) on CPU.  ``REPRO_INTERPRET`` forces a mode —
+    ``1``/``interpret``/``true`` or ``0``/``compiled``/``false`` — while
+    ``auto``/unset keeps the backend probe (the CI kernel-matrix knob)."""
+    forced = os.environ.get(INTERPRET_ENV, "auto").strip().lower()
+    if forced in ("1", "interpret", "true", "yes"):
+        return True
+    if forced in ("0", "compiled", "false", "no"):
+        return False
+    if forced not in ("auto", ""):
+        raise ValueError(
+            f"unrecognized {INTERPRET_ENV}={forced!r}: use 'interpret', "
+            "'compiled', or 'auto'")
+    return _backend_interprets()
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Map a kernel wrapper's ``interpret: bool | None`` to the concrete
+    bool for ``pl.pallas_call``: ``None`` means :func:`default_interpret`
+    (auto), an explicit bool is honoured verbatim."""
+    return default_interpret() if interpret is None else bool(interpret)

@@ -15,6 +15,14 @@ BlockSpecs (VMEM):
   tracks   (BE, BT, V)      — both axes blocked (the streamed operand)
   n_tracks (BE, 1)
   outputs: mask (BE,), var (BE,), cnt (BE,), ssum (BE,)
+
+Non-divisible grids are explicit here, not an accident of ``pl.cdiv``
+padding: both kernel bodies mask the tail tile on BOTH axes (track
+columns past ``t_total`` never reach the accumulators even when an
+``n_tracks`` row is garbage in the padded region; event rows past
+``n_total`` finalize to zeros instead of whatever the pad holds), and the
+wrappers validate shapes up front — a zero-sized operand raises a clear
+``ValueError`` instead of a Pallas trace error.
 """
 from __future__ import annotations
 
@@ -24,10 +32,64 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import resolve_interpret
+
+
+def _validate(scalars, tracks, n_tracks, thresholds, *, batch: bool,
+              block_e: int, block_t: int):
+    """Shape/size validation shared by both wrappers (see module doc):
+    reject zero-sized operands and malformed thresholds BEFORE tracing,
+    with errors that name the offending operand."""
+    if scalars.ndim != 2 or tracks.ndim != 3 or n_tracks.ndim != 1:
+        raise ValueError(
+            f"event_filter expects scalars (N,S), tracks (N,T,V), "
+            f"n_tracks (N,); got {scalars.shape}, {tracks.shape}, "
+            f"{n_tracks.shape}")
+    n, _ = scalars.shape
+    nt, t, v = tracks.shape
+    if n == 0 or t == 0 or v == 0:
+        raise ValueError(
+            f"event_filter got a zero-sized operand (scalars {scalars.shape}, "
+            f"tracks {tracks.shape}): empty chunks must be skipped by the "
+            f"caller, the kernel has no zero-width grid")
+    if nt != n or n_tracks.shape[0] != n:
+        raise ValueError(
+            f"event axis mismatch: scalars N={n}, tracks N={nt}, "
+            f"n_tracks N={n_tracks.shape[0]}")
+    if block_e <= 0 or block_t <= 0:
+        raise ValueError(
+            f"block shapes must be positive, got block_e={block_e}, "
+            f"block_t={block_t}")
+    if batch:
+        if thresholds.ndim != 2 or thresholds.shape[0] != 4 \
+                or thresholds.shape[1] == 0:
+            raise ValueError(
+                f"batched thresholds must be (4, K) with K >= 1, got "
+                f"{thresholds.shape}")
+    elif thresholds.shape != (4,):
+        raise ValueError(f"thresholds must be (4,), got {thresholds.shape}")
+
+
+def _tile_masks(ntr_ref, shape, *, block_e: int, block_t: int,
+                n_total: int, t_total: int):
+    """Explicit tail-tile masking for a (BE, BT) tile: ``valid`` is the
+    per-track validity (global track index < n_tracks AND < t_total — the
+    second clause is what keeps a garbage ``n_tracks`` pad row from
+    pulling padded track columns into the accumulators) and ``valid_e``
+    the per-event validity (global event index < n_total)."""
+    tt = pl.program_id(1)
+    eb = pl.program_id(0)
+    tidx = tt * block_t + jax.lax.broadcasted_iota(jnp.int32, shape, 1)
+    eidx = eb * block_e + jax.lax.broadcasted_iota(jnp.int32, shape, 0)
+    valid = (tidx < ntr_ref[...]) & (tidx < t_total) & (eidx < n_total)
+    valid_e = (eidx[:, 0] < n_total)
+    return valid, valid_e
+
 
 def _kernel(scalars_ref, tracks_ref, ntr_ref, thr_ref,
             mask_ref, var_ref, cnt_ref, sum_ref, *,
-            calib_iters: int, var_idx: int, block_t: int):
+            calib_iters: int, var_idx: int, block_e: int, block_t: int,
+            n_total: int, t_total: int):
     tt = pl.program_id(1)
     n_tiles = pl.num_programs(1)
 
@@ -46,10 +108,9 @@ def _kernel(scalars_ref, tracks_ref, ntr_ref, thr_ref,
     trk = jax.lax.fori_loop(0, calib_iters, body, trk)
     pt = trk[..., 0]  # (BE, BT)
 
-    # validity: global track index < n_tracks
-    t0 = tt * block_t
-    tidx = t0 + jax.lax.broadcasted_iota(jnp.int32, pt.shape, 1)
-    valid = tidx < ntr_ref[...]  # (BE, BT) via (BE,1) broadcast
+    valid, valid_e = _tile_masks(ntr_ref, pt.shape, block_e=block_e,
+                                 block_t=block_t, n_total=n_total,
+                                 t_total=t_total)
 
     pt_thresh = thr_ref[1]
     cnt_ref[...] += jnp.sum(
@@ -63,13 +124,14 @@ def _kernel(scalars_ref, tracks_ref, ntr_ref, thr_ref,
         sc = scalars_ref[...].astype(jnp.float32)  # (BE, n_scalars)
         mask = (sc[:, var_idx] > scalar_thresh) & (cnt_ref[...] >= min_count)
         mask = mask & jnp.where(sum_cap > 0, sum_ref[...] < sum_cap, True)
-        mask_ref[...] = mask.astype(jnp.float32)
-        var_ref[...] = sc[:, 0]
+        mask_ref[...] = (mask & valid_e).astype(jnp.float32)
+        var_ref[...] = jnp.where(valid_e, sc[:, 0], 0.0)
 
 
 def _batch_kernel(scalars_ref, tracks_ref, ntr_ref, thr_ref,
                   mask_ref, var_ref, cnt_ref, sum_ref, *,
-                  calib_iters: int, var_idx: tuple, block_t: int):
+                  calib_iters: int, var_idx: tuple, block_e: int,
+                  block_t: int, n_total: int, t_total: int):
     """K-query shared scan: tracks stream HBM->VMEM once; the per-query
     track counts (cnt is (BE, K)) and masks amortize that single read
     across the whole coalesced batch.  sum(pt) is query-independent, so
@@ -92,9 +154,9 @@ def _batch_kernel(scalars_ref, tracks_ref, ntr_ref, thr_ref,
     trk = jax.lax.fori_loop(0, calib_iters, body, trk)
     pt = trk[..., 0]  # (BE, BT)
 
-    t0 = tt * block_t
-    tidx = t0 + jax.lax.broadcasted_iota(jnp.int32, pt.shape, 1)
-    valid = tidx < ntr_ref[...]  # (BE, BT)
+    valid, valid_e = _tile_masks(ntr_ref, pt.shape, block_e=block_e,
+                                 block_t=block_t, n_total=n_total,
+                                 t_total=t_total)
 
     pt_thr = thr_ref[1, :]       # (K,)
     hit = valid[..., None] & (pt[..., None] > pt_thr)  # (BE, BT, K)
@@ -109,17 +171,21 @@ def _batch_kernel(scalars_ref, tracks_ref, ntr_ref, thr_ref,
         mask = (sc_sel > thr_ref[0, :]) & (cnt_ref[...] >= thr_ref[2, :])
         mask = mask & jnp.where(thr_ref[3, :] > 0,
                                 sum_ref[...][:, None] < thr_ref[3, :], True)
-        mask_ref[...] = mask.astype(jnp.float32)
-        var_ref[...] = sc[:, 0]
+        mask_ref[...] = (mask & valid_e[:, None]).astype(jnp.float32)
+        var_ref[...] = jnp.where(valid_e, sc[:, 0], 0.0)
 
 
 def event_filter_batch_pallas(scalars, tracks, n_tracks, thresholds, *,
                               var_idx: tuple, calib_iters: int,
                               block_e: int = 128, block_t: int = 512,
-                              interpret: bool = True):
+                              interpret: bool | None = None):
     """Batched variant: thresholds (4, K) f32 = per-query
     [scalar_thresh; pt_thresh; min_count; sum_cap] columns, var_idx a
-    static K-tuple of scalar indices.  Returns (mask (N, K), var (N,))."""
+    static K-tuple of scalar indices.  Returns (mask (N, K), var (N,)).
+    ``interpret=None`` auto-detects (compiled on TPU/GPU, interpreter on
+    CPU — see ``repro.kernels.default_interpret``)."""
+    _validate(scalars, tracks, n_tracks, thresholds, batch=True,
+              block_e=block_e, block_t=block_t)
     n, s = scalars.shape
     _, t, v = tracks.shape
     k = thresholds.shape[1]
@@ -128,7 +194,8 @@ def event_filter_batch_pallas(scalars, tracks, n_tracks, thresholds, *,
     grid = (pl.cdiv(n, block_e), pl.cdiv(t, block_t))
 
     kernel = functools.partial(_batch_kernel, calib_iters=calib_iters,
-                               var_idx=tuple(var_idx), block_t=block_t)
+                               var_idx=tuple(var_idx), block_e=block_e,
+                               block_t=block_t, n_total=n, t_total=t)
     mask, var, _, _ = pl.pallas_call(
         kernel,
         grid=grid,
@@ -150,7 +217,7 @@ def event_filter_batch_pallas(scalars, tracks, n_tracks, thresholds, *,
             jax.ShapeDtypeStruct((n, k), jnp.float32),
             jax.ShapeDtypeStruct((n,), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(scalars, tracks, n_tracks[:, None], thresholds)
     return mask, var
 
@@ -158,10 +225,13 @@ def event_filter_batch_pallas(scalars, tracks, n_tracks, thresholds, *,
 def event_filter_pallas(scalars, tracks, n_tracks, thresholds, *,
                         var_idx: int, calib_iters: int,
                         block_e: int = 128, block_t: int = 512,
-                        interpret: bool = True):
+                        interpret: bool | None = None):
     """scalars (N,S) f32, tracks (N,T,V) f32, n_tracks (N,) i32,
     thresholds (4,) f32 = [scalar_thresh, pt_thresh, min_count, sum_cap].
-    Returns (mask (N,), var (N,))."""
+    Returns (mask (N,), var (N,)).  ``interpret=None`` auto-detects
+    (compiled on TPU/GPU, interpreter on CPU)."""
+    _validate(scalars, tracks, n_tracks, thresholds, batch=False,
+              block_e=block_e, block_t=block_t)
     n, s = scalars.shape
     _, t, v = tracks.shape
     block_e = min(block_e, n)
@@ -169,7 +239,8 @@ def event_filter_pallas(scalars, tracks, n_tracks, thresholds, *,
     grid = (pl.cdiv(n, block_e), pl.cdiv(t, block_t))
 
     kernel = functools.partial(_kernel, calib_iters=calib_iters,
-                               var_idx=var_idx, block_t=block_t)
+                               var_idx=var_idx, block_e=block_e,
+                               block_t=block_t, n_total=n, t_total=t)
     mask, var, _, _ = pl.pallas_call(
         kernel,
         grid=grid,
@@ -191,6 +262,6 @@ def event_filter_pallas(scalars, tracks, n_tracks, thresholds, *,
             jax.ShapeDtypeStruct((n,), jnp.float32),
             jax.ShapeDtypeStruct((n,), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(scalars, tracks, n_tracks[:, None], thresholds)
     return mask, var

@@ -127,14 +127,22 @@ def match_epilogue(target, schema) -> Optional[dict]:
 
 
 @functools.partial(jax.jit, static_argnames=("var_idx", "calib_iters",
-                                             "interpret", "use_pallas"))
+                                             "interpret", "use_pallas",
+                                             "block_e", "block_t"))
 def event_filter(scalars, tracks, n_tracks, thresholds, *, var_idx: int,
-                 calib_iters: int, interpret: bool = True,
-                 use_pallas: bool = True):
+                 calib_iters: int, interpret: Optional[bool] = None,
+                 use_pallas: bool = True, block_e: int = 128,
+                 block_t: int = 512):
+    """Jitted single-query kernel dispatch: the Pallas path
+    (``use_pallas=True``) or the jnp reference.  ``interpret=None``
+    auto-detects (compiled on TPU/GPU, interpreter on CPU); ``block_e`` /
+    ``block_t`` are the kernel's static block shapes (see
+    :func:`autotune_block_shapes` in ``tune.py`` for the sweep)."""
     if use_pallas:
         return event_filter_pallas(
             scalars, tracks, n_tracks, thresholds, var_idx=var_idx,
-            calib_iters=calib_iters, interpret=interpret)
+            calib_iters=calib_iters, interpret=interpret,
+            block_e=block_e, block_t=block_t)
     return event_filter_ref(
         scalars, tracks, n_tracks, var_idx=var_idx,
         scalar_thresh=thresholds[0], pt_thresh=thresholds[1],
@@ -143,7 +151,7 @@ def event_filter(scalars, tracks, n_tracks, thresholds, *, var_idx: int,
 
 
 def filter_and_summarize(expr: str, schema, batch, *, calib_iters: int = 0,
-                         interpret: bool = True):
+                         interpret: Optional[bool] = None):
     """(mask, var) for an arbitrary expression; Pallas path when canonical.
 
     NOTE: when the kernel handles calibration the caller must pass the RAW
@@ -166,21 +174,28 @@ def filter_and_summarize(expr: str, schema, batch, *, calib_iters: int = 0,
 
 
 @functools.partial(jax.jit, static_argnames=("var_idx", "calib_iters",
-                                             "interpret", "use_pallas"))
+                                             "interpret", "use_pallas",
+                                             "block_e", "block_t"))
 def event_filter_batch(scalars, tracks, n_tracks, thresholds, *,
                        var_idx: Tuple[int, ...], calib_iters: int,
-                       interpret: bool = True, use_pallas: bool = True):
+                       interpret: Optional[bool] = None,
+                       use_pallas: bool = True, block_e: int = 128,
+                       block_t: int = 512):
+    """Jitted K-query kernel dispatch (see :func:`event_filter` for the
+    flag semantics; thresholds are the ``(4, K)`` layout from
+    :func:`batch_kernel_params`)."""
     if use_pallas:
         return event_filter_batch_pallas(
             scalars, tracks, n_tracks, thresholds, var_idx=var_idx,
-            calib_iters=calib_iters, interpret=interpret)
+            calib_iters=calib_iters, interpret=interpret,
+            block_e=block_e, block_t=block_t)
     return event_filter_batch_ref(
         scalars, tracks, n_tracks, thresholds, var_idx=var_idx,
         calib_iters=calib_iters)
 
 
 def filter_and_summarize_batch(exprs, schema, batch, *, calib_iters: int = 0,
-                               interpret: bool = True):
+                               interpret: Optional[bool] = None):
     """K-query shared scan: (masks (K, N), var (N,)).
 
     The fused batched kernel runs when EVERY expression matches the

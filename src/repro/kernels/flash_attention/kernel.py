@@ -21,6 +21,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import resolve_interpret
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
@@ -81,7 +83,7 @@ def flash_attention(q, k, v, *, causal: bool = True,
                     scale: Optional[float] = None,
                     logit_cap: Optional[float] = None,
                     block_q: int = 128, block_k: int = 128,
-                    interpret: bool = True):
+                    interpret: bool | None = None):
     """Entry point (see flash_attention_pallas docstring)."""
     b, sq, h, d = q.shape
     _, sk, kh, _ = k.shape
@@ -119,6 +121,6 @@ def flash_attention(q, k, v, *, causal: bool = True,
             pltpu.VMEM((block_q,), jnp.float32),
             pltpu.VMEM((block_q, d), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(qt, kt, vt)
     return out.transpose(0, 2, 1, 3)

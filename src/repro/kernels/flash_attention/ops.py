@@ -13,7 +13,7 @@ from repro.kernels.flash_attention.kernel import flash_attention as _fa
     "interpret"))
 def flash_attention(q, k, v, *, causal=True, window=None, scale=None,
                     logit_cap=None, block_q=128, block_k=128,
-                    interpret=True):
+                    interpret=None):
     return _fa(q, k, v, causal=causal, window=window, scale=scale,
                logit_cap=logit_cap, block_q=block_q, block_k=block_k,
                interpret=interpret)

@@ -16,6 +16,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import resolve_interpret
 from jax.experimental.pallas import tpu as pltpu
 
 NEG = -1e30
@@ -66,7 +68,7 @@ def _kernel(q_ref, k_ref, v_ref, fq_ref, fk_ref, li_ref, o_ref,
 
 
 def mlstm_pallas(q, k, v, log_i, log_f, *, block_q: int = 128,
-                 block_k: int = 128, interpret: bool = True):
+                 block_k: int = 128, interpret: bool | None = None):
     """q,k,v: (B,S,H,D); log_i/log_f: (B,S,H) f32 -> (B,S,H,D)."""
     b, s, h, d = q.shape
     scale = d ** -0.5
@@ -102,6 +104,6 @@ def mlstm_pallas(q, k, v, log_i, log_f, *, block_q: int = 128,
             pltpu.VMEM((block_q, d), jnp.float32),
             pltpu.VMEM((block_q,), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(qt, kt, vt, Ft, Ft, lit)  # F streamed twice: q-tile view + k-tile view
     return out.transpose(0, 2, 1, 3)

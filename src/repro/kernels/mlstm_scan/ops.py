@@ -9,5 +9,5 @@ from repro.kernels.mlstm_scan.kernel import mlstm_pallas
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def mlstm(q, k, v, log_i, log_f, *, interpret: bool = True):
+def mlstm(q, k, v, log_i, log_f, *, interpret: bool | None = None):
     return mlstm_pallas(q, k, v, log_i, log_f, interpret=interpret)

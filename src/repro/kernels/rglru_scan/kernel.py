@@ -16,6 +16,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import resolve_interpret
 from jax.experimental.pallas import tpu as pltpu
 
 
@@ -39,7 +41,7 @@ def _kernel(a_ref, b_ref, h0_ref, y_ref, h_scr, *, block_s: int):
 
 def rglru_scan_pallas(a, b, h0=None, *, block_b: int = 8,
                       block_s: int = 256, block_w: int = 512,
-                      interpret: bool = True):
+                      interpret: bool | None = None):
     """a, b: (B,S,W) f32; h0: (B,W) f32 or None.
     Returns (h (B,S,W), h_last (B,W))."""
     bsz, s, w = a.shape
@@ -65,6 +67,6 @@ def rglru_scan_pallas(a, b, h0=None, *, block_b: int = 8,
                                lambda bb, wi, si: (bb, si, wi)),
         out_shape=jax.ShapeDtypeStruct((bsz, s, w), jnp.float32),
         scratch_shapes=[pltpu.VMEM((block_b, block_w), jnp.float32)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(a.astype(jnp.float32), b.astype(jnp.float32), h0.astype(jnp.float32))
     return y, y[:, -1, :]

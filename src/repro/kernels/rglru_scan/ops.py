@@ -12,7 +12,7 @@ from repro.models.rglru import rglru_gates
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def rglru_scan(p: dict, x: jax.Array, h0=None, *, interpret: bool = True):
+def rglru_scan(p: dict, x: jax.Array, h0=None, *, interpret: bool | None = None):
     """Drop-in replacement for models.rglru.rglru_scan (kernel-backed)."""
     a, bx = rglru_gates(p, x)
     y, h_last = rglru_scan_pallas(a, bx, h0, interpret=interpret)

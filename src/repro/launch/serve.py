@@ -104,6 +104,39 @@ def _dump_metrics(snapshot, path):
     print(f"  metrics: {len(snapshot.metrics)} series -> {path}")
 
 
+def _backend_kwargs(args):
+    """Collect the SPMD performance knobs from the CLI into the
+    ``backend_kwargs`` dict QueryService/Fleet forward to the backend
+    constructor.  Returns None for the simulated backend — the knobs are
+    scan-path concepts and passing them there should fail loudly, not
+    silently no-op."""
+    if args.backend != "spmd":
+        for flag, name in ((args.use_pallas, "--use-pallas"),
+                           (args.chunk_events, "--chunk-events"),
+                           (args.adaptive_chunks, "--adaptive-chunks"),
+                           (args.mesh_devices, "--mesh-devices"),
+                           (args.autotune, "--autotune")):
+            if flag:
+                raise SystemExit(
+                    f"{name} requires --backend spmd (the simulation "
+                    "has no kernel scan path)")
+        return None
+    kw = {}
+    if args.use_pallas:
+        kw["use_pallas"] = True
+    if args.interpret != "auto":
+        kw["interpret"] = args.interpret == "interpret"
+    if args.chunk_events is not None:
+        kw["chunk_events"] = args.chunk_events
+    if args.adaptive_chunks:
+        kw["adaptive_chunks"] = True
+    if args.mesh_devices is not None:
+        kw["mesh_devices"] = args.mesh_devices
+    if args.autotune:
+        kw["autotune"] = True
+    return kw or None
+
+
 def serve_fleet(args):
     """Fleet serving mode: the multi-tenant workload of ``serve_queries``
     replayed round-robin over ``--fleet N`` coherence-fabric front-ends.
@@ -135,7 +168,8 @@ def serve_fleet(args):
                         events_per_brick=cfg.events_per_brick,
                         replication=cfg.replication_factor, seed=0)
     fleet = Fleet(store, args.fleet, bus=bus, registry=FragmentRegistry(),
-                  backend=args.backend, obs=want_obs,
+                  backend=args.backend, backend_kwargs=_backend_kwargs(args),
+                  obs=want_obs,
                   policy=args.policy, gossip_repair=args.policy,
                   single_flight=args.single_flight,
                   flight=recorder if recorder is not None else False)
@@ -261,7 +295,9 @@ def serve_queries(args):
         catalog = MetadataCatalog(store.n_nodes)
         policy = FailurePolicy(catalog, store, obs=obs)
     svc = QueryService(store, catalog, scheduler=sched, window_controller=wc,
-                       backend=args.backend, obs=obs, policy=policy,
+                       backend=args.backend,
+                       backend_kwargs=_backend_kwargs(args),
+                       obs=obs, policy=policy,
                        **({"clock": clock} if clock else {}))
     # multi-tenant workload: a few hot queries repeated across tenants
     # (the interactive-analysis regime) plus per-tenant near-duplicate
@@ -375,6 +411,32 @@ def main(argv=None):
                          "chunked streaming shard scan (wall-clock "
                          "latencies; --adaptive-window then observes "
                          "real scan times)")
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="spmd backend: run in-family plan targets "
+                         "through the fused event_filter Pallas kernel "
+                         "(mixed windows split per target — see "
+                         "docs/backends.md, Performance tuning)")
+    ap.add_argument("--interpret", choices=("auto", "interpret",
+                                            "compiled"), default="auto",
+                    help="spmd backend: Pallas execution mode; auto "
+                         "(default) compiles on TPU/GPU and falls back "
+                         "to the interpreter on CPU")
+    ap.add_argument("--chunk-events", type=int, default=None, metavar="N",
+                    help="spmd backend: events per scan chunk "
+                         "(= streamed partial granularity)")
+    ap.add_argument("--adaptive-chunks", action="store_true",
+                    help="spmd backend: size chunks from measured scan "
+                         "rate (EWMA ChunkController) instead of a "
+                         "fixed --chunk-events")
+    ap.add_argument("--mesh-devices", type=int, default=None, metavar="D",
+                    help="spmd backend: shard each brick's chunk groups "
+                         "over a D-device scan mesh (shard_map when D "
+                         "jax devices exist, lockstep emulation "
+                         "otherwise)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="spmd backend: sweep event_filter (block_e, "
+                         "block_t) per chunk shape and use the cached "
+                         "winner")
     ap.add_argument("--fleet", type=int, default=1,
                     help="query mode: number of coherence-fabric "
                          "front-ends (1 = single QueryService)")

@@ -267,6 +267,13 @@ class QueryService:
     frontend_id:
         Stable identity of this front-end inside a fleet (fabric gossip
         and stream fan-out address it by this id).
+    backend_kwargs:
+        Extra constructor kwargs for a string-selected backend — the
+        SPMD performance knobs (``use_pallas``, ``interpret``,
+        ``chunk_events``, ``adaptive_chunks``, ``mesh_devices``,
+        ``autotune``, ``double_buffer``; see ``docs/backends.md``,
+        "Performance tuning") or simulation extras.  Rejected alongside
+        a pre-built backend instance, same as ``time_model``.
     obs:
         Optional :class:`repro.obs.Observability` bundle.  When present
         the service traces every ticket (submit/window/plan/dispatch/
@@ -301,7 +308,8 @@ class QueryService:
                  frontend_id: str = "fe0",
                  obs=None,
                  policy=None,
-                 leases=None):
+                 leases=None,
+                 backend_kwargs: Optional[Dict[str, object]] = None):
         self.store = store
         if backend is not None and not isinstance(backend, str):
             # instance backend: it owns a catalogue/store pair already
@@ -323,11 +331,19 @@ class QueryService:
                     f"{kind!r} backend would silently ignore them")
             kwargs = ({"time_model": time_model, "node_speed": node_speed}
                       if kind == "sim" else {})
+            # performance knobs (use_pallas/interpret/chunk_events/
+            # mesh_devices/autotune/...) pass straight through to the
+            # chosen backend's constructor
+            kwargs.update(backend_kwargs or {})
             backend = backend_lib.make_backend(kind, self.catalog, store,
                                                **kwargs)
         elif time_model is not None or node_speed is not None:
             raise ValueError(
                 "pass time_model/node_speed when constructing the "
+                "backend, not alongside a pre-built instance")
+        elif backend_kwargs:
+            raise ValueError(
+                "pass backend tuning kwargs when constructing the "
                 "backend, not alongside a pre-built instance")
         self.backend = backend
         # back-compat handle for simulation-tuning callers (None on

@@ -9,8 +9,8 @@ import pytest
 from repro.configs.geps_events import reduced
 from repro.core import events as ev
 from repro.core import merge as merge_lib
-from repro.core.backend import (SimulatedBackend, SpmdBackend,
-                                make_backend)
+from repro.core.backend import (ChunkController, SimulatedBackend,
+                                SpmdBackend, make_backend)
 from repro.core.brick import create_store
 from repro.core.catalog import DONE, MetadataCatalog
 from repro.fabric import SharedCacheTier, adaptive_fanout, rounds_bound
@@ -236,6 +236,282 @@ def test_spmd_pallas_falls_back_on_out_of_family_target():
                            adaptive_packets=False)
     want, _, _ = run_window(sim, store, ["pt_lead > 60 || n_tracks >= 8"])
     assert merge_lib.results_identical(merged[0], want[0])
+
+
+# ----------------------- mixed-window splitting ------------------------- #
+MIXED = [POOL[0], POOL[3], POOL[4], POOL[5]]  # 2 in-family, 2 out
+
+
+def test_spmd_mixed_window_splits_kernel_and_jnp():
+    """A window with BOTH in-family and out-of-family targets no longer
+    falls back wholesale to jnp: the in-family targets run as a kernel
+    sub-batch (kernel_events > 0) and everything stays bit-identical to
+    the pure-jnp scan — finals AND per-packet partials."""
+    store = make_store(n_events=96)
+    plain = SpmdBackend(MetadataCatalog(store.n_nodes), store,
+                        chunk_events=32)
+    fused = SpmdBackend(MetadataCatalog(store.n_nodes), store,
+                        chunk_events=32, use_pallas=True)
+    plan = plan_window(MIXED)
+    split = fused._split_plan(plan)
+    assert split.any_kernel and not split.full_kernel
+    assert fused._fuse_plan(plan) is None  # not FULLY fused...
+    out_plain = run_window(plain, store, MIXED, calib=2)
+    out_fused = run_window(fused, store, MIXED, calib=2)
+    assert_window_equivalent(out_plain, out_fused)
+    # ...yet the kernel sub-batch actually ran (the acceptance signal)
+    assert out_fused[1].kernel_events == store.n_events
+    assert out_plain[1].kernel_events == 0
+
+
+def test_mixed_split_bit_identity_property():
+    """Property: for ANY subset of the pool (some targets epilogue-
+    eligible, some not) and any chunking, the kernel/jnp split returns
+    bit-identical finals and prefix snapshots vs the pure-jnp path."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    store = make_store(n_events=96)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 999), k=st.integers(1, 5),
+           chunk=st.sampled_from([16, 48, 96]), calib=st.sampled_from([0, 2]))
+    def check(seed, k, chunk, calib):
+        rng = np.random.default_rng(seed)
+        exprs = [POOL[i] for i in rng.choice(len(POOL), size=k,
+                                             replace=False)]
+        plain = SpmdBackend(MetadataCatalog(store.n_nodes), store,
+                            chunk_events=chunk)
+        fused = SpmdBackend(MetadataCatalog(store.n_nodes), store,
+                            chunk_events=chunk, use_pallas=True)
+        out_plain = run_window(plain, store, exprs, calib=calib)
+        out_fused = run_window(fused, store, exprs, calib=calib)
+        assert_window_equivalent(out_plain, out_fused)
+        split = fused._split_plan(plan_window(exprs))
+        assert out_fused[1].kernel_events == (
+            store.n_events if split.any_kernel else 0)
+        # prefix snapshots: accumulate both partial streams in lockstep
+        for col in range(k):
+            acc_p, acc_f = (merge_lib.MergeAccumulator(),
+                            merge_lib.MergeAccumulator())
+            for pp, pf in zip(out_plain[2], out_fused[2]):
+                acc_p.add(pp.partials[col], brick_id=pp.brick_id)
+                acc_f.add(pf.partials[col], brick_id=pf.brick_id)
+                assert merge_lib.results_identical(acc_p.snapshot(),
+                                                   acc_f.snapshot())
+
+    check()
+
+
+# ----------------------- adaptive chunk sizing -------------------------- #
+def test_chunk_controller_converges_to_target():
+    ctl = ChunkController(initial=64, min_chunk=8, max_chunk=4096,
+                          target_s=0.01, alpha=0.5, hysteresis=0.0)
+    assert ctl.chunk() == 64
+    for _ in range(32):
+        ctl.observe(events=64, wall_s=0.001)  # steady 64k events/s
+    # rate EWMA converged; proposal = rate * target_s = 640
+    assert abs(ctl.scan_rate - 64_000) / 64_000 < 1e-6
+    assert ctl.chunk() == 640
+    # clamping: a crawling scan floors at min_chunk
+    for _ in range(64):
+        ctl.observe(events=8, wall_s=10.0)
+    assert ctl.chunk() == 8
+
+
+def test_chunk_controller_hysteresis_dead_band():
+    ctl = ChunkController(initial=100, target_s=1.0, alpha=1.0,
+                          hysteresis=0.25)
+    ctl.observe(events=100, wall_s=1.0)   # rate 100 -> proposal 100
+    assert ctl.chunk() == 100
+    ctl.observe(events=110, wall_s=1.0)   # +10% < 25% dead-band: held
+    assert ctl.chunk() == 100
+    ctl.observe(events=200, wall_s=1.0)   # +100%: moves
+    assert ctl.chunk() == 200
+    # ignores degenerate observations
+    ctl.observe(events=0, wall_s=1.0)
+    ctl.observe(events=10, wall_s=0.0)
+    assert ctl.chunk() == 200
+
+
+def test_chunk_controller_validation():
+    with pytest.raises(ValueError):
+        ChunkController(alpha=0.0)
+    with pytest.raises(ValueError):
+        ChunkController(min_chunk=0)
+    with pytest.raises(ValueError):
+        ChunkController(min_chunk=64, max_chunk=8)
+    with pytest.raises(ValueError):
+        ChunkController(target_s=0.0)
+    with pytest.raises(ValueError):
+        ChunkController(hysteresis=-0.1)
+
+
+class TickClock:
+    """Deterministic injectable clock: advances a fixed dt per call, so
+    measured 'walls' — and everything derived from them, like adaptive
+    chunk boundaries — replay identically run over run."""
+
+    def __init__(self, dt=0.003):
+        self.t, self.dt = 0.0, dt
+
+    def __call__(self):
+        self.t += self.dt
+        return self.t
+
+
+def test_spmd_adaptive_chunks_resize_and_stay_correct():
+    """Adaptive chunks change packetization, not answers: with the same
+    injected clock, the jnp and kernel-split scans pick the SAME chunk
+    boundaries and stay bit-identical; against a sim reference the exact
+    counts match and sum_var agrees to float regrouping."""
+    store = make_store()
+
+    def adaptive(**kw):
+        return SpmdBackend(MetadataCatalog(store.n_nodes), store,
+                           chunk_events=8, adaptive_chunks=True,
+                           chunk_target_s=0.05, clock=TickClock(), **kw)
+
+    out_jnp = run_window(adaptive(), store, POOL[:3], calib=2)
+    out_ker = run_window(adaptive(use_pallas=True), store, POOL[:3],
+                         calib=2)
+    assert_window_equivalent(out_jnp, out_ker)
+    partials = out_jnp[2]
+    # the controller actually moved chunk sizes off the initial value
+    assert len({p.size for p in partials}) > 1
+    # exact-count agreement with the simulated reference (sum_var may
+    # regroup: adaptive chunk boundaries differ from sim packets)
+    sim = SimulatedBackend(MetadataCatalog(store.n_nodes), store,
+                           adaptive_packets=False)
+    want, _, _ = run_window(sim, store, POOL[:3], calib=2)
+    for a, b in zip(want, out_jnp[0]):
+        assert a.n_selected == b.n_selected
+        assert a.n_processed == b.n_processed
+        assert np.allclose(a.sum_var, b.sum_var)
+        assert np.array_equal(a.hist, b.hist)
+
+
+def test_spmd_adaptive_chunks_deterministic_flight_log(tmp_path):
+    """Adaptive chunk sizing must not break the flight recorder's
+    byte-identical replayability: with the backend clock injected, two
+    identical runs produce identical chunk boundaries, identical stream
+    snapshots, and byte-identical flight logs."""
+    from repro.fabric.fleet import Fleet
+
+    def one_run(path):
+        store = make_store()
+        fleet = Fleet(store, 2, backend="spmd", obs=True, flight=True,
+                      backend_kwargs=dict(chunk_events=8,
+                                          adaptive_chunks=True,
+                                          chunk_target_s=0.05,
+                                          clock=TickClock()))
+        for i, e in enumerate(POOL[:3]):
+            fleet.submit(e, tenant=f"t{i}", stream=True)
+        fleet.drain()
+        fleet.save_flight(path)
+        fleet.close()
+        return path.read_bytes()
+
+    a = one_run(tmp_path / "a.jsonl")
+    b = one_run(tmp_path / "b.jsonl")
+    assert a == b
+
+
+# ----------------------- mesh-sharded chunks ---------------------------- #
+def test_spmd_mesh_lockstep_emulation_bit_identical():
+    """mesh_devices > jax devices: the mesh is emulated with lockstep
+    critical-path accounting — results and partials stay bit-identical
+    to the single-device scan, stamps ride the lockstep clock."""
+    store = make_store(n_events=96)
+    base = SpmdBackend(MetadataCatalog(store.n_nodes), store,
+                       chunk_events=16, use_pallas=True)
+    mesh = SpmdBackend(MetadataCatalog(store.n_nodes), store,
+                       chunk_events=16, use_pallas=True, mesh_devices=4)
+    assert not mesh._mesh_is_real()
+    out_base = run_window(base, store, POOL, calib=2)
+    out_mesh = run_window(mesh, store, POOL, calib=2)
+    assert_window_equivalent(out_base, out_mesh)
+    stats, partials = out_mesh[1], out_mesh[2]
+    # lockstep makespan is the sum of per-group maxima: no larger than
+    # the serial sum of walls, no smaller than the largest single wall
+    serial = sum(t.wall_s for t in stats.packet_telemetry)
+    assert max(t.wall_s for t in stats.packet_telemetry) \
+        <= stats.makespan_s <= serial + 1e-9
+    times = [p.t_virtual for p in partials]
+    assert times == sorted(times)
+
+
+def test_spmd_real_mesh_shard_map_bit_identical():
+    """With enough physical devices, mesh groups execute as ONE
+    shard_map call over stacked padded sub-chunks — and partials stay
+    bit-identical to the sequential scan (subprocess: jax pins its
+    device count at first init)."""
+    from tests.test_multidevice import run_with_devices
+    run_with_devices("""
+        from tests.test_backend import (make_store, run_window, POOL,
+                                        assert_window_equivalent)
+        from repro.core.backend import SpmdBackend
+        from repro.core.catalog import MetadataCatalog
+        assert len(jax.devices()) == 2
+        store = make_store(n_events=96)
+        base = SpmdBackend(MetadataCatalog(store.n_nodes), store,
+                           chunk_events=16, use_pallas=True)
+        mesh = SpmdBackend(MetadataCatalog(store.n_nodes), store,
+                           chunk_events=16, use_pallas=True,
+                           mesh_devices=2)
+        out_base = run_window(base, store, POOL, calib=2)
+        out_mesh = run_window(mesh, store, POOL, calib=2)
+        assert mesh._mesh_is_real()
+        assert_window_equivalent(out_base, out_mesh)
+        assert out_mesh[1].kernel_events == store.n_events
+        print("OK")
+    """, n=2)
+
+
+def test_spmd_double_buffer_preserves_order_and_results():
+    store = make_store(n_events=96)
+    on = SpmdBackend(MetadataCatalog(store.n_nodes), store,
+                     chunk_events=16, use_pallas=True, double_buffer=True)
+    off = SpmdBackend(MetadataCatalog(store.n_nodes), store,
+                      chunk_events=16, use_pallas=True,
+                      double_buffer=False)
+    assert_window_equivalent(run_window(on, store, MIXED, calib=2),
+                             run_window(off, store, MIXED, calib=2))
+
+
+def test_spmd_autotune_uses_cached_winner():
+    from repro.kernels.event_filter import tune as ef_tune
+    ef_tune.clear_cache()
+    store = make_store(n_events=96)
+    tuned = SpmdBackend(MetadataCatalog(store.n_nodes), store,
+                        chunk_events=32, use_pallas=True, autotune=True)
+    plain = SpmdBackend(MetadataCatalog(store.n_nodes), store,
+                        chunk_events=32, use_pallas=True)
+    out_tuned = run_window(tuned, store, POOL[:3], calib=2)
+    out_plain = run_window(plain, store, POOL[:3], calib=2)
+    assert_window_equivalent(out_plain, out_tuned)
+    assert tuned.last_autotune is not None
+    assert tuned.last_autotune.speedup_vs_default >= 1.0
+    assert len(ef_tune.cached_shapes()) == 1
+    # a second window of the same shape class pays no new sweep
+    run_window(tuned, store, POOL[:3], calib=2)
+    assert len(ef_tune.cached_shapes()) == 1
+
+
+def test_service_backend_kwargs_thread_through():
+    store = make_store()
+    svc = QueryService(store, backend="spmd",
+                       backend_kwargs=dict(use_pallas=True,
+                                           chunk_events=24))
+    assert svc.backend.use_pallas and svc.backend.chunk_events == 24
+    tid = svc.submit(POOL[0])
+    svc.step()
+    assert svc.result(tid).status == "SERVED"
+    svc.close()
+    spmd = SpmdBackend(MetadataCatalog(store.n_nodes), store)
+    with pytest.raises(ValueError, match="pre-built instance"):
+        QueryService(store, backend=spmd,
+                     backend_kwargs=dict(chunk_events=8))
 
 
 # ----------------------- service integration ---------------------------- #

@@ -103,6 +103,104 @@ def test_event_filter_no_sum_cap():
     np.testing.assert_array_equal(np.asarray(mask), np.asarray(mask_r))
 
 
+def _ef_operands(n=64, t=32, v=4, s=8):
+    scalars = jnp.asarray(np.abs(RNG.normal(size=(n, s)) * 50), jnp.float32)
+    tracks = jnp.asarray(RNG.normal(size=(n, t, v)), jnp.float32)
+    n_tracks = jnp.asarray(RNG.integers(1, t + 1, size=(n,)), jnp.int32)
+    return scalars, tracks, n_tracks
+
+
+def test_event_filter_rejects_zero_sized_inputs():
+    """Empty operands must fail with a clear ValueError at validation,
+    not a Pallas trace error from a zero-width grid."""
+    from repro.kernels.event_filter.kernel import event_filter_batch_pallas
+    scalars, tracks, n_tracks = _ef_operands()
+    th = jnp.array([[40.0], [15.0], [2.0], [-1.0]], jnp.float32)
+    with pytest.raises(ValueError, match="zero-width grid"):
+        event_filter_pallas(scalars[:0], tracks[:0], n_tracks[:0],
+                            jnp.array([40.0, 15.0, 2.0, -1.0]),
+                            var_idx=0, calib_iters=0)
+    with pytest.raises(ValueError, match="zero-width grid"):
+        event_filter_batch_pallas(scalars, tracks[:, :0], n_tracks, th,
+                                  var_idx=(0,), calib_iters=0)
+    with pytest.raises(ValueError, match="thresholds"):
+        event_filter_batch_pallas(scalars, tracks, n_tracks, th[:, :0],
+                                  var_idx=(), calib_iters=0)
+
+
+def test_event_filter_validates_shapes_and_blocks():
+    from repro.kernels.event_filter.kernel import event_filter_batch_pallas
+    scalars, tracks, n_tracks = _ef_operands()
+    th1 = jnp.array([40.0, 15.0, 2.0, -1.0], jnp.float32)
+    thb = jnp.array([[40.0], [15.0], [2.0], [-1.0]], jnp.float32)
+    with pytest.raises(ValueError, match="event axis"):
+        event_filter_pallas(scalars[:32], tracks, n_tracks, th1,
+                            var_idx=0, calib_iters=0)
+    with pytest.raises(ValueError, match="block"):
+        event_filter_pallas(scalars, tracks, n_tracks, th1,
+                            var_idx=0, calib_iters=0, block_e=0)
+    with pytest.raises(ValueError, match="thresholds"):
+        event_filter_batch_pallas(scalars, tracks, n_tracks, th1,
+                                  var_idx=(0,), calib_iters=0)
+
+
+def test_event_filter_tail_masking_vs_padded_duplicate():
+    """The tail tile is masked explicitly: appending garbage rows past
+    the true event count must not change the valid rows' outputs."""
+    n, t = 100, 70    # neither a multiple of its block
+    scalars, tracks, n_tracks = _ef_operands(n=n, t=t)
+    th = jnp.array([40.0, 15.0, 2.0, 800.0], jnp.float32)
+    mask, var = event_filter_pallas(scalars, tracks, n_tracks, th,
+                                    var_idx=0, calib_iters=2,
+                                    block_e=64, block_t=32)
+    mask_r, var_r = event_filter_ref(
+        scalars, tracks, n_tracks, var_idx=0, scalar_thresh=40.0,
+        pt_thresh=15.0, min_count=2.0, sum_cap=800.0, calib_iters=2)
+    np.testing.assert_array_equal(np.asarray(mask), np.asarray(mask_r))
+    np.testing.assert_allclose(np.asarray(var), np.asarray(var_r))
+
+
+def test_default_interpret_env_override(monkeypatch):
+    import repro.kernels as K
+    monkeypatch.setenv(K.INTERPRET_ENV, "interpret")
+    assert K.default_interpret() is True
+    assert K.resolve_interpret(None) is True
+    monkeypatch.setenv(K.INTERPRET_ENV, "compiled")
+    assert K.default_interpret() is False
+    assert K.resolve_interpret(None) is False
+    # explicit flags always win over the environment
+    assert K.resolve_interpret(True) is True
+    monkeypatch.setenv(K.INTERPRET_ENV, "auto")
+    # auto = backend probe (CPU test runners -> interpreter)
+    assert K.default_interpret() == (jax.default_backend()
+                                     not in K.COMPILED_BACKENDS)
+    monkeypatch.setenv(K.INTERPRET_ENV, "bogus")
+    with pytest.raises(ValueError, match="REPRO_INTERPRET"):
+        K.default_interpret()
+
+
+def test_autotune_block_shapes_caches_and_beats_default():
+    from repro.kernels.event_filter import tune as ef_tune
+    scalars, tracks, n_tracks = _ef_operands(n=96, t=48)
+    th = jnp.array([[40.0, -jnp.inf], [15.0, 15.0], [2.0, 2.0],
+                    [-1.0, -1.0]], jnp.float32)
+    cache = {}
+    tuned = ef_tune.autotune_block_shapes(
+        scalars, tracks, n_tracks, th, var_idx=(0, 0), calib_iters=2,
+        repeats=2, cache=cache)
+    assert tuned.speedup_vs_default >= 1.0
+    assert tuned.roofline["gbytes_per_s"] > 0
+    # candidates that clamp to the same effective shape timed only once
+    effective = {(min(be, 96), min(bt, 48))
+                 for be, bt in ef_tune.CANDIDATES}
+    assert len(tuned.measurements) == len(effective)
+    # second call with the same shape class is a pure cache hit
+    again = ef_tune.autotune_block_shapes(
+        scalars, tracks, n_tracks, th, var_idx=(0, 0), calib_iters=2,
+        repeats=2, cache=cache)
+    assert again is tuned and len(cache) == 1
+
+
 # ------------------------------ rglru scan ------------------------------- #
 @pytest.mark.parametrize("b,s,w,bb,bs,bw", [
     (2, 64, 32, 2, 16, 32),
